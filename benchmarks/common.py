@@ -1,0 +1,93 @@
+"""Shared benchmark harness: build banks, run engine presets, cache compiles."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import engine, protocol, workloads
+from repro.core.netmodel import make_net_params
+
+RESULTS = pathlib.Path("results/bench")
+
+
+def save(name: str, payload) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS / f"{name}.json", "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def run_point(
+    preset: str,
+    bank,
+    terminals: int,
+    rtt_ms=(0.0, 27.0, 73.0, 251.0),
+    jitter_milli: int = 30,
+    horizon_s: float = 10.0,
+    warmup_s: float = 2.0,
+    exec_scale_milli=None,
+    proto_override=None,
+    state=None,
+    tau_true_us=None,
+):
+    proto = proto_override or protocol.PRESETS[preset]
+    net = make_net_params(rtt_ms)
+    cfg = engine.SimConfig(
+        terminals=terminals,
+        max_ops=bank.key.shape[-1],
+        num_ds=len(rtt_ms),
+        bank_txns=bank.key.shape[1],
+        proto=proto,
+        warmup_us=int(warmup_s * 1e6),
+        horizon_us=int(horizon_s * 1e6),
+    )
+    t0 = time.time()
+    st, m = engine.simulate(
+        cfg,
+        bank,
+        tau_true_us if tau_true_us is not None else net.tau_dm,
+        net.tau_ds,
+        jitter_milli=jitter_milli,
+        exec_scale_milli=exec_scale_milli,
+        state=state,
+    )
+    m["wall_s"] = round(time.time() - t0, 1)
+    m["preset"] = preset
+    assert m["noops"] == 0, (preset, m["noops"])
+    return st, m
+
+
+def ycsb_bank(
+    terminals: int,
+    theta: float = 0.9,
+    dist_ratio: float = 0.2,
+    ops: int = 5,
+    rounds: int = 1,
+    records: int = 1_000_000,
+    num_ds: int = 4,
+    seed: int = 0,
+    quro: bool = False,
+):
+    cfg = workloads.YCSBConfig(
+        num_ds=num_ds,
+        records_per_node=records,
+        ops_per_txn=ops,
+        dist_ratio=dist_ratio,
+        theta=theta,
+        rounds=rounds,
+        seed=seed,
+    )
+    bank = workloads.make_ycsb_bank(cfg, terminals, txns_per_terminal=256)
+    if quro:
+        bank = workloads.quro_reorder(bank)
+    return bank
+
+
+def summary_line(tag: str, m: dict) -> str:
+    return (
+        f"{tag:44s} tps={m['throughput_tps']:8.1f} avg={m['avg_latency_ms']:8.1f}ms "
+        f"p99={m['p99_ms']:8.1f}ms abort={m['abort_rate']:.3f} lcs={m['avg_lcs_ms']:7.1f}ms"
+    )

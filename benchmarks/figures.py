@@ -1,0 +1,266 @@
+"""Per-figure benchmark modules (one function per paper table/figure).
+
+Each returns a JSON-serializable payload saved under results/bench/ and prints
+a compact summary. Sizes are scaled to finish on CPU while preserving the
+paper's regimes (1M records/node, the Beijing/Shanghai/Singapore/London RTT
+vector, 5-op YCSB txns, serializable 2PL, 5s lock-wait timeout).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_point, save, summary_line, ycsb_bank
+from repro.core import engine, protocol, workloads
+
+QUICK_T = 48  # default terminals for sweeps
+
+
+def fig1_motivation(quick=True):
+    """Centralized-txn latency vs the *other* data source's RTT (Fig 1b)."""
+    out = []
+    for contention, theta in (("LC", 0.3), ("MC", 0.9)):
+        bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.2, num_ds=2, records=500_000)
+        for tau2 in (10, 25, 50, 75, 100):
+            _, m = run_point("ssp", bank, QUICK_T, rtt_ms=(10.0, float(tau2)), horizon_s=8.0)
+            out.append(
+                dict(contention=contention, tau2_ms=tau2, p50_cen=m["p50_centralized_ms"],
+                     avg=m["avg_latency_ms"], tps=m["throughput_tps"])
+            )
+            print(summary_line(f"fig1 {contention} tau2={tau2}", m))
+    save("fig1_motivation", out)
+    return out
+
+
+def fig5_overall(quick=True):
+    """Throughput vs #terminals, GeoTP vs SSP/SSP-local/ScalarDB (YCSB+TPCC)."""
+    out = []
+    terms = (16, 32, 64) if quick else (16, 32, 64, 128)
+    for T in terms:
+        bank = ycsb_bank(T, theta=0.9, dist_ratio=0.2)
+        for preset in ("ssp", "ssp-local", "scalardb", "geotp"):
+            _, m = run_point(preset, bank, T)
+            out.append(dict(bench="ycsb", terminals=T, **m))
+            print(summary_line(f"fig5 ycsb T={T} {preset}", m))
+    for T in (16, 32):
+        tcfg = workloads.TPCCConfig(num_ds=4, warehouses_per_node=16, dist_ratio=0.2)
+        bank, _ = workloads.make_tpcc_bank(tcfg, T, 256)
+        for preset in ("ssp", "geotp"):
+            _, m = run_point(preset, bank, T)
+            out.append(dict(bench="tpcc", terminals=T, **m))
+            print(summary_line(f"fig5 tpcc T={T} {preset}", m))
+    save("fig5_overall", out)
+    return out
+
+
+def fig7_dist_ratio(quick=True):
+    """Vary distributed-txn ratio under 3 contention levels + QURO/Chiller."""
+    out = []
+    ratios = (0.0, 0.2, 0.6, 1.0) if quick else (0.0, 0.2, 0.4, 0.6, 0.8, 1.0)
+    for level, theta in (("low", 0.3), ("medium", 0.9), ("high", 1.2)):
+        for dr in ratios:
+            bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=dr)
+            bank_q = ycsb_bank(QUICK_T, theta=theta, dist_ratio=dr, quro=True)
+            for preset in ("ssp", "ssp-local", "chiller", "geotp"):
+                _, m = run_point(preset, bank, QUICK_T)
+                out.append(dict(level=level, dist_ratio=dr, **m))
+                print(summary_line(f"fig7 {level} dr={dr} {preset}", m))
+            _, m = run_point("quro", bank_q, QUICK_T)
+            out.append(dict(level=level, dist_ratio=dr, **m))
+            print(summary_line(f"fig7 {level} dr={dr} quro", m))
+    save("fig7_dist_ratio", out)
+    return out
+
+
+def fig8_latency_cdf(quick=True):
+    """Latency CDFs at 60% distributed txns (turning points, p99)."""
+    out = []
+    for level, theta in (("low", 0.3), ("medium", 0.9), ("high", 1.2)):
+        bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.6)
+        for preset in ("ssp", "ssp-local", "geotp"):
+            st, m = run_point(preset, bank, QUICK_T)
+            edges, cdf = engine.latency_cdf(np.asarray(st.hist_all))
+            _, cdf_cen = engine.latency_cdf(np.asarray(st.hist_cen))
+            out.append(
+                dict(level=level, preset=preset, p99=m["p99_ms"], p999=m["p999_ms"],
+                     edges_ms=edges.tolist(), cdf=cdf.tolist(), cdf_centralized=cdf_cen.tolist(),
+                     tps=m["throughput_tps"])
+            )
+            print(summary_line(f"fig8 {level} {preset}", m))
+    save("fig8_latency_cdf", out)
+    return out
+
+
+def fig9_tpcc(quick=True):
+    """TPC-C Payment-only and NewOrder-only (contention contrast)."""
+    out = []
+    for tname, ttype in (("payment", workloads.TPCC_PAYMENT), ("neworder", workloads.TPCC_NEWORDER)):
+        tcfg = workloads.TPCCConfig(
+            num_ds=4, warehouses_per_node=16, dist_ratio=0.2, only_type=ttype
+        )
+        bank, _ = workloads.make_tpcc_bank(tcfg, QUICK_T, 256)
+        for preset in ("ssp", "chiller", "geotp"):
+            _, m = run_point(preset, bank, QUICK_T)
+            out.append(dict(txn=tname, **m))
+            print(summary_line(f"fig9 {tname} {preset}", m))
+    save("fig9_tpcc", out)
+    return out
+
+
+def fig10_network(quick=True):
+    """Sweep mean / std of WAN latency (Fig 10)."""
+    out = []
+    bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.2)
+    for mean in (20, 40, 80):  # std fixed ~ mean/2: lats mean±std
+        rtt = (0.0, mean / 2.0, float(mean), mean * 1.5)
+        for preset in ("ssp", "geotp"):
+            _, m = run_point(preset, bank, QUICK_T, rtt_ms=rtt)
+            out.append(dict(sweep="mean", mean_ms=mean, **m))
+            print(summary_line(f"fig10 mean={mean} {preset}", m))
+    for std in (0, 20, 40):  # mean fixed 40
+        rtt = (0.0, 40.0 - std / 2, 40.0, 40.0 + std)
+        for preset in ("ssp", "geotp"):
+            _, m = run_point(preset, bank, QUICK_T, rtt_ms=rtt)
+            out.append(dict(sweep="std", std_ms=std, **m))
+            print(summary_line(f"fig10 std={std} {preset}", m))
+    save("fig10_network", out)
+    return out
+
+
+def fig11_dynamic(quick=True):
+    """(a) random latencies x N trials; (b) online latency re-configuration."""
+    out = []
+    rng = np.random.default_rng(7)
+    trials = 5 if quick else 20
+    bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.6)
+    for trial in range(trials):
+        rtt = tuple(float(x) for x in [0.0, *sorted(rng.uniform(10, 250, 3))])
+        for preset in ("ssp", "geotp"):
+            _, m = run_point(preset, bank, QUICK_T, rtt_ms=rtt, horizon_s=8.0)
+            out.append(dict(mode="random", trial=trial, rtt=rtt, **m))
+        print(f"fig11 random trial {trial} rtt={tuple(round(r) for r in rtt)} done")
+    # online adaptivity: change tau_true every segment, carry engine state
+    segs = [(0, 27, 73, 251), (0, 120, 40, 200), (0, 27, 200, 80), (0, 60, 60, 251)]
+    import jax.numpy as jnp
+
+    for preset in ("ssp", "geotp"):
+        st = None
+        tps = []
+        for i, rtt in enumerate(segs):
+            tau = jnp.asarray([int(r * 1000) for r in rtt], jnp.int32)
+            if st is None:
+                st, m = run_point(preset, bank, QUICK_T, rtt_ms=tuple(map(float, rtt)),
+                                  horizon_s=8.0, warmup_s=1.0)
+            else:
+                # continue from prior state with new true latencies
+                st = st._replace(tau_true=tau)
+                base_commits = int(st.commits)
+                cfg = engine.SimConfig(
+                    terminals=QUICK_T, max_ops=bank.key.shape[-1], num_ds=4,
+                    bank_txns=bank.key.shape[1], proto=protocol.PRESETS[preset],
+                    warmup_us=0, horizon_us=int(st.now) + 8_000_000,
+                )
+                st = engine._run_jit(cfg, bank, st)
+                m = engine.summarize(cfg, st)
+                m["throughput_tps"] = (int(st.commits) - base_commits) / 8.0
+            tps.append(m["throughput_tps"])
+            out.append(dict(mode="online", preset=preset, segment=i, rtt=rtt,
+                            tps=m["throughput_tps"]))
+        print(f"fig11 online {preset}: tps per segment {['%.0f' % t for t in tps]}")
+    save("fig11_dynamic", out)
+    return out
+
+
+def fig12_ablation(quick=True):
+    """O1 / O1-O2 / O1-O3 vs SSP across skew (the 17.7x figure)."""
+    out = []
+    thetas = (0.1, 0.5, 0.9, 1.1, 1.3) if quick else (0.1, 0.3, 0.5, 0.7, 0.9, 1.1, 1.3, 1.5, 1.7)
+    for theta in thetas:
+        bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.5)
+        for preset in ("ssp", "geotp-o1", "geotp-o1o2", "geotp"):
+            _, m = run_point(preset, bank, QUICK_T)
+            out.append(dict(theta=theta, **m))
+            print(summary_line(f"fig12 theta={theta} {preset}", m))
+    save("fig12_ablation", out)
+    return out
+
+
+def table1_heterogeneous(quick=True):
+    """MySQL/PostgreSQL deployment mixes (exec/flush profiles), dr=25/75%."""
+    # engine profiles: MySQL exec 1.0x; PG slightly slower exec in our model
+    profiles = {
+        "S1-mysql": (1000, 1000, 1000, 1000),
+        "S2-postgres": (1400, 1400, 1400, 1400),
+        "S3-mixed": (1000, 1400, 1000, 1400),
+    }
+    out = []
+    for sname, scale in profiles.items():
+        for dr in (0.25, 0.75):
+            bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=dr)
+            for preset in ("ssp", "geotp"):
+                _, m = run_point(preset, bank, QUICK_T, exec_scale_milli=scale)
+                out.append(dict(scenario=sname, dist_ratio=dr, **m))
+                print(summary_line(f"table1 {sname} dr={dr} {preset}", m))
+    save("table1_heterogeneous", out)
+    return out
+
+
+def fig13_yugabyte(quick=True):
+    """Distributed-database-style baseline (async single-shard apply)."""
+    out = []
+    for level, theta in (("low", 0.3), ("medium", 0.9), ("high", 1.2)):
+        bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.2)
+        for preset in ("ssp", "geotp", "yugabyte-like"):
+            _, m = run_point(preset, bank, QUICK_T)
+            out.append(dict(level=level, **m))
+            print(summary_line(f"fig13 {level} {preset}", m))
+    save("fig13_yugabyte", out)
+    return out
+
+
+def fig14_txn_length(quick=True):
+    """Transaction length 5..25 ops; interactive rounds 1..3."""
+    out = []
+    for ops in (5, 15, 25):
+        bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.2, ops=ops)
+        for preset in ("ssp", "geotp"):
+            _, m = run_point(preset, bank, QUICK_T)
+            out.append(dict(sweep="length", ops=ops, **m))
+            print(summary_line(f"fig14 ops={ops} {preset}", m))
+    for rounds, theta in ((1, 0.3), (2, 0.3), (3, 0.3), (1, 0.9), (2, 0.9), (3, 0.9)):
+        bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.2, ops=6, rounds=rounds)
+        for preset in ("ssp", "geotp"):
+            _, m = run_point(preset, bank, QUICK_T)
+            out.append(dict(sweep="rounds", rounds=rounds, theta=theta, **m))
+            print(summary_line(f"fig14 rounds={rounds} th={theta} {preset}", m))
+    save("fig14_txn_length", out)
+    return out
+
+
+def fig15_multiregion(quick=True):
+    """Two middleware placements (Beijing DM vs London DM)."""
+    out = []
+    bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.2)
+    for dm, rtt in (("dm1-beijing", (0.0, 27.0, 73.0, 251.0)), ("dm2-london", (251.0, 226.0, 175.0, 0.0))):
+        for preset in ("ssp", "geotp"):
+            _, m = run_point(preset, bank, QUICK_T, rtt_ms=rtt)
+            out.append(dict(dm=dm, **m))
+            print(summary_line(f"fig15 {dm} {preset}", m))
+    save("fig15_multiregion", out)
+    return out
+
+
+ALL_FIGURES = [
+    fig1_motivation,
+    fig5_overall,
+    fig7_dist_ratio,
+    fig8_latency_cdf,
+    fig9_tpcc,
+    fig10_network,
+    fig11_dynamic,
+    fig12_ablation,
+    table1_heterogeneous,
+    fig13_yugabyte,
+    fig14_txn_length,
+    fig15_multiregion,
+]

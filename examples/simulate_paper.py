@@ -1,0 +1,53 @@
+"""Reproduce the paper's motivating example (§II / Fig 2 vs Fig 4).
+
+One distributed transaction over DS1 (10ms) and DS2 (100ms): measure the
+end-to-end latency and per-data-source lock-contention span under SSP (2PC),
+GeoTP O1 (decentralized prepare) and full GeoTP (O1+O2 stagger).
+
+    PYTHONPATH=src python examples/simulate_paper.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import engine, protocol, workloads
+from repro.core.netmodel import make_net_params
+
+
+def bank_one_txn():
+    T, N, K = 1, 8, 2
+    return workloads.Bank(
+        key=jnp.asarray(np.tile([1, 501], (T, N, 1)).astype(np.int32)),
+        write=jnp.ones((T, N, K), bool),
+        ds=jnp.asarray(np.tile([0, 1], (T, N, 1)).astype(np.int8)),
+        round_id=jnp.zeros((T, N, K), jnp.int8),
+        valid=jnp.ones((T, N, K), bool),
+        is_dist=jnp.ones((T, N), bool),
+        num_records=1000,
+        num_ds=2,
+    )
+
+
+def main():
+    net = make_net_params((10.0, 100.0))
+    bank = bank_one_txn()
+    print("T1 spans DS1 (10ms RTT) and DS2 (100ms RTT), as in Fig 2 / Fig 4:\n")
+    for name in ("ssp", "geotp-o1", "geotp-o1o2"):
+        cfg = engine.SimConfig(
+            terminals=1, max_ops=2, num_ds=2, bank_txns=8,
+            proto=protocol.PRESETS[name], warmup_us=0, horizon_us=3_000_000,
+        )
+        _, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds)
+        print(
+            f"{name:11s} txn latency {m['avg_latency_ms']:6.1f} ms   "
+            f"mean lock span {m['avg_lcs_ms']:6.1f} ms"
+        )
+    print(
+        "\npaper: SSP ~3 WAN rounds (300ms), O1 folds prepare into execution"
+        "\n(~200ms), O2 postpones the DS1 subtransaction by 90ms so its lock"
+        "\nspan drops from ~150ms to ~10ms without raising txn latency (§IV-B)."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro: GeoTP (latency-aware geo-distributed transaction processing) as a
+production-grade multi-pod JAX framework.
+
+Layers:
+  repro.core     — the paper's contribution (decentralized prepare, latency-aware
+                   scheduling, hotspot heuristics) + discrete-event engine + baselines.
+  repro.models   — LM substrate for the 10 assigned architectures.
+  repro.dist     — sharding rules, checkpointing (GeoTP one-round commit), elastic,
+                   gradient compression.
+  repro.serving  — continuous-batching geo-serving engine (GeoTP as router feature).
+  repro.kernels  — Pallas TPU kernels (interpret-validated on CPU).
+  repro.launch   — mesh / dryrun / train / serve / roofline entrypoints.
+"""
+
+__version__ = "1.0.0"

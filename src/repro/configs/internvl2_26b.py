@@ -1,0 +1,5 @@
+"""Assigned architecture config: internvl2-26b (see registry.py for parameters)."""
+
+from repro.configs.registry import get
+
+CONFIG = get("internvl2-26b")

@@ -1,0 +1,5 @@
+"""Assigned architecture config: llama3.2-3b (see registry.py for parameters)."""
+
+from repro.configs.registry import get
+
+CONFIG = get("llama3.2-3b")

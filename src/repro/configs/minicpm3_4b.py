@@ -1,0 +1,5 @@
+"""Assigned architecture config: minicpm3-4b (see registry.py for parameters)."""
+
+from repro.configs.registry import get
+
+CONFIG = get("minicpm3-4b")

@@ -1,0 +1,5 @@
+"""Assigned architecture config: mixtral-8x7b (see registry.py for parameters)."""
+
+from repro.configs.registry import get
+
+CONFIG = get("mixtral-8x7b")

@@ -1,0 +1,5 @@
+"""Assigned architecture config: qwen2-72b (see registry.py for parameters)."""
+
+from repro.configs.registry import get
+
+CONFIG = get("qwen2-72b")

@@ -1,0 +1,5 @@
+"""Assigned architecture config: recurrentgemma-9b (see registry.py for parameters)."""
+
+from repro.configs.registry import get
+
+CONFIG = get("recurrentgemma-9b")

@@ -1,0 +1,5 @@
+"""Assigned architecture config: seamless-m4t-large-v2 (see registry.py for parameters)."""
+
+from repro.configs.registry import get
+
+CONFIG = get("seamless-m4t-large-v2")

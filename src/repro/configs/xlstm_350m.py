@@ -1,0 +1,5 @@
+"""Assigned architecture config: xlstm-350m (see registry.py for parameters)."""
+
+from repro.configs.registry import get
+
+CONFIG = get("xlstm-350m")

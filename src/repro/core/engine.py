@@ -1,0 +1,1221 @@
+"""Vectorized discrete-event engine for geo-distributed transaction processing.
+
+This is the paper's experimental platform, rebuilt as a deterministic JAX
+state machine:
+
+* DM (middleware) + D data sources; int32 µs clock; every event is processed
+  by a `lax.switch` handler inside a `lax.while_loop`.
+* 2PL lock tables live at the data sources (dense arrays over the benchmark
+  key space, FIFO grant by enqueue time, lock-wait-timeout aborts — the
+  concurrency-control abstraction the paper's data sources expose).
+* The commit protocol, scheduling policy and heuristics are configured by
+  `repro.core.protocol.ProtocolConfig` — every baseline of §VII is a preset.
+
+Event categories:
+  terminal events  — start/retry a transaction, DM commit-log flush
+  subtxn events    — dispatch / prepare / vote / commit / ack / abort messages
+  op events        — arrival at DS, exec completion, lock-wait timeout
+
+All randomness (network jitter, admission draws) is hash-derived from event
+counters => bitwise-reproducible runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hotspot as hs_mod
+from repro.core import scheduler as sched
+from repro.core.netmodel import INF_US, _hash_u32
+from repro.core.protocol import (
+    PREPARE_COORD,
+    PREPARE_DECENTRAL,
+    PREPARE_NONE,
+    STAGGER_NET,
+    STAGGER_NET_LEL,
+    STAGGER_NONE,
+    ProtocolConfig,
+)
+from repro.core.workloads import Bank
+
+# ---- op states -------------------------------------------------------------
+OP_NONE, OP_PENDING, OP_ENROUTE, OP_QUEUED, OP_WAIT, OP_EXEC, OP_HOLD, OP_DONE = range(8)
+
+# ---- subtxn states ---------------------------------------------------------
+(
+    SUB_NONE,
+    SUB_SCHED,
+    SUB_RUN,
+    SUB_ROUND_REPLY,
+    SUB_ROUND_AT_DM,
+    SUB_WAIT_ROUND,
+    SUB_CHILLER_WAIT,
+    SUB_PREP_CMD,
+    SUB_PREPARING,
+    SUB_VOTE,
+    SUB_VOTED,
+    SUB_COMMIT_CMD,
+    SUB_ACK,
+    SUB_LOCAL_COMMIT,
+    SUB_DONE,
+    SUB_ABORT_PEER,
+    SUB_ABORT_ACK,
+    SUB_ABORTED,
+) = range(18)
+
+# ---- terminal phases -------------------------------------------------------
+T_IDLE, T_ACTIVE, T_COMMIT_LOG, T_COMMIT_WAIT, T_ABORT_WAIT = range(5)
+
+# ---- lock modes ------------------------------------------------------------
+LK_FREE, LK_SHARED, LK_X = 0, 1, 2
+
+HIST_BINS = 128
+_HIST_BASE_US = 100.0  # bin 0 at 100 µs, 8 bins per octave
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static engine configuration (shapes + protocol)."""
+
+    terminals: int
+    max_ops: int
+    num_ds: int
+    bank_txns: int
+    proto: ProtocolConfig
+    hot_capacity: int = 8192  # hot-record table slots (paper: AVL+LRU cache)
+    warmup_us: int = 2_000_000
+    horizon_us: int = 12_000_000
+    max_events: int = 4_000_000
+    alpha_milli: int = 800  # Eq.(4) EWMA α
+    beta_milli: int = 875  # network-latency EWMA (the paper's monitor)
+
+
+class SimState(NamedTuple):
+    now: jax.Array
+    iters: jax.Array
+    # terminal
+    phase: jax.Array  # [T] i8
+    cur: jax.Array  # [T] i32 bank slot
+    txn_ctr: jax.Array  # [T] i32
+    retries: jax.Array  # [T] i32
+    blocked: jax.Array  # [T] i32
+    retry_same: jax.Array  # [T] bool
+    term_time: jax.Array  # [T] i32
+    arrive: jax.Array  # [T] i32
+    is_dist: jax.Array  # [T] bool
+    cur_round: jax.Array  # [T] i8
+    # ops
+    op_state: jax.Array  # [T,K] i8
+    op_key: jax.Array  # [T,K] i32
+    op_write: jax.Array  # [T,K] bool
+    op_ds: jax.Array  # [T,K] i8
+    op_round: jax.Array  # [T,K] i8
+    op_time: jax.Array  # [T,K] i32
+    op_enq: jax.Array  # [T,K] i32
+    # subtxns
+    inv: jax.Array  # [T,D] bool
+    sub_state: jax.Array  # [T,D] i8
+    sub_time: jax.Array  # [T,D] i32
+    sub_arrive: jax.Array  # [T,D] i32
+    sub_lel: jax.Array  # [T,D] i32
+    first_lock: jax.Array  # [T,D] i32
+    rd_done: jax.Array  # [T,D] bool
+    # hot-record footprint: fixed-capacity hash table [C+1] (+1 = scratch row).
+    # (2PL lock state needs no table: it is derived exactly from the op arrays,
+    #  since every held/waited lock belongs to exactly one in-flight op.)
+    hs: hs_mod.HashHotspot
+    # network (dynamic)
+    tau_true: jax.Array  # [D] i32
+    tau_est: jax.Array  # [D] i32
+    tau_ds: jax.Array  # [D,D] i32
+    jitter_milli: jax.Array  # i32
+    exec_scale_milli: jax.Array  # [D] i32 heterogeneous engine profile
+    lel_scale_milli: jax.Array  # i32 (§IV-C forecast scaling)
+    # metrics
+    commits: jax.Array
+    aborts: jax.Array
+    commits_dist: jax.Array
+    aborts_dist: jax.Array
+    lat_sum: jax.Array  # i32, milliseconds
+    lat_sum_dist: jax.Array
+    hist_all: jax.Array  # [HIST_BINS] i32
+    hist_cen: jax.Array
+    hist_dist: jax.Array
+    lcs_sum: jax.Array  # i32, milliseconds
+    lcs_cnt: jax.Array
+    noops: jax.Array  # i32 — must stay 0 (state-machine invariant)
+    slot_commits: jax.Array  # [T,N] i32
+    slot_aborts: jax.Array  # [T,N] i32
+    slot_lat: jax.Array  # [T,N] i32 (sum of commit latencies, ms)
+
+
+def init_state(
+    cfg: SimConfig,
+    tau_true_us,
+    tau_ds_us,
+    jitter_milli: int = 0,
+    exec_scale_milli=None,
+) -> SimState:
+    T, K, D, N = (cfg.terminals, cfg.max_ops, cfg.num_ds, cfg.bank_txns)
+    i32 = jnp.int32
+    if exec_scale_milli is None:
+        exec_scale_milli = jnp.full((D,), 1000, i32)
+    # ramp terminals in over 2ms to avoid a synchronized start
+    start = (jnp.arange(T, dtype=i32) * 2000) // max(T, 1)
+    return SimState(
+        now=i32(0),
+        iters=i32(0),
+        phase=jnp.zeros((T,), jnp.int8),
+        cur=jnp.zeros((T,), i32),
+        txn_ctr=jnp.zeros((T,), i32),
+        retries=jnp.zeros((T,), i32),
+        blocked=jnp.zeros((T,), i32),
+        retry_same=jnp.zeros((T,), bool),
+        term_time=start,
+        arrive=jnp.zeros((T,), i32),
+        is_dist=jnp.zeros((T,), bool),
+        cur_round=jnp.zeros((T,), jnp.int8),
+        op_state=jnp.zeros((T, K), jnp.int8),
+        op_key=jnp.zeros((T, K), i32),
+        op_write=jnp.zeros((T, K), bool),
+        op_ds=jnp.zeros((T, K), jnp.int8),
+        op_round=jnp.zeros((T, K), jnp.int8),
+        op_time=jnp.full((T, K), INF_US, i32),
+        op_enq=jnp.zeros((T, K), i32),
+        inv=jnp.zeros((T, D), bool),
+        sub_state=jnp.zeros((T, D), jnp.int8),
+        sub_time=jnp.full((T, D), INF_US, i32),
+        sub_arrive=jnp.zeros((T, D), i32),
+        sub_lel=jnp.zeros((T, D), i32),
+        first_lock=jnp.full((T, D), INF_US, i32),
+        rd_done=jnp.zeros((T, D), bool),
+        hs=hs_mod.hash_init(cfg.hot_capacity + 1),
+        tau_true=jnp.asarray(tau_true_us, i32),
+        tau_est=jnp.asarray(tau_true_us, i32),
+        tau_ds=jnp.asarray(tau_ds_us, i32),
+        jitter_milli=i32(jitter_milli),
+        exec_scale_milli=jnp.asarray(exec_scale_milli, i32),
+        lel_scale_milli=i32(cfg.proto.lel_scale_milli),
+        commits=i32(0),
+        aborts=i32(0),
+        commits_dist=i32(0),
+        aborts_dist=i32(0),
+        lat_sum=i32(0),
+        lat_sum_dist=i32(0),
+        hist_all=jnp.zeros((HIST_BINS,), i32),
+        hist_cen=jnp.zeros((HIST_BINS,), i32),
+        hist_dist=jnp.zeros((HIST_BINS,), i32),
+        lcs_sum=i32(0),
+        lcs_cnt=i32(0),
+        noops=i32(0),
+        slot_commits=jnp.zeros((T, N), i32),
+        slot_aborts=jnp.zeros((T, N), i32),
+        slot_lat=jnp.zeros((T, N), i32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+
+def _delay(s: SimState, rtt: jax.Array, salt: jax.Array) -> jax.Array:
+    """One-way delay = rtt/2 with deterministic ±jitter."""
+    half = rtt // 2
+    u = (_hash_u32(salt) % jnp.uint32(2001)).astype(jnp.int32) - 1000
+    return half + (half * s.jitter_milli // 1000) * u // 1000
+
+
+def _salt(s: SimState, a: int) -> jax.Array:
+    return s.iters * jnp.int32(2654435761 % (2**31)) + jnp.int32(a)
+
+
+def _exec_us(cfg: SimConfig, s: SimState, d: jax.Array) -> jax.Array:
+    """Per-op execution time at data source d; ScalarDB-style middleware CC
+    pays an extra DM round trip per statement."""
+    base = jnp.int32(cfg.proto.exec_us) * s.exec_scale_milli[d] // 1000
+    if cfg.proto.middleware_cc:
+        base = base + s.tau_true[d]
+    return base
+
+
+def _u01(salt: jax.Array) -> jax.Array:
+    return _hash_u32(salt).astype(jnp.float32) / jnp.float32(2**32)
+
+
+def _hist_bin(lat_us: jax.Array) -> jax.Array:
+    l2 = jnp.log2(jnp.maximum(lat_us.astype(jnp.float32), 1.0) / _HIST_BASE_US)
+    return jnp.clip((l2 * 8.0).astype(jnp.int32), 0, HIST_BINS - 1)
+
+
+def _measuring(cfg: SimConfig, s: SimState) -> jax.Array:
+    return s.now >= jnp.int32(cfg.warmup_us)
+
+
+# ---------------------------------------------------------------------------
+# lock table primitives
+# ---------------------------------------------------------------------------
+
+
+def _attempt_lock(cfg: SimConfig, s: SimState, t, k) -> SimState:
+    """Op (t,k) is at its data source and requests its lock (FIFO-fair).
+
+    Lock state is derived from the op arrays: record r is X-locked iff some
+    EXEC/HOLD op writes it, S-locked iff some EXEC/HOLD op reads it. A new
+    request must queue behind any existing waiter (fair FIFO, as in the
+    MySQL/PG record-lock wait queues the paper's data sources use)."""
+    r = s.op_key[t, k]
+    w = s.op_write[t, k]
+    d = s.op_ds[t, k]
+    st = s.op_state
+    on_r = s.op_key == r
+    holder = (st == OP_EXEC) | (st == OP_HOLD)
+    x_held = jnp.any(holder & on_r & s.op_write)
+    s_held = jnp.any(holder & on_r & ~s.op_write)
+    waiter = jnp.any((st == OP_WAIT) & on_r)
+    ok = jnp.where(w, ~x_held & ~s_held, ~x_held) & ~waiter
+
+    exec_t = s.now + _exec_us(cfg, s, d)
+    s = s._replace(
+        op_state=s.op_state.at[t, k].set(
+            jnp.where(ok, OP_EXEC, OP_WAIT).astype(jnp.int8)
+        ),
+        op_time=s.op_time.at[t, k].set(
+            jnp.where(ok, exec_t, s.now + jnp.int32(cfg.proto.lock_timeout_us))
+        ),
+        op_enq=s.op_enq.at[t, k].set(s.now),
+        first_lock=s.first_lock.at[t, d].min(jnp.where(ok, s.now, INF_US)),
+    )
+    return s
+
+
+def _release_and_grant(cfg: SimConfig, s: SimState, t, d) -> SimState:
+    """Release every lock txn t holds at data source d, cancel its remaining
+    ops there, and grant waiting requests FIFO-compatibly."""
+    K = cfg.max_ops
+    T = cfg.terminals
+    row_state = s.op_state[t]
+    mine = (row_state != OP_NONE) & (s.op_ds[t] == d.astype(s.op_ds.dtype))
+    held = mine & ((row_state == OP_EXEC) | (row_state == OP_HOLD))
+    rel_keys = jnp.where(held, s.op_key[t], -2)  # -2 matches nothing
+
+    # cancel all my ops at d (this *is* the release: lock state is op-derived)
+    s = s._replace(
+        op_state=s.op_state.at[t].set(
+            jnp.where(mine, OP_DONE, row_state).astype(jnp.int8)
+        ),
+        op_time=s.op_time.at[t].set(jnp.where(mine, INF_US, s.op_time[t])),
+    )
+
+    # ---- grant waiters on the released keys (post-release views) ----------
+    flat_state = s.op_state.reshape(-1)
+    flat_key = s.op_key.reshape(-1)
+    flat_write = s.op_write.reshape(-1)
+    flat_enq = s.op_enq.reshape(-1)
+    flat_ds = s.op_ds.reshape(-1)
+    holderf = (flat_state == OP_EXEC) | (flat_state == OP_HOLD)
+    waitf = flat_state == OP_WAIT
+
+    eq = flat_key[None, :] == rel_keys[:, None]  # [K, T*K]
+    rem_x = jnp.any(eq & holderf[None, :] & flat_write[None, :], axis=1)
+    rem_s = jnp.any(eq & holderf[None, :] & ~flat_write[None, :], axis=1)
+    M = held[:, None] & eq & waitf[None, :]
+    exq = jnp.where(M & flat_write[None, :], flat_enq[None, :], INF_US)
+    ex_min = jnp.min(exq, axis=1)  # [K]
+    enq = jnp.where(M, flat_enq[None, :], INF_US)
+
+    grant_s = M & ~flat_write[None, :] & (enq < ex_min[:, None]) & ~rem_x[:, None]
+    any_s = jnp.any(grant_s, axis=1)
+    x_row = jnp.argmin(exq, axis=1)
+    grant_x_ok = (ex_min < INF_US) & ~any_s & ~rem_x & ~rem_s
+    grant_x = (
+        jax.nn.one_hot(x_row, M.shape[1], dtype=bool)
+        & grant_x_ok[:, None]
+        & M
+        & flat_write[None, :]
+    )
+    granted = jnp.any(grant_s | grant_x, axis=0)  # [T*K]
+
+    exec_t = s.now + _exec_us(cfg, s, flat_ds.astype(jnp.int32))
+    new_fstate = jnp.where(granted, OP_EXEC, flat_state).astype(jnp.int8)
+    new_ftime = jnp.where(granted, exec_t, s.op_time.reshape(-1))
+    s = s._replace(
+        op_state=new_fstate.reshape(T, K), op_time=new_ftime.reshape(T, K)
+    )
+    # first-lock bookkeeping for grantees
+    gt = jnp.arange(T * K, dtype=jnp.int32) // K
+    fl = s.first_lock.reshape(-1)
+    idx = jnp.where(granted, gt * cfg.num_ds + flat_ds.astype(jnp.int32), T * cfg.num_ds)
+    fl_pad = jnp.concatenate([fl, jnp.full((1,), INF_US, jnp.int32)])
+    fl_pad = fl_pad.at[idx].min(jnp.where(granted, s.now, INF_US))
+    s = s._replace(first_lock=fl_pad[: T * cfg.num_ds].reshape(T, cfg.num_ds))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# hotspot + metric helpers
+# ---------------------------------------------------------------------------
+
+
+def _hs_dispatch(cfg, s: SimState, keys, valid) -> SimState:
+    """Claim hot-table slots for the txn's records and bump a_cnt."""
+    hs = s.hs
+    slot, evict = hs_mod.find_or_claim_slots(hs.slot_key, keys, valid)
+    zero_if = lambda f: f.at[jnp.where(evict, slot, cfg.hot_capacity)].set(0)
+    hs = hs._replace(
+        w_lat=zero_if(hs.w_lat),
+        t_cnt=zero_if(hs.t_cnt),
+        c_cnt=zero_if(hs.c_cnt),
+        a_cnt=zero_if(hs.a_cnt),
+    )
+    hs = hs._replace(
+        slot_key=hs.slot_key.at[slot].set(jnp.where(valid, keys, hs.slot_key[slot])),
+        a_cnt=hs.a_cnt.at[slot].add(valid.astype(jnp.int32)),
+        clock=hs.clock.at[slot].set(1),
+    )
+    return s._replace(hs=hs)
+
+
+def _hs_complete_ds(cfg, s: SimState, t, d, committed) -> SimState:
+    """Hotspot Eq.(4) update + a_cnt/t_cnt/c_cnt bookkeeping for subtxn (t,d)."""
+    mask = (s.op_state[t] != OP_NONE) & (s.op_ds[t] == d.astype(s.op_ds.dtype))
+    keys = s.op_key[t]
+    hs = s.hs
+    slot, found = hs_mod.lookup_slots(hs.slot_key, keys, mask)
+    lel = s.sub_lel[t, d].astype(jnp.float32)
+    vf = found.astype(jnp.float32)
+    w_old = hs.w_lat[slot].astype(jnp.float32) * vf
+    total = jnp.sum(w_old)
+    n = jnp.maximum(jnp.sum(vf), 1.0)
+    share = jnp.where(total > 0.0, w_old / jnp.maximum(total, 1.0), vf / n)
+    a = jnp.float32(cfg.alpha_milli / 1000.0)
+    new_w = jnp.clip(w_old * a + lel * share * (1.0 - a), 0.0, 1e7).astype(jnp.int32)
+    upd = found.astype(jnp.int32)
+    hs = hs._replace(
+        w_lat=hs.w_lat.at[slot].set(jnp.where(found, new_w, hs.w_lat[slot])),
+        a_cnt=jnp.maximum(hs.a_cnt.at[slot].add(-upd), 0),
+        t_cnt=hs.t_cnt.at[slot].add(upd),
+        c_cnt=hs.c_cnt.at[slot].add(upd * committed.astype(jnp.int32)),
+    )
+    return s._replace(hs=hs)
+
+
+def _lcs_metric(cfg, s: SimState, t, d) -> SimState:
+    fl = s.first_lock[t, d]
+    have = (fl < INF_US) & _measuring(cfg, s)
+    span_ms = jnp.where(have, (s.now - fl + 500) // 1000, 0)
+    return s._replace(
+        lcs_sum=s.lcs_sum + span_ms,
+        lcs_cnt=s.lcs_cnt + have.astype(jnp.int32),
+    )
+
+
+def _finish_txn(cfg: SimConfig, s: SimState, t, committed) -> SimState:
+    """Terminal-side completion: metrics, reset, schedule next/retry."""
+    N = cfg.bank_txns
+    lat = s.now - s.arrive[t]
+    dist = s.is_dist[t]
+    meas = _measuring(cfg, s)
+    b = _hist_bin(lat)
+    slot = s.cur[t] % N
+
+    s = s._replace(
+        commits=s.commits + jnp.where(meas & committed, 1, 0),
+        aborts=s.aborts + jnp.where(meas & ~committed, 1, 0),
+        commits_dist=s.commits_dist + jnp.where(meas & committed & dist, 1, 0),
+        aborts_dist=s.aborts_dist + jnp.where(meas & ~committed & dist, 1, 0),
+        lat_sum=s.lat_sum + jnp.where(meas & committed, (lat + 500) // 1000, 0),
+        lat_sum_dist=s.lat_sum_dist
+        + jnp.where(meas & committed & dist, (lat + 500) // 1000, 0),
+        hist_all=s.hist_all.at[b].add(jnp.where(meas & committed, 1, 0)),
+        hist_cen=s.hist_cen.at[b].add(jnp.where(meas & committed & ~dist, 1, 0)),
+        hist_dist=s.hist_dist.at[b].add(jnp.where(meas & committed & dist, 1, 0)),
+        slot_commits=s.slot_commits.at[t, slot].add(
+            jnp.where(meas & committed, 1, 0)
+        ),
+        slot_aborts=s.slot_aborts.at[t, slot].add(jnp.where(meas & ~committed, 1, 0)),
+        slot_lat=s.slot_lat.at[t, slot].add(
+            jnp.where(meas & committed, (lat + 500) // 1000, 0)
+        ),
+    )
+    # reset per-txn rows
+    K, D = cfg.max_ops, cfg.num_ds
+    s = s._replace(
+        op_state=s.op_state.at[t].set(jnp.zeros((K,), jnp.int8)),
+        op_time=s.op_time.at[t].set(jnp.full((K,), INF_US, jnp.int32)),
+        inv=s.inv.at[t].set(jnp.zeros((D,), bool)),
+        sub_state=s.sub_state.at[t].set(jnp.zeros((D,), jnp.int8)),
+        sub_time=s.sub_time.at[t].set(jnp.full((D,), INF_US, jnp.int32)),
+        sub_lel=s.sub_lel.at[t].set(jnp.zeros((D,), jnp.int32)),
+        first_lock=s.first_lock.at[t].set(jnp.full((D,), INF_US, jnp.int32)),
+        rd_done=s.rd_done.at[t].set(jnp.zeros((D,), bool)),
+        cur_round=s.cur_round.at[t].set(0),
+    )
+    # next / retry
+    retry = ~committed & (s.retries[t] < cfg.proto.max_retries)
+    base = jnp.int32(cfg.proto.retry_backoff_us)
+    # randomized exponential backoff: breaks deadlock lockstep between
+    # terminals that would otherwise retry in phase and re-deadlock forever
+    jit = (
+        _hash_u32(s.txn_ctr[t] * 977 + t.astype(jnp.int32) * 131 + s.retries[t])
+        % jnp.uint32(jnp.maximum(base, 1))
+    ).astype(jnp.int32)
+    backoff = base * (1 + jnp.minimum(s.retries[t], 7)) + jit
+    s = s._replace(
+        retries=s.retries.at[t].set(jnp.where(retry, s.retries[t] + 1, 0)),
+        retry_same=s.retry_same.at[t].set(retry),
+        blocked=s.blocked.at[t].set(0),
+        cur=s.cur.at[t].add(jnp.where(retry, 0, 1)),
+        phase=s.phase.at[t].set(T_IDLE),
+        term_time=s.term_time.at[t].set(jnp.where(committed, s.now, s.now + backoff)),
+    )
+    return s
+
+
+# ---------------------------------------------------------------------------
+# DM-side protocol progress
+# ---------------------------------------------------------------------------
+
+
+def _round_inv(s: SimState, t) -> jax.Array:
+    """[D] which data sources have ops in the current round."""
+    row = s.op_state[t] != OP_NONE
+    rd = s.op_round[t] == s.cur_round[t]
+    D = s.inv.shape[1]
+    oh = jax.nn.one_hot(s.op_ds[t].astype(jnp.int32), D, dtype=bool)
+    return jnp.any(oh & (row & rd)[:, None], axis=0)
+
+
+def _lel_forecast(cfg, s: SimState, t) -> jax.Array:
+    """Eq.(5) per data source for txn t: [D] int32 µs (hot-table lookup)."""
+    row = s.op_state[t] != OP_NONE
+    slot, found = hs_mod.lookup_slots(s.hs.slot_key, s.op_key[t], row)
+    w = s.hs.w_lat[slot] * found.astype(jnp.int32)
+    D = s.inv.shape[1]
+    oh = jax.nn.one_hot(s.op_ds[t].astype(jnp.int32), D, dtype=jnp.int32)
+    return jnp.sum(w[:, None] * oh, axis=0).astype(jnp.int32)
+
+
+def _stagger(cfg: SimConfig, s: SimState, t, inv_mask) -> jax.Array:
+    """Dispatch offsets per DS (Eq.3 / Eq.8 / none / chiller)."""
+    if cfg.proto.stagger == STAGGER_NONE:
+        return jnp.zeros_like(s.tau_est)
+    lel = None
+    if cfg.proto.stagger == STAGGER_NET_LEL:
+        lel = (
+            _lel_forecast(cfg, s, t).astype(jnp.float32)
+            * s.lel_scale_milli.astype(jnp.float32)
+            / 1000.0
+        ).astype(jnp.int32)
+        return sched.stagger_offsets(s.tau_est, inv_mask, lel)
+    return sched.stagger_offsets(s.tau_est, inv_mask, None)
+
+
+def _dispatch_subs(cfg, s: SimState, t, mask, times) -> SimState:
+    s = s._replace(
+        sub_state=s.sub_state.at[t].set(
+            jnp.where(mask, SUB_SCHED, s.sub_state[t]).astype(jnp.int8)
+        ),
+        sub_time=s.sub_time.at[t].set(jnp.where(mask, times, s.sub_time[t])),
+    )
+    return s
+
+
+def _dm_progress(cfg: SimConfig, s: SimState, t) -> SimState:
+    """Called whenever the DM hears from a data source: handles chiller stage-2
+    dispatch, interactive-round advancement, prepare broadcast (2PC) and the
+    commit decision."""
+    p = cfg.proto
+    inv = s.inv[t]
+    st = s.sub_state[t]
+    n_inv = jnp.sum(inv.astype(jnp.int32))
+    centralized = n_inv == 1
+
+    # chiller stage-2: when every dispatched (stage-1) sub has voted
+    if p.chiller_two_stage:
+        waiting = inv & (st == SUB_CHILLER_WAIT)
+        active = inv & ~waiting
+        ready = jnp.all(~active | (st == SUB_VOTED)) & jnp.any(waiting)
+        s = jax.lax.cond(
+            ready,
+            lambda s_: _dispatch_subs(
+                cfg, s_, t, waiting, jnp.full_like(s_.sub_time[t], s_.now)
+            ),
+            lambda s_: s_,
+            s,
+        )
+        st = s.sub_state[t]
+
+    inv_rd = _round_inv(s, t)
+    all_rd = jnp.all(~inv_rd | s.rd_done[t])
+    max_round = jnp.max(
+        jnp.where(s.op_state[t] != OP_NONE, s.op_round[t], -1)
+    ).astype(jnp.int8)
+    final = s.cur_round[t] >= max_round
+
+    def advance(s_: SimState) -> SimState:
+        nxt = (s_.cur_round[t] + 1).astype(jnp.int8)
+        s_ = s_._replace(
+            cur_round=s_.cur_round.at[t].set(nxt),
+            rd_done=s_.rd_done.at[t].set(jnp.zeros_like(s_.rd_done[t])),
+        )
+        row = s_.op_state[t] != OP_NONE
+        oh = jax.nn.one_hot(s_.op_ds[t].astype(jnp.int32), cfg.num_ds, dtype=bool)
+        inv_next = jnp.any(oh & (row & (s_.op_round[t] == nxt))[:, None], axis=0)
+        off = _stagger(cfg, s_, t, inv_next)
+        return _dispatch_subs(cfg, s_, t, inv_next, s_.now + off)
+
+    def decide(s_: SimState) -> SimState:
+        st_ = s_.sub_state[t]
+        all_at_dm = jnp.all(~inv | (st_ == SUB_ROUND_AT_DM))
+        all_voted = jnp.all(~inv | (st_ == SUB_VOTED))
+
+        def send_commit(s2: SimState) -> SimState:
+            salts = _salt(s2, 11) + jnp.arange(cfg.num_ds, dtype=jnp.int32)
+            dtimes = s2.now + jax.vmap(lambda r, sa: _delay(s2, r, sa))(
+                s2.tau_true, salts
+            )
+            return s2._replace(
+                sub_state=s2.sub_state.at[t].set(
+                    jnp.where(inv, SUB_COMMIT_CMD, st_).astype(jnp.int8)
+                ),
+                sub_time=s2.sub_time.at[t].set(
+                    jnp.where(inv, dtimes, s2.sub_time[t])
+                ),
+                phase=s2.phase.at[t].set(T_COMMIT_WAIT),
+                term_time=s2.term_time.at[t].set(INF_US),
+            )
+
+        def send_prepare(s2: SimState) -> SimState:
+            salts = _salt(s2, 13) + jnp.arange(cfg.num_ds, dtype=jnp.int32)
+            dtimes = s2.now + jax.vmap(lambda r, sa: _delay(s2, r, sa))(
+                s2.tau_true, salts
+            )
+            return s2._replace(
+                sub_state=s2.sub_state.at[t].set(
+                    jnp.where(inv, SUB_PREP_CMD, st_).astype(jnp.int8)
+                ),
+                sub_time=s2.sub_time.at[t].set(
+                    jnp.where(inv, dtimes, s2.sub_time[t])
+                ),
+            )
+
+        def commit_log(s2: SimState) -> SimState:
+            return s2._replace(
+                phase=s2.phase.at[t].set(T_COMMIT_LOG),
+                term_time=s2.term_time.at[t].set(
+                    s2.now + jnp.int32(p.log_flush_us)
+                ),
+            )
+
+        if p.prepare == PREPARE_NONE:
+            return jax.lax.cond(all_at_dm, send_commit, lambda s2: s2, s_)
+        # one-phase commit for centralized transactions (all protocols)
+        do_1pc = centralized & all_at_dm
+        if p.prepare == PREPARE_COORD:
+            return jax.lax.cond(
+                do_1pc,
+                send_commit,
+                lambda s2: jax.lax.cond(
+                    all_at_dm & ~centralized,
+                    send_prepare,
+                    lambda s3: jax.lax.cond(
+                        all_voted & ~centralized, commit_log, lambda s4: s4, s3
+                    ),
+                    s2,
+                ),
+                s_,
+            )
+        # decentralized prepare
+        return jax.lax.cond(
+            do_1pc,
+            send_commit,
+            lambda s2: jax.lax.cond(
+                all_voted & ~centralized, commit_log, lambda s3: s3, s2
+            ),
+            s_,
+        )
+
+    aborting = s.phase[t] == T_ABORT_WAIT
+    return jax.lax.cond(
+        all_rd & ~aborting,
+        lambda s_: jax.lax.cond(final, decide, advance, s_),
+        lambda s_: s_,
+        s,
+    )
+
+
+# ---------------------------------------------------------------------------
+# abort path
+# ---------------------------------------------------------------------------
+
+
+def _initiate_abort(cfg: SimConfig, s: SimState, t, d) -> SimState:
+    """Lock-wait timeout at (t, d): abort the whole distributed transaction.
+    With early_abort the geo-agent notifies peers directly (DS<->DS);
+    otherwise the notification is routed through the DM (1.5 WAN rounds)."""
+    p = cfg.proto
+    s = _release_and_grant(cfg, s, t, d)
+    s = _hs_complete_ds(cfg, s, t, d, jnp.asarray(False))
+
+    inv = s.inv[t]
+    st = s.sub_state[t]
+    D = cfg.num_ds
+    ids = jnp.arange(D, dtype=jnp.int32)
+    abort_family = (st == SUB_ABORT_PEER) | (st == SUB_ABORT_ACK) | (st == SUB_ABORTED)
+    peers = inv & (ids != d) & ~abort_family
+
+    salts = _salt(s, 17) + ids
+    if p.early_abort:
+        notify = jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_ds[d], salts)
+    else:
+        to_dm = _delay(s, s.tau_true[d], _salt(s, 19))
+        notify = to_dm + jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_true, salts)
+
+    own_ack = s.now + _delay(s, s.tau_true[d], _salt(s, 23))
+    new_st = jnp.where(peers, SUB_ABORT_PEER, st)
+    new_tm = jnp.where(peers, s.now + notify, s.sub_time[t])
+    new_st = new_st.at[d].set(SUB_ABORT_ACK)
+    new_tm = new_tm.at[d].set(own_ack)
+    return s._replace(
+        sub_state=s.sub_state.at[t].set(new_st.astype(jnp.int8)),
+        sub_time=s.sub_time.at[t].set(new_tm),
+        phase=s.phase.at[t].set(T_ABORT_WAIT),
+        term_time=s.term_time.at[t].set(INF_US),
+    )
+
+
+# ---------------------------------------------------------------------------
+# event handlers  (each: (cfg, bank, s, t, idx) -> s)
+# ---------------------------------------------------------------------------
+
+
+def _h_start_txn(cfg: SimConfig, bank: Bank, s: SimState, t, idx) -> SimState:
+    """T_IDLE fires: load the txn from the bank, run O3 admission, compute the
+    stagger (Eq.3/Eq.8) and dispatch round-0 subtransactions."""
+    p = cfg.proto
+    N = cfg.bank_txns
+    slot = s.cur[t] % N
+    key = bank.key[t, slot]
+    write = bank.write[t, slot]
+    ds = bank.ds[t, slot]
+    rnd = bank.round_id[t, slot]
+    valid = bank.valid[t, slot]
+    D = cfg.num_ds
+
+    oh = jax.nn.one_hot(ds.astype(jnp.int32), D, dtype=bool)
+    inv = jnp.any(oh & valid[:, None], axis=0)
+
+    s = s._replace(
+        op_key=s.op_key.at[t].set(jnp.where(valid, key, -1)),
+        op_write=s.op_write.at[t].set(write),
+        op_ds=s.op_ds.at[t].set(ds),
+        op_round=s.op_round.at[t].set(rnd),
+        op_state=s.op_state.at[t].set(
+            jnp.where(valid, OP_PENDING, OP_NONE).astype(jnp.int8)
+        ),
+        op_time=s.op_time.at[t].set(jnp.full((cfg.max_ops,), INF_US, jnp.int32)),
+        inv=s.inv.at[t].set(inv),
+        is_dist=s.is_dist.at[t].set(jnp.sum(inv.astype(jnp.int32)) > 1),
+        cur_round=s.cur_round.at[t].set(0),
+        rd_done=s.rd_done.at[t].set(jnp.zeros((D,), bool)),
+        sub_lel=s.sub_lel.at[t].set(jnp.zeros((D,), jnp.int32)),
+        first_lock=s.first_lock.at[t].set(jnp.full((D,), INF_US, jnp.int32)),
+        txn_ctr=s.txn_ctr.at[t].add(1),
+    )
+
+    def do_dispatch(s_: SimState) -> SimState:
+        s_ = _hs_dispatch(cfg, s_, jnp.where(valid, key, -1), valid)
+        s_ = s_._replace(arrive=s_.arrive.at[t].set(s_.now))
+        row = s_.op_state[t] != OP_NONE
+        inv0 = jnp.any(oh & (row & (rnd == 0))[:, None], axis=0)
+        off = _stagger(cfg, s_, t, inv0)
+        if p.chiller_two_stage:
+            # intra-region (min-RTT) subs first; cross-region wait (§VII-A-1)
+            tmin = jnp.min(jnp.where(inv0, s_.tau_est, INF_US))
+            stage1 = inv0 & (s_.tau_est <= tmin)
+            stage2 = inv0 & ~stage1
+            s_ = s_._replace(
+                sub_state=s_.sub_state.at[t].set(
+                    jnp.where(
+                        stage2, SUB_CHILLER_WAIT, jnp.where(stage1, SUB_SCHED, SUB_NONE)
+                    ).astype(jnp.int8)
+                ),
+                sub_time=s_.sub_time.at[t].set(
+                    jnp.where(stage1, s_.now, INF_US)
+                ),
+            )
+        else:
+            later = inv & ~inv0
+            s_ = s_._replace(
+                sub_state=s_.sub_state.at[t].set(
+                    jnp.where(
+                        inv0, SUB_SCHED, jnp.where(later, SUB_WAIT_ROUND, SUB_NONE)
+                    ).astype(jnp.int8)
+                ),
+                sub_time=s_.sub_time.at[t].set(
+                    jnp.where(inv0, s_.now + off, INF_US)
+                ),
+            )
+        s_ = s_._replace(
+            phase=s_.phase.at[t].set(T_ACTIVE),
+            term_time=s_.term_time.at[t].set(INF_US),
+        )
+        return s_
+
+    if not p.admission:
+        return do_dispatch(s)
+
+    # ---- O3 late transaction scheduling (Eq.9) ----------------------------
+    slot, found = hs_mod.lookup_slots(s.hs.slot_key, jnp.where(valid, key, -1), valid)
+    c = s.hs.c_cnt[slot] * found.astype(jnp.int32)
+    tc = s.hs.t_cnt[slot] * found.astype(jnp.int32)
+    a = s.hs.a_cnt[slot] * found.astype(jnp.int32)
+    p_abort = jnp.minimum(
+        sched.abort_probability(c, tc, a, valid), jnp.float32(p.block_prob_cap)
+    )
+    u = _u01(_salt(s, 29) + t.astype(jnp.int32))
+    block, force_abort = sched.admission_decision(
+        p_abort, u, s.blocked[t], p.max_blocked
+    )
+
+    def do_block(s_: SimState) -> SimState:
+        return s_._replace(
+            blocked=s_.blocked.at[t].add(1),
+            term_time=s_.term_time.at[t].set(s_.now + jnp.int32(p.admission_backoff_us)),
+        )
+
+    def do_abort(s_: SimState) -> SimState:
+        # admission abort: nothing dispatched; count + retry
+        s_ = s_._replace(arrive=s_.arrive.at[t].set(s_.now))
+        return _finish_txn(cfg, s_, t, jnp.asarray(False))
+
+    return jax.lax.cond(
+        force_abort, do_abort, lambda s_: jax.lax.cond(block, do_block, do_dispatch, s_), s
+    )
+
+
+def _h_send_commits(cfg: SimConfig, bank, s: SimState, t, idx) -> SimState:
+    """T_COMMIT_LOG fires: the DM flushed the commit log — broadcast commit."""
+    inv = s.inv[t]
+    st = s.sub_state[t]
+    salts = _salt(s, 31) + jnp.arange(cfg.num_ds, dtype=jnp.int32)
+    dtimes = s.now + jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_true, salts)
+    return s._replace(
+        sub_state=s.sub_state.at[t].set(
+            jnp.where(inv, SUB_COMMIT_CMD, st).astype(jnp.int8)
+        ),
+        sub_time=s.sub_time.at[t].set(jnp.where(inv, dtimes, s.sub_time[t])),
+        phase=s.phase.at[t].set(T_COMMIT_WAIT),
+        term_time=s.term_time.at[t].set(INF_US),
+    )
+
+
+def _h_op_arrive(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
+    """OP_ENROUTE fires: the round's first statement reaches the DS."""
+    return _attempt_lock(cfg, s, t, k)
+
+
+def _h_op_timeout(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
+    """OP_WAIT fires: lock-wait timeout — abort the transaction."""
+    d = s.op_ds[t, k].astype(jnp.int32)
+    # account the partial round into LEL before aborting
+    s = s._replace(
+        sub_lel=s.sub_lel.at[t, d].add(
+            jnp.maximum(s.now - s.sub_arrive[t, d], 0)
+        )
+    )
+    return _initiate_abort(cfg, s, t, d)
+
+
+def _h_op_exec_done(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
+    """OP_EXEC fires: statement finished; chain the next statement of this
+    subtransaction or complete the round."""
+    d = s.op_ds[t, k].astype(jnp.int32)
+    s = s._replace(
+        op_state=s.op_state.at[t, k].set(OP_HOLD),
+        op_time=s.op_time.at[t, k].set(INF_US),
+    )
+    row = s.op_state[t]
+    nxt_mask = (
+        (row == OP_QUEUED)
+        & (s.op_ds[t] == d.astype(s.op_ds.dtype))
+        & (s.op_round[t] == s.cur_round[t])
+    )
+    has_next = jnp.any(nxt_mask)
+    nxt = jnp.argmax(nxt_mask)
+
+    def chain(s_: SimState) -> SimState:
+        return _attempt_lock(cfg, s_, t, nxt)
+
+    def round_done(s_: SimState) -> SimState:
+        p = cfg.proto
+        s_ = s_._replace(
+            sub_lel=s_.sub_lel.at[t, d].add(
+                jnp.maximum(s_.now - s_.sub_arrive[t, d], 0)
+            )
+        )
+        d_final = jnp.max(
+            jnp.where(
+                (s_.op_state[t] != OP_NONE)
+                & (s_.op_ds[t] == d.astype(s_.op_ds.dtype)),
+                s_.op_round[t],
+                -1,
+            )
+        )
+        is_final = s_.cur_round[t] >= d_final
+        centralized = jnp.sum(s_.inv[t].astype(jnp.int32)) == 1
+        aborting = s_.sub_state[t, d] == SUB_ABORT_PEER  # peer abort in flight
+
+        reply_t = s_.now + _delay(s_, s_.tau_true[d], _salt(s_, 37))
+        prep_t = s_.now + jnp.int32(p.lan_rtt_us + p.log_flush_us)
+        local_t = s_.now + jnp.int32(p.log_flush_us)
+
+        if p.prepare == PREPARE_DECENTRAL:
+            if p.async_local_commit:
+                new_state = jnp.where(
+                    is_final,
+                    jnp.where(centralized, SUB_LOCAL_COMMIT, SUB_PREPARING),
+                    SUB_ROUND_REPLY,
+                )
+                new_time = jnp.where(
+                    is_final, jnp.where(centralized, local_t, prep_t), reply_t
+                )
+            else:
+                new_state = jnp.where(
+                    is_final & ~centralized, SUB_PREPARING, SUB_ROUND_REPLY
+                )
+                new_time = jnp.where(is_final & ~centralized, prep_t, reply_t)
+        else:
+            new_state = jnp.asarray(SUB_ROUND_REPLY)
+            new_time = reply_t
+        return s_._replace(
+            sub_state=s_.sub_state.at[t, d].set(
+                jnp.where(aborting, s_.sub_state[t, d], new_state).astype(jnp.int8)
+            ),
+            sub_time=s_.sub_time.at[t, d].set(
+                jnp.where(aborting, s_.sub_time[t, d], new_time)
+            ),
+        )
+
+    return jax.lax.cond(has_next, chain, round_done, s)
+
+
+def _h_sub_dispatch(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_SCHED fires: DM sends the current round's statements to DS d."""
+    arrival = s.now + _delay(s, s.tau_true[d], _salt(s, 41))
+    row = s.op_state[t]
+    mask = (
+        (row == OP_PENDING)
+        & (s.op_ds[t] == d.astype(s.op_ds.dtype))
+        & (s.op_round[t] == s.cur_round[t])
+    )
+    first = jnp.argmax(mask)
+    has = jnp.any(mask)
+    new_row = jnp.where(
+        mask,
+        jnp.where(jnp.arange(cfg.max_ops) == first, OP_ENROUTE, OP_QUEUED),
+        row,
+    ).astype(jnp.int8)
+    s = s._replace(
+        op_state=s.op_state.at[t].set(new_row),
+        op_time=s.op_time.at[t, first].set(
+            jnp.where(has, arrival, s.op_time[t, first])
+        ),
+        sub_state=s.sub_state.at[t, d].set(SUB_RUN),
+        sub_time=s.sub_time.at[t, d].set(INF_US),
+        sub_arrive=s.sub_arrive.at[t, d].set(arrival),
+    )
+    return s
+
+
+def _ewma_est(cfg, s: SimState, d) -> SimState:
+    b = jnp.float32(cfg.beta_milli / 1000.0)
+    est = s.tau_est[d].astype(jnp.float32)
+    tru = s.tau_true[d].astype(jnp.float32)
+    new = (est * b + tru * (1.0 - b)).astype(jnp.int32)
+    return s._replace(tau_est=s.tau_est.at[d].set(new))
+
+
+def _h_dm_reply(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_ROUND_REPLY fires at the DM."""
+    s = _ewma_est(cfg, s, d)
+    s = s._replace(
+        sub_state=s.sub_state.at[t, d].set(SUB_ROUND_AT_DM),
+        sub_time=s.sub_time.at[t, d].set(INF_US),
+        rd_done=s.rd_done.at[t, d].set(True),
+    )
+    return _dm_progress(cfg, s, t)
+
+
+def _h_ds_prep_cmd(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_PREP_CMD fires at DS (coordinated 2PC prepare)."""
+    return s._replace(
+        sub_state=s.sub_state.at[t, d].set(SUB_PREPARING),
+        sub_time=s.sub_time.at[t, d].set(s.now + jnp.int32(cfg.proto.log_flush_us)),
+    )
+
+
+def _h_ds_prepared(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_PREPARING fires: WAL flushed; send the vote to the DM."""
+    return s._replace(
+        sub_state=s.sub_state.at[t, d].set(SUB_VOTE),
+        sub_time=s.sub_time.at[t, d].set(
+            s.now + _delay(s, s.tau_true[d], _salt(s, 43))
+        ),
+    )
+
+
+def _h_dm_vote(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_VOTE fires at the DM."""
+    s = _ewma_est(cfg, s, d)
+    s = s._replace(
+        sub_state=s.sub_state.at[t, d].set(SUB_VOTED),
+        sub_time=s.sub_time.at[t, d].set(INF_US),
+        rd_done=s.rd_done.at[t, d].set(True),
+    )
+    return _dm_progress(cfg, s, t)
+
+
+def _h_ds_commit(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_COMMIT_CMD fires at DS: apply commit, release locks, ack."""
+    s = _lcs_metric(cfg, s, t, d)
+    s = _hs_complete_ds(cfg, s, t, d, jnp.asarray(True))
+    s = _release_and_grant(cfg, s, t, d)
+    return s._replace(
+        sub_state=s.sub_state.at[t, d].set(SUB_ACK),
+        sub_time=s.sub_time.at[t, d].set(
+            s.now + _delay(s, s.tau_true[d], _salt(s, 47))
+        ),
+    )
+
+
+def _h_ds_local_commit(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_LOCAL_COMMIT fires (async single-shard apply, Fig 13 baseline)."""
+    return _h_ds_commit(cfg, bank, s, t, d)
+
+
+def _h_dm_ack(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_ACK fires at the DM: transaction complete when all acks arrive."""
+    s = _ewma_est(cfg, s, d)
+    s = s._replace(
+        sub_state=s.sub_state.at[t, d].set(SUB_DONE),
+        sub_time=s.sub_time.at[t, d].set(INF_US),
+    )
+    done = jnp.all(~s.inv[t] | (s.sub_state[t] == SUB_DONE))
+    return jax.lax.cond(
+        done, lambda s_: _finish_txn(cfg, s_, t, jnp.asarray(True)), lambda s_: s_, s
+    )
+
+
+def _h_ds_abort_peer(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_ABORT_PEER fires at DS d: release + ack the abort to the DM."""
+    s = _hs_complete_ds(cfg, s, t, d, jnp.asarray(False))
+    s = _release_and_grant(cfg, s, t, d)
+    return s._replace(
+        sub_state=s.sub_state.at[t, d].set(SUB_ABORT_ACK),
+        sub_time=s.sub_time.at[t, d].set(
+            s.now + _delay(s, s.tau_true[d], _salt(s, 53))
+        ),
+    )
+
+
+def _h_dm_abort_ack(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    """SUB_ABORT_ACK fires at the DM."""
+    s = _ewma_est(cfg, s, d)
+    s = s._replace(
+        sub_state=s.sub_state.at[t, d].set(SUB_ABORTED),
+        sub_time=s.sub_time.at[t, d].set(INF_US),
+    )
+    done = jnp.all(~s.inv[t] | (s.sub_state[t] == SUB_ABORTED))
+    return jax.lax.cond(
+        done, lambda s_: _finish_txn(cfg, s_, t, jnp.asarray(False)), lambda s_: s_, s
+    )
+
+
+def _h_noop(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
+    # Safety valve: an event fired in an unexpected state. Clear it so the
+    # loop cannot spin; `noops` must stay 0 (invariant-checked in tests).
+    return s._replace(
+        op_time=jnp.where(s.op_time == s.now, INF_US, s.op_time),
+        sub_time=jnp.where(s.sub_time == s.now, INF_US, s.sub_time),
+        term_time=jnp.where(s.term_time == s.now, INF_US, s.term_time),
+        noops=s.noops + 1,
+    )
+
+
+# handler ids
+(
+    H_START,
+    H_SEND_COMMITS,
+    H_OP_ARRIVE,
+    H_OP_TIMEOUT,
+    H_OP_EXEC,
+    H_SUB_DISPATCH,
+    H_DM_REPLY,
+    H_DS_PREP_CMD,
+    H_DS_PREPARED,
+    H_DM_VOTE,
+    H_DS_COMMIT,
+    H_DM_ACK,
+    H_DS_LOCAL_COMMIT,
+    H_DS_ABORT_PEER,
+    H_DM_ABORT_ACK,
+    H_NOOP,
+) = range(16)
+
+_SUB_HANDLER = np.full(18, H_NOOP, np.int32)
+_SUB_HANDLER[SUB_SCHED] = H_SUB_DISPATCH
+_SUB_HANDLER[SUB_ROUND_REPLY] = H_DM_REPLY
+_SUB_HANDLER[SUB_PREP_CMD] = H_DS_PREP_CMD
+_SUB_HANDLER[SUB_PREPARING] = H_DS_PREPARED
+_SUB_HANDLER[SUB_VOTE] = H_DM_VOTE
+_SUB_HANDLER[SUB_COMMIT_CMD] = H_DS_COMMIT
+_SUB_HANDLER[SUB_ACK] = H_DM_ACK
+_SUB_HANDLER[SUB_LOCAL_COMMIT] = H_DS_LOCAL_COMMIT
+_SUB_HANDLER[SUB_ABORT_PEER] = H_DS_ABORT_PEER
+_SUB_HANDLER[SUB_ABORT_ACK] = H_DM_ABORT_ACK
+
+_OP_HANDLER = np.full(8, H_NOOP, np.int32)
+_OP_HANDLER[OP_ENROUTE] = H_OP_ARRIVE
+_OP_HANDLER[OP_WAIT] = H_OP_TIMEOUT
+_OP_HANDLER[OP_EXEC] = H_OP_EXEC
+
+_TERM_HANDLER = np.full(5, H_NOOP, np.int32)
+_TERM_HANDLER[T_IDLE] = H_START
+_TERM_HANDLER[T_COMMIT_LOG] = H_SEND_COMMITS
+
+
+def _step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
+    """Process the single earliest event."""
+    term_min = jnp.min(s.term_time)
+    sub_min = jnp.min(s.sub_time)
+    op_min = jnp.min(s.op_time)
+    t_now = jnp.minimum(jnp.minimum(term_min, sub_min), op_min)
+    cat = jnp.argmin(jnp.stack([term_min, sub_min, op_min]))
+
+    # locate the event
+    t_term = jnp.argmin(s.term_time).astype(jnp.int32)
+    sub_flat = jnp.argmin(s.sub_time.reshape(-1)).astype(jnp.int32)
+    op_flat = jnp.argmin(s.op_time.reshape(-1)).astype(jnp.int32)
+    D, K = cfg.num_ds, cfg.max_ops
+    t = jnp.where(cat == 0, t_term, jnp.where(cat == 1, sub_flat // D, op_flat // K))
+    idx = jnp.where(cat == 1, sub_flat % D, op_flat % K)
+
+    sub_h = jnp.asarray(_SUB_HANDLER)[s.sub_state[t, jnp.minimum(idx, D - 1)]]
+    op_h = jnp.asarray(_OP_HANDLER)[s.op_state[t, jnp.minimum(idx, K - 1)]]
+    term_h = jnp.asarray(_TERM_HANDLER)[jnp.minimum(s.phase[t], 4)]
+    hid = jnp.where(cat == 0, term_h, jnp.where(cat == 1, sub_h, op_h))
+
+    s = s._replace(now=t_now, iters=s.iters + 1)
+
+    handlers = [
+        _h_start_txn,
+        _h_send_commits,
+        _h_op_arrive,
+        _h_op_timeout,
+        _h_op_exec_done,
+        _h_sub_dispatch,
+        _h_dm_reply,
+        _h_ds_prep_cmd,
+        _h_ds_prepared,
+        _h_dm_vote,
+        _h_ds_commit,
+        _h_dm_ack,
+        _h_ds_local_commit,
+        _h_ds_abort_peer,
+        _h_dm_abort_ack,
+        _h_noop,
+    ]
+    branches = [lambda ss, tt, ii, h=h: h(cfg, bank, ss, tt, ii) for h in handlers]
+    return jax.lax.switch(hid, branches, s, t, idx)
+
+
+def run(cfg: SimConfig, bank: Bank, state: SimState) -> SimState:
+    """Run until the horizon (or the event budget) is exhausted."""
+
+    def cond(s: SimState):
+        nxt = jnp.minimum(
+            jnp.minimum(jnp.min(s.term_time), jnp.min(s.sub_time)),
+            jnp.min(s.op_time),
+        )
+        return (nxt < jnp.int32(cfg.horizon_us)) & (s.iters < cfg.max_events)
+
+    def body(s: SimState):
+        return _step(cfg, bank, s)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+_run_jit = jax.jit(run, static_argnums=(0,))
+
+
+def simulate(
+    cfg: SimConfig,
+    bank: Bank,
+    tau_true_us,
+    tau_ds_us,
+    jitter_milli: int = 0,
+    exec_scale_milli=None,
+    state: SimState | None = None,
+):
+    """Convenience wrapper: init (or continue) + run + summarize."""
+    if state is None:
+        state = init_state(cfg, tau_true_us, tau_ds_us, jitter_milli, exec_scale_milli)
+    state = _run_jit(cfg, bank, state)
+    return state, summarize(cfg, state)
+
+
+def summarize(cfg: SimConfig, s: SimState) -> dict:
+    """Host-side metric extraction."""
+    span_s = max((cfg.horizon_us - cfg.warmup_us) / 1e6, 1e-9)
+    commits = int(s.commits)
+    aborts = int(s.aborts)
+    hist = np.asarray(s.hist_all)
+    lat_p = _percentiles(hist, (0.5, 0.99, 0.999))
+    cen = _percentiles(np.asarray(s.hist_cen), (0.5, 0.99))
+    dst = _percentiles(np.asarray(s.hist_dist), (0.5, 0.99))
+    return {
+        "throughput_tps": commits / span_s,
+        "commits": commits,
+        "aborts": aborts,
+        "abort_rate": aborts / max(commits + aborts, 1),
+        "avg_latency_ms": int(s.lat_sum) / max(commits, 1),
+        "avg_latency_dist_ms": int(s.lat_sum_dist) / max(int(s.commits_dist), 1),
+        "p50_ms": lat_p[0],
+        "p99_ms": lat_p[1],
+        "p999_ms": lat_p[2],
+        "p50_centralized_ms": cen[0],
+        "p99_centralized_ms": cen[1],
+        "p50_distributed_ms": dst[0],
+        "p99_distributed_ms": dst[1],
+        "avg_lcs_ms": int(s.lcs_sum) / max(int(s.lcs_cnt), 1),
+        "noops": int(s.noops),
+        "events": int(s.iters),
+        "sim_end_s": float(s.now) / 1e6,
+    }
+
+
+def _percentiles(hist: np.ndarray, qs) -> list:
+    total = hist.sum()
+    out = []
+    if total == 0:
+        return [float("nan")] * len(qs)
+    cum = np.cumsum(hist)
+    for q in qs:
+        b = int(np.searchsorted(cum, q * total))
+        b = min(b, HIST_BINS - 1)
+        out.append(_HIST_BASE_US * (2.0 ** ((b + 0.5) / 8.0)) / 1000.0)  # ms
+    return out
+
+
+def latency_cdf(hist: np.ndarray):
+    """Returns (latency_ms[bins], cdf[bins]) for CDF plots (Fig 8)."""
+    edges = _HIST_BASE_US * (2.0 ** ((np.arange(HIST_BINS) + 1) / 8.0)) / 1000.0
+    total = max(hist.sum(), 1)
+    return edges, np.cumsum(hist) / total

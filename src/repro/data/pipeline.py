@@ -1,0 +1,47 @@
+"""Deterministic synthetic LM data pipeline.
+
+Counter-based PRNG (threefry fold-in of (epoch, step, host)) => any host can
+materialize exactly its shard of any global batch without coordination —
+restart/elastic-safe by construction. A light Markov structure makes the
+stream learnable (loss decreases), unlike iid-uniform tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+def global_batch(cfg: DataConfig, step: int) -> dict:
+    """The full global batch for `step` (hosts slice their rows).
+
+    Tokens are log-uniform (heavily skewed) with a local-repeat structure:
+    a model learns the skewed marginal within tens of steps and the repeat
+    bigram shortly after — loss decreases fast and keeps decreasing.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, (B, S + 1))
+    toks = jnp.exp(u * jnp.log(float(V))).astype(jnp.int32) - 1  # log-uniform
+    toks = jnp.clip(toks, 0, V - 1)
+    # 50% of positions repeat the previous token (learnable bigram signal)
+    rep = jax.random.bernoulli(k2, 0.5, (B, S + 1))
+    toks = jnp.where(rep, jnp.roll(toks, 1, axis=1), toks)
+    return {"tokens": toks[:, :S], "labels": toks[:, 1 : S + 1]}
+
+
+def host_batch(cfg: DataConfig, step: int, host: int, n_hosts: int) -> dict:
+    b = global_batch(cfg, step)
+    rows = cfg.global_batch // n_hosts
+    return jax.tree.map(lambda x: x[host * rows : (host + 1) * rows], b)

@@ -1,0 +1,35 @@
+"""Jit-wrapped decode-attention op: padding + validity plumbing."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+
+
+def decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    valid: jax.Array,
+    *,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: [B,1,H,dh] or [B,H,dh]; caches [B,Sc,KV,dh]; valid [B,Sc] bool."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    B, H, dh = q.shape
+    dh_p = max(128, ((dh + 127) // 128) * 128)
+    if dh_p != dh:
+        q = q * jnp.asarray((dh_p / dh) ** 0.5, q.dtype)
+        pad = [(0, 0), (0, 0), (0, dh_p - dh)]
+        q = jnp.pad(q, pad)
+        cpad = [(0, 0), (0, 0), (0, 0), (0, dh_p - dh)]
+        k_cache = jnp.pad(k_cache, cpad)
+        v_cache = jnp.pad(v_cache, cpad)
+    out = decode_attention(q, k_cache, v_cache, valid, bk=bk, interpret=interpret)
+    out = out[..., :dh]
+    return out[:, None] if squeeze else out

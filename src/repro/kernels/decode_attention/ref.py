@@ -1,0 +1,22 @@
+"""Oracle for single-query decode attention over a (possibly ring) KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """q: [B,H,dh]; caches [B,Sc,KV,dh]; valid: [B,Sc] -> [B,H,dh]."""
+    B, H, dh = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, dh).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bngd,bsnd->bngs", qf, kf) * (dh**-0.5)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngs,bsnd->bngd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype)

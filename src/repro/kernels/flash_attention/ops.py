@@ -1,0 +1,71 @@
+"""Jit-wrapped public op: padding + layout + kernel dispatch.
+
+Accepts the model's native [B,S,H,dh] layout, pads head_dim to a multiple of
+128 (MXU lane alignment) and sequence to the block size, calls the Pallas
+kernel, and unpads. `interpret=True` (default on CPU) runs the kernel body in
+Python for validation; on TPU pass interpret=False.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk_local: bool = False,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: [B,S,H,dh]; k/v: [B,S,KV,dh] -> [B,S,H,dh]."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    # pad head_dim to a 128 multiple (MXU lane width)
+    dh_p = max(128, ((dh + 127) // 128) * 128)
+    if dh_p != dh:
+        # preserve softmax scale: scale is computed from padded dh inside the
+        # kernel, so pre-scale q to compensate
+        qt = qt * jnp.asarray((dh_p / dh) ** 0.5, qt.dtype)
+        qt = _pad_to(qt, 3, dh_p)
+        kt = _pad_to(kt, 3, dh_p)
+        vt = _pad_to(vt, 3, dh_p)
+    bq_eff = min(bq, S)
+    bk_eff = min(bk, S)
+    while S % bq_eff:
+        bq_eff //= 2
+    while S % bk_eff:
+        bk_eff //= 2
+    out = flash_attention(
+        qt,
+        kt,
+        vt,
+        causal=causal,
+        window=window,
+        chunk_local=chunk_local,
+        bq=max(bq_eff, 1),
+        bk=max(bk_eff, 1),
+        interpret=interpret,
+    )
+    return out[..., :dh].transpose(0, 2, 1, 3)

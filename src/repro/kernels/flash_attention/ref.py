@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / chunk-local
+GQA). Materializes the full score matrix — small shapes only."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk_local: bool = False,
+) -> jax.Array:
+    """q: [B,H,S,dh], k/v: [B,KV,S,dh] -> [B,H,S,dh] (fp32 math)."""
+    B, H, S, dh = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * (dh**-0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        if chunk_local:
+            mask &= (kpos // window) == (qpos // window)
+        else:
+            mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,87 @@
+"""Batched GeoTP scheduler TPU kernel (Pallas).
+
+The DM's per-transaction scheduling work — Eq.(8) latency-aware stagger
+offsets and Eq.(9) abort-probability — fused into one pass for a batch of N
+in-flight transactions. This is the serving-router hot loop when thousands of
+multi-pod requests are (re)scheduled per tick: one [bN, D] + [bN, K] slab per
+grid step, row-max + row-sum reductions on the VPU, no HBM round trips for
+intermediates.
+
+Grid: (N/bN,). Blocks: tau/lel/inv [bN, D]; stats [bN, K]; outputs
+offsets [bN, D] and p_abort [bN, 1].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tau_ref, lel_ref, inv_ref, c_ref, t_ref, a_ref, valid_ref, off_ref, p_ref):
+    tau = tau_ref[...].astype(jnp.int32)
+    lel = lel_ref[...].astype(jnp.int32)
+    inv = inv_ref[...] != 0
+    cost = tau + lel
+    masked = jnp.where(inv, cost, -1)
+    cmax = jnp.max(masked, axis=-1, keepdims=True)
+    off = jnp.maximum(jnp.where(inv, cmax - cost, 0), 0)
+    off_ref[...] = off.astype(jnp.int32)
+
+    t = jnp.maximum(t_ref[...].astype(jnp.float32), 0.0) + 1.0
+    c = jnp.clip(c_ref[...].astype(jnp.float32) + 1.0, 0.0, t)
+    ratio = jnp.clip(c / t, 1e-6, 1.0)
+    expo = jnp.maximum(a_ref[...].astype(jnp.float32) - 1.0, 0.0)
+    valid = valid_ref[...] != 0
+    lp = jnp.where(valid, expo * jnp.log(ratio), 0.0)
+    p_ref[...] = (1.0 - jnp.exp(jnp.sum(lp, axis=-1, keepdims=True))).astype(
+        jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def geo_schedule(
+    tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, *, bn: int = 256, interpret: bool = True
+):
+    """See ref.py for semantics. Returns (offsets [N,D] i32, p_abort [N] f32)."""
+    N, D = tau.shape
+    K = c_cnt.shape[1]
+    bn = min(bn, N)
+    while N % bn:
+        bn //= 2
+    grid = (N // bn,)
+    nd_map = lambda i: (i, 0)
+
+    off, p = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, D), nd_map),
+            pl.BlockSpec((bn, D), nd_map),
+            pl.BlockSpec((bn, D), nd_map),
+            pl.BlockSpec((bn, K), nd_map),
+            pl.BlockSpec((bn, K), nd_map),
+            pl.BlockSpec((bn, K), nd_map),
+            pl.BlockSpec((bn, K), nd_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, D), nd_map),
+            pl.BlockSpec((bn, 1), nd_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, D), jnp.int32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        tau.astype(jnp.int32),
+        lel.astype(jnp.int32),
+        inv.astype(jnp.int8),
+        c_cnt.astype(jnp.int32),
+        t_cnt.astype(jnp.int32),
+        a_cnt.astype(jnp.int32),
+        valid.astype(jnp.int8),
+    )
+    return off, p[:, 0]

@@ -1,0 +1,10 @@
+"""Jit-wrapped batched GeoTP scheduler op."""
+
+from __future__ import annotations
+
+from repro.kernels.geo_schedule.geo_schedule import geo_schedule
+
+
+def schedule_batch(tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, *, interpret: bool = True):
+    """Batched Eq.(8) offsets + Eq.(9) abort probabilities for N transactions."""
+    return geo_schedule(tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Jit-wrapped mLSTM chunkwise op."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mlstm.mlstm import mlstm_chunk
+
+
+def mlstm(q, k, v, logi, logf, *, bq: int = 256, bk: int = 256, interpret: bool = True):
+    """Stabilized chunkwise mLSTM. q/k/v: [B,H,S,dh]; gates [B,H,S]."""
+    return mlstm_chunk(q, k, v, logi, logf, bq=bq, bk=bk, interpret=interpret)

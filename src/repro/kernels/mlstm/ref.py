@@ -1,0 +1,26 @@
+"""Oracle for the stabilized parallel mLSTM (xLSTM eq. 19-27)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, logi, logf):
+    """q/k/v: [B,H,S,dh]; logi/logf: [B,H,S] -> h [B,H,S,dh] (fp32 math)."""
+    B, H, S, dh = q.shape
+    scale = dh**-0.5
+    F = jnp.cumsum(logf.astype(jnp.float32), axis=-1)
+    Dt = F[..., :, None] - F[..., None, :] + logi.astype(jnp.float32)[..., None, :]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    Dt = jnp.where(causal, Dt, -jnp.inf)
+    m = jnp.maximum(jnp.max(Dt, axis=-1), -1e30)
+    D = jnp.exp(Dt - m[..., None])
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    Sm = s * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(Sm, axis=-1)), jnp.exp(-m))
+    return jnp.einsum("bhqk,bhkd->bhqd", Sm / norm[..., None], v.astype(jnp.float32)).astype(
+        v.dtype
+    )

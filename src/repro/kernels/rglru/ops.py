@@ -1,0 +1,18 @@
+"""Jit-wrapped RG-LRU op: gate computation + kernel scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.rglru import rglru_scan
+
+
+def rglru(
+    log_a: jax.Array, gated_x: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """Full RG-LRU sequence: h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i*x)_t.
+    log_a: [B,S,E] (already -c*softplus(lam)*r); gated_x = i * x."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * gated_x.astype(jnp.float32)
+    return rglru_scan(log_a, b.astype(gated_x.dtype), interpret=interpret)

@@ -1,0 +1,21 @@
+"""Oracle for the RG-LRU diagonal linear recurrence h_t = a_t h_{t-1} + b_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """log_a/b: [B,S,E] -> h: [B,S,E] (fp32 sequential scan)."""
+    B, S, E = log_a.shape
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+    h = jnp.zeros((B, E), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        h = a[:, t] * h + bf[:, t]
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, jnp.arange(S))
+    return hs.transpose(1, 0, 2).astype(b.dtype)

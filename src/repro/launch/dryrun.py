@@ -1,0 +1,280 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and extract the roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+
+For each cell this records: per-device memory analysis (proof it fits),
+HLO FLOPs/bytes (cost analysis), and the collective-traffic table parsed
+from the optimized HLO (per collective kind, classified ICI vs DCN by
+replica-group span). Failures (sharding mismatch, OOM at compile) are bugs.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{(\d+)(?:,(\d+))?[^}]*\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str, pod_stride: int = 256) -> dict:
+    """Sum result bytes per collective kind, split ICI vs DCN (pod-crossing).
+
+    Classification: a collective whose replica group contains two members
+    whose device ids differ by >= pod_stride crosses the pod (DCN) axis.
+    """
+    out = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        type_str = m.group(1) or m.group(2)
+        nbytes = _shape_bytes(type_str)
+        link = "ici"
+        g = _GROUPS_RE.search(line)
+        if g and g.group(2):
+            if abs(int(g.group(2)) - int(g.group(1))) >= pod_stride:
+                link = "dcn"
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                # iota groups [n_groups, group_size]<=[total] (+ optional dims):
+                # contiguous by default; a group spanning >= pod_stride ids
+                # crosses pods. Conservative: group_size * implied stride.
+                group_size = int(gi.group(2))
+                total = int(gi.group(3))
+                if group_size >= pod_stride or (
+                    "T(1,0)" in line and total > pod_stride
+                ):
+                    link = "dcn"
+        key = f"{kind}/{link}"
+        out[key] = out.get(key, 0) + nbytes
+        out[f"{kind}/count"] = out.get(f"{kind}/count", 0) + 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+
+def build_cell(cfg, cell, mesh, accum: int | None = None, remat="full"):
+    """Returns (fn, abstract_args, in_shardings, out_shardings)."""
+    from repro.dist import sharding as sh
+    from repro.launch.mesh import data_size
+    from repro.models import model as mdl
+    from repro.models import stack
+    from repro.optim import adamw
+
+    specs = mdl.input_specs(cfg, cell)
+
+    if cell.kind == "train":
+        if accum is None:
+            per_dev = max(cell.global_batch // data_size(mesh), 1)
+            accum = max(1, min(16, per_dev // 2))
+            while cell.global_batch % accum or (cell.global_batch // accum) % data_size(mesh):
+                accum //= 2
+                accum = max(accum, 1)
+                if accum == 1:
+                    break
+        opt = adamw.AdamWConfig()
+        fn = mdl.make_train_step(cfg, opt, accum=accum, remat=remat)
+        ap, ao = mdl.abstract_train_state(cfg)
+        p_sh = sh.param_shardings(cfg, mesh, "train")
+        o_sh = sh.opt_shardings(p_sh, mesh)
+        b_sh = sh.batch_shardings(mesh, specs["batch"])
+        args = (ap, ao, specs["batch"])
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh, None)
+        return fn, args, in_sh, out_sh, {"accum": accum}
+
+    from repro.models.schema import abstract_params
+
+    ap = abstract_params(stack.build_schema(cfg))
+    p_sh = sh.param_shardings(cfg, mesh, "decode")
+
+    if cell.kind == "prefill":
+        cache_len = cell.seq_len + 128
+        fn = mdl.make_prefill_step(cfg, cache_len)
+        b_sh = sh.batch_shardings(mesh, specs["batch"])
+        # output cache sharding mirrors the decode cache layout
+        enc_len = cell.seq_len if cfg.is_encdec else 0
+        c_spec = stack.decode_cache_specs(cfg, cell.global_batch, cache_len, enc_len)
+        c_sh = sh.cache_shardings(cfg, mesh, c_spec, cell.global_batch)
+        l_sh = sh.logits_sharding(cfg, mesh, cell.global_batch)
+        args = (ap, specs["batch"])
+        return fn, args, (p_sh, b_sh), (l_sh, c_sh), {}
+
+    # decode
+    fn = mdl.make_decode_step(cfg)
+    c_sh = sh.cache_shardings(cfg, mesh, specs["cache"], cell.global_batch)
+    tok_sh = sh.batch_shardings(mesh, specs["token"])
+    l_sh = sh.logits_sharding(cfg, mesh, cell.global_batch)
+    args = (ap, specs["token"], specs["pos"], specs["cache"])
+    return fn, args, (p_sh, tok_sh, tok_sh, c_sh), (l_sh, c_sh), {}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, hlo_dir=None) -> dict:
+    from repro.configs import registry
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import LM_SHAPES
+
+    cfg = registry.get(arch)
+    cell = {c.name: c for c in LM_SHAPES}[shape]
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+    }
+    if shape == "long_500k" and not cfg.long_context_capable:
+        rec["status"] = "skipped"
+        rec["reason"] = "pure full-attention arch; long_500k skipped per DESIGN.md"
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, out_sh, extra = build_cell(cfg, cell, mesh)
+    rec.update(extra)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t1 - t0, 1)
+    rec["compile_s"] = round(t2 - t1, 1)
+    if mem is not None:
+        for f in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(mem, f, None)
+            if v is not None:
+                rec[f] = int(v)
+    cost = cost or {}
+    rec["flops"] = float(cost.get("flops", -1))
+    rec["bytes_accessed"] = float(cost.get("bytes accessed", -1))
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo)
+    rec["hlo_len"] = len(hlo)
+    if hlo_dir:
+        import pathlib
+
+        pathlib.Path(hlo_dir).mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}__{shape}__{rec['mesh'].replace('x','-')}"
+        with open(f"{hlo_dir}/{tag}.hlo.txt", "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.models.config import LM_SHAPES
+
+    archs = registry.names() if (args.all or not args.arch) else [args.arch]
+    shapes = [c.name for c in LM_SHAPES] if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    import pathlib
+
+    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    if pathlib.Path(args.out).exists():
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r.get("status") in ("ok", "skipped")}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mname = "2x16x16" if mp else "16x16"
+                if (arch, shape, mname) in done:
+                    print(f"[skip-done] {arch} {shape} {mname}", flush=True)
+                    continue
+                print(f"[dryrun] {arch} {shape} {mname} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, hlo_dir=args.hlo_dir)
+                except Exception as e:
+                    rec = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": mname,
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                results = [
+                    r
+                    for r in results
+                    if (r["arch"], r["shape"], r["mesh"]) != (arch, shape, mname)
+                ] + [rec]
+                json.dump(results, open(args.out, "w"), indent=1)
+                status = rec.get("status")
+                msg = rec.get("error", "")[:120] if status == "error" else (
+                    f"flops={rec.get('flops', 0):.3g} compile={rec.get('compile_s', 0)}s"
+                    if status == "ok"
+                    else rec.get("reason", "")
+                )
+                print(f"[{status}] {arch} {shape} {mname} {msg}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

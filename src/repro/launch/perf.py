@@ -1,0 +1,192 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Perf hillclimb driver (§Perf): run a named variant of a chosen cell,
+re-lower + re-analyze, and append (hypothesis, before, after) to
+results/perf_iterations.json.
+
+    PYTHONPATH=src python -m repro.launch.perf --variant qwen2_int8_kv
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+
+
+def _analyze(cfg, cell, multi_pod=False, accum=None, remat="full", hlo_tag=None):
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import roofline as rl
+    from repro.models import flops as fl
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, out_sh, extra = build_cell(cfg, cell, mesh, accum=accum, remat=remat)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+        mem = compiled.memory_analysis()
+    chips = 512 if multi_pod else 256
+    ff = fl.cell_flops(cfg, cell, remat=remat)
+    hbm = fl.cell_hbm_bytes(cfg, cell)
+    colls = rl.loop_aware_collectives(hlo)
+    t_ici, t_dcn = rl.collective_seconds(colls)
+    terms = {
+        "t_compute_s": ff["total"] / (chips * rl.PEAK_FLOPS),
+        "t_memory_s": hbm / (chips * rl.HBM_BW),
+        "t_collective_s": (t_ici + t_dcn) / chips,
+    }
+    bound = max(terms.values())
+    rec = {
+        **terms,
+        "bottleneck": max(terms, key=terms.get),
+        "roofline_step_s": bound,
+        "mfu_bound": ff["model"] / (chips * rl.PEAK_FLOPS) / max(bound, 1e-30),
+        "useful_ratio": ff["model"] / max(ff["total"], 1),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None) if mem else None,
+        "collectives": {k: v for k, v in colls.items() if not k.endswith("count")},
+        **extra,
+    }
+    if hlo_tag:
+        pathlib.Path("results/hlo_perf").mkdir(parents=True, exist_ok=True)
+        open(f"results/hlo_perf/{hlo_tag}.hlo.txt", "w").write(hlo)
+    return rec
+
+
+def variant_qwen2_int8_kv():
+    """HYPOTHESIS: qwen2-72b decode_32k is memory-bound; KV-cache reads are
+    1.37 TB of the 1.66 TB step traffic (83%). int8 cache (+f32 per-token-head
+    scales) cuts cache bytes ~1.94x => memory term 0.00725 -> ~0.0040 s
+    (~1.8x), bottleneck stays memory. Accuracy cost measured at <1.5% max
+    logit deviation (tests/models/test_int8_cache.py)."""
+    from repro.configs import registry
+    from repro.models.config import LM_SHAPES
+
+    cfg = registry.get("qwen2-72b")
+    cell = {c.name: c for c in LM_SHAPES}["decode_32k"]
+    before = _analyze(cfg, cell)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    after = _analyze(cfg8, cell, hlo_tag="qwen2_int8_kv")
+    return "qwen2-72b/decode_32k/16x16", variant_qwen2_int8_kv.__doc__, before, after
+
+
+def variant_mixtral_remat_policy():
+    """HYPOTHESIS: mixtral-8x7b train_4k is compute-bound with useful-FLOP
+    ratio 0.51; full per-group remat contributes 1x extra forward (factor 4/6).
+    Saving matmul outputs (checkpoint_dots policy) recomputes only elementwise
+    ops: factor 4.0 -> ~3.1 => compute term 3.15 -> ~2.45 s (1.29x), useful
+    ratio 0.51 -> ~0.66, provided the saved dots still fit HBM."""
+    from repro.configs import registry
+    from repro.models.config import LM_SHAPES
+
+    cfg = registry.get("mixtral-8x7b")
+    cell = {c.name: c for c in LM_SHAPES}["train_4k"]
+    before = _analyze(cfg, cell, remat="full")
+    after = _analyze(cfg, cell, remat="dots", hlo_tag="mixtral_dots")
+    return "mixtral-8x7b/train_4k/16x16", variant_mixtral_remat_policy.__doc__, before, after
+
+
+def variant_mixtral_capacity():
+    """HYPOTHESIS: MoE capacity factor 1.25 processes 25% more expert tokens
+    than top-2 routing needs; cf=1.0 (drop-on-overflow, standard practice)
+    cuts expert+dispatch FLOPs by 20% => compute term additionally ~1.1x."""
+    import dataclasses as dc
+
+    from repro.configs import registry
+    from repro.models.config import LM_SHAPES
+
+    cfg = registry.get("mixtral-8x7b")
+    cell = {c.name: c for c in LM_SHAPES}["train_4k"]
+    before = _analyze(cfg, cell, remat="dots")
+    cfg2 = dc.replace(cfg, capacity_factor=1.0)
+    after = _analyze(cfg2, cell, remat="dots", hlo_tag="mixtral_cf1")
+    return "mixtral-8x7b/train_4k/16x16", variant_mixtral_capacity.__doc__, before, after
+
+
+def variant_xlstm_tp_off():
+    """HYPOTHESIS: xlstm-350m decode_32k is the most collective-heavy cell
+    (K/C = 13): d_model=1024 sharded 16-way leaves 64-wide per-chip matmuls
+    and an all-reduce per block. Dropping TP for this small model (params
+    replicated on the model axis, pure batch parallelism + sequence-sharded
+    ring conv states) removes the per-block all-reduces; params bytes/chip
+    rise 16x but stay tiny (0.5 GB bf16) — net win iff K_before > (P*(16-1)/16)/BW."""
+    from repro.configs import registry
+    from repro.dist import sharding as sh
+    from repro.models.config import LM_SHAPES
+
+    cfg = registry.get("xlstm-350m")
+    cell = {c.name: c for c in LM_SHAPES}["decode_32k"]
+    before = _analyze(cfg, cell)
+
+    # monkey-patch decode rules: no tensor parallelism
+    orig = sh.decode_rules
+
+    def no_tp_rules(mesh):
+        r = dict(orig(mesh))
+        r.update({"heads": None, "kv": None, "mlp": None, "vocab": None})
+        return r
+
+    sh.decode_rules = no_tp_rules
+    try:
+        after = _analyze(cfg, cell, hlo_tag="xlstm_no_tp")
+        # params replicated: per-chip memory term must account full param reads
+        from repro.models import flops as fl
+        from repro.launch import roofline as rl
+
+        P_bytes = cfg.params_dense() * 2
+        extra = P_bytes * (256 - 1) / 256 / rl.HBM_BW  # was sharded, now full
+        after["t_memory_s"] = after["t_memory_s"] + extra * 256 / 256
+        after["note"] = "memory term adjusted: params replicated (read full copy/chip)"
+        terms = {k: after[k] for k in ("t_compute_s", "t_memory_s", "t_collective_s")}
+        after["bottleneck"] = max(terms, key=terms.get)
+        after["roofline_step_s"] = max(terms.values())
+    finally:
+        sh.decode_rules = orig
+    return "xlstm-350m/decode_32k/16x16", variant_xlstm_tp_off.__doc__, before, after
+
+
+VARIANTS = {
+    "qwen2_int8_kv": variant_qwen2_int8_kv,
+    "mixtral_remat": variant_mixtral_remat_policy,
+    "mixtral_capacity": variant_mixtral_capacity,
+    "xlstm_tp_off": variant_xlstm_tp_off,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--log", default="results/perf_iterations.json")
+    args = ap.parse_args()
+
+    cell, hypothesis, before, after = VARIANTS[args.variant]()
+    entry = {
+        "variant": args.variant,
+        "cell": cell,
+        "hypothesis": " ".join(hypothesis.split()),
+        "before": before,
+        "after": after,
+        "speedup_dominant": before["roofline_step_s"] / max(after["roofline_step_s"], 1e-30),
+    }
+    log = []
+    p = pathlib.Path(args.log)
+    if p.exists():
+        log = json.load(open(p))
+    log = [e for e in log if e["variant"] != args.variant] + [entry]
+    p.parent.mkdir(parents=True, exist_ok=True)
+    json.dump(log, open(p, "w"), indent=1)
+    print(f"[{args.variant}] {cell}")
+    for k in ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck", "roofline_step_s", "mfu_bound", "useful_ratio"):
+        print(f"  {k:18s} before={before.get(k)}  after={after.get(k)}")
+    print(f"  dominant-term speedup: {entry['speedup_dominant']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,271 @@
+"""Roofline analysis (§Roofline): three terms per (arch x shape x mesh).
+
+  compute term    = FLOPs / (chips * 197e12)          [bf16 peak per chip]
+  memory term     = HBM bytes / (chips * 819e9)
+  collective term = collective bytes / (chips * link_bw)
+                    ICI ~50 GB/s/link; DCN (pod axis) modeled at 6.25 GB/s/chip
+
+FLOPs and HBM bytes come from the analytic model (models/flops.py) — exact for
+our einsums; XLA cost_analysis undercounts loop bodies and is kept only as a
+diagnostic. Collective bytes come from a LOOP-AWARE parse of the optimized
+HLO: while-body collectives are multiplied by their trip counts (scan over
+layer groups, gradient accumulation, q-chunk maps).
+
+    PYTHONPATH=src python -m repro.launch.roofline \
+        --dryrun results/dryrun.json --hlo-dir results/hlo --out results/roofline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s per link (~per chip for ring collectives)
+DCN_BW = 6.25e9  # bytes/s per chip across pods (~25 GB/s per host / 4 chips)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{(\d+)(?:,(\d+))?")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)(?:\.clone)? \([^)]*\) -> ", re.M)
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"%?([\w\.\-]+) = s32\[\] constant\((\d+)\)")
+_CMP_RE = re.compile(r"compare\(%?[\w\.\-]+, %?([\w\.\-]+)\), direction=LT")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> dict:
+    """name -> body text."""
+    comps = {}
+    starts = [(m.start(), m.group(1)) for m in _COMP_RE.finditer(hlo)]
+    for i, (pos, name) in enumerate(starts):
+        end = starts[i + 1][0] if i + 1 < len(starts) else len(hlo)
+        comps[name] = hlo[pos:end]
+    return comps
+
+
+def _classify_link(line: str, pod_stride: int) -> str:
+    g = _GROUPS_RE.search(line)
+    if g and g.group(2) is not None:
+        return "dcn" if abs(int(g.group(2)) - int(g.group(1))) >= pod_stride else "ici"
+    gi = _GROUPS_IOTA_RE.search(line)
+    if gi:
+        group_size = int(gi.group(2))
+        dims = [int(x) for x in gi.group(3).split(",")]
+        transpose = gi.group(4)
+        # contiguous groups: stride 1; spanning >= pod_stride ids => dcn.
+        if transpose:
+            # transposed iota: group members stride across the leading dim
+            stride = 1
+            perm = [int(x) for x in transpose.split(",")]
+            # members stride by product of trailing dims in permuted order
+            import math
+
+            if perm and perm[0] != 0:
+                stride = math.prod(dims[1:]) if len(dims) > 1 else 1
+            span = group_size * stride
+            return "dcn" if span > pod_stride else "ici"
+        return "dcn" if group_size > pod_stride else "ici"
+    return "ici"
+
+
+def loop_aware_collectives(hlo: str, pod_stride: int = 256) -> dict:
+    comps = split_computations(hlo)
+    # trip counts per body computation
+    trip: dict = {}
+    for name, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.group(1), m.group(2)
+            t = None
+            cbody = comps.get(cond, "")
+            cm = _CMP_RE.search(cbody)
+            if cm:
+                cname = cm.group(1)
+                km = re.search(
+                    re.escape(cname) + r" = s32\[\] constant\((\d+)\)", cbody
+                )
+                if km:
+                    t = int(km.group(1))
+            trip.setdefault(name, []).append((wbody, t if t else 1))
+    # multiplier per computation: DFS from entry
+    entry = None
+    for name in comps:
+        if "ENTRY" in comps[name][:200] or name.endswith("main") or ".main" in name:
+            entry = name
+    if entry is None:
+        entry = list(comps)[-1]
+    mult = {entry: 1}
+    stack = [entry]
+    while stack:
+        cur = stack.pop()
+        for wbody, t in trip.get(cur, []):
+            m = mult.get(cur, 1) * max(t, 1)
+            if mult.get(wbody, 0) < m:
+                mult[wbody] = m
+                stack.append(wbody)
+    # also propagate through call/fusion edges with multiplier 1
+    call_re = re.compile(r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w\.\-]+)")
+    changed = True
+    passes = 0
+    while changed and passes < 10:
+        changed = False
+        passes += 1
+        for name, body in comps.items():
+            base = mult.get(name)
+            if base is None:
+                continue
+            for cm in call_re.finditer(body):
+                callee = cm.group(1)
+                if callee in comps and mult.get(callee, 0) < base:
+                    mult[callee] = base
+                    changed = True
+
+    out: dict = {}
+    for name, body in comps.items():
+        m = mult.get(name, 1)
+        for line in body.splitlines():
+            cm = _COLL_RE.search(line)
+            if not cm:
+                continue
+            kind = cm.group(3)
+            nbytes = _shape_bytes(cm.group(1) or cm.group(2))
+            link = _classify_link(line, pod_stride)
+            key = f"{kind}/{link}"
+            out[key] = out.get(key, 0) + nbytes * m
+            out[f"{kind}/count"] = out.get(f"{kind}/count", 0) + m
+    return out
+
+
+# ring-collective traffic factor applied to the RESULT-shape bytes
+_TRAFFIC_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def collective_seconds(colls: dict) -> tuple:
+    ici = dcn = 0.0
+    for key, nbytes in colls.items():
+        if key.endswith("/count"):
+            continue
+        kind, link = key.split("/")
+        traffic = nbytes * _TRAFFIC_FACTOR.get(kind, 1.0)
+        if link == "dcn":
+            dcn += traffic / DCN_BW
+        else:
+            ici += traffic / ICI_BW
+    return ici, dcn
+
+
+def analyze_cell(rec: dict, hlo_dir: str | None) -> dict:
+    from repro.configs import registry
+    from repro.models.config import LM_SHAPES
+    from repro.models import flops as fl
+
+    cfg = registry.get(rec["arch"])
+    cell = {c.name: c for c in LM_SHAPES}[rec["shape"]]
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+
+    ff = fl.cell_flops(cfg, cell)
+    hbm = fl.cell_hbm_bytes(cfg, cell)
+    out = dict(rec)
+    out["chips"] = chips
+    out["analytic_flops"] = ff["total"]
+    out["model_flops"] = ff["model"]
+    out["useful_ratio"] = ff["model"] / max(ff["total"], 1)
+    out["analytic_hbm_bytes"] = hbm
+    out["t_compute_s"] = ff["total"] / (chips * PEAK_FLOPS)
+    out["t_memory_s"] = hbm / (chips * HBM_BW)
+
+    colls = rec.get("collectives", {})
+    if hlo_dir:
+        tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh'].replace('x','-')}"
+        p = Path(hlo_dir) / f"{tag}.hlo.txt"
+        if p.exists():
+            colls = loop_aware_collectives(p.read_text())
+            out["collectives_loop_aware"] = colls
+    # collective bytes are whole-program; per-chip share = /chips
+    t_ici, t_dcn = collective_seconds(colls)
+    out["t_collective_s"] = (t_ici + t_dcn) / chips
+    out["t_collective_ici_s"] = t_ici / chips
+    out["t_collective_dcn_s"] = t_dcn / chips
+
+    terms = {
+        "compute": out["t_compute_s"],
+        "memory": out["t_memory_s"],
+        "collective": out["t_collective_s"],
+    }
+    out["bottleneck"] = max(terms, key=terms.get)
+    bound = max(terms.values())
+    out["roofline_step_s"] = bound
+    out["roofline_fraction"] = out["t_compute_s"] / max(bound, 1e-30)
+    out["mfu_bound"] = out["model_flops"] / (chips * PEAK_FLOPS) / max(bound, 1e-30)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--hlo-dir", default="results/hlo")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--markdown", default="results/roofline.md")
+    args = ap.parse_args()
+
+    recs = json.load(open(args.dryrun))
+    out = []
+    for rec in recs:
+        if rec.get("status") != "ok":
+            out.append(rec)
+            continue
+        out.append(analyze_cell(rec, args.hlo_dir))
+    json.dump(out, open(args.out, "w"), indent=1)
+
+    rows = [r for r in out if r.get("status") == "ok"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    with open(args.markdown, "w") as f:
+        f.write(
+            "| arch | shape | mesh | compute s | memory s | collective s (ici/dcn) | "
+            "bottleneck | useful FLOP ratio | MFU bound |\n|---|---|---|---|---|---|---|---|---|\n"
+        )
+        for r in rows:
+            f.write(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['t_compute_s']:.4g} | "
+                f"{r['t_memory_s']:.4g} | {r['t_collective_s']:.4g} "
+                f"({r['t_collective_ici_s']:.3g}/{r['t_collective_dcn_s']:.3g}) | "
+                f"{r['bottleneck']} | {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} |\n"
+            )
+    print(f"wrote {args.out} and {args.markdown} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

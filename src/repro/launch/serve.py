@@ -1,0 +1,50 @@
+"""Serving launcher: GeoTP geo-serving engine vs FCFS baseline.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 400 --policy both
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--rate", type=float, default=400.0)
+    ap.add_argument("--policy", default="both", choices=["geotp", "fcfs", "both"])
+    ap.add_argument("--no-model", action="store_true", help="skip real decode steps")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs import registry
+    from repro.serving.engine import GeoServingEngine, PodConfig, synthetic_workload
+
+    cfg = registry.reduced(args.arch)
+    pods = [
+        PodConfig(rtt_us=0, n_slots=12),
+        PodConfig(rtt_us=30_000, n_slots=12),
+        PodConfig(rtt_us=100_000, n_slots=12),
+    ]
+    policies = ["geotp", "fcfs"] if args.policy == "both" else [args.policy]
+    results = {}
+    for pol in policies:
+        eng = GeoServingEngine(cfg, pods, policy=pol, run_model=not args.no_model)
+        for r in synthetic_workload(args.requests, len(pods), rate_per_s=args.rate):
+            eng.submit(r)
+        res = eng.run(until_us=120_000_000)
+        results[pol] = res
+        print(
+            f"[{pol:5s}] completed={res['completed']:4d} rejected={res['rejected']:3d} "
+            f"avg={res['avg_latency_ms']:.1f}ms p99={res['p99_latency_ms']:.1f}ms "
+            f"slot-occupancy={res['avg_slot_occupancy_ms']:.1f}ms"
+        )
+    if args.out:
+        json.dump(results, open(args.out, "w"), indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

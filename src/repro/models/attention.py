@@ -1,0 +1,307 @@
+"""Attention mixers: GQA (full / sliding-window / chunked-local) and MLA.
+
+Training/prefill uses a query-chunked online-softmax formulation (flash-style
+in pure JAX): activations stay O(S * chunk) instead of O(S^2), which is what
+makes the 32k prefill cells lowerable, and windowed variants only read the KV
+band they need (so HLO FLOPs reflect the true sub-quadratic cost).
+
+Decode paths operate on KV caches:
+  * full attention  — linear cache [B, S, kv, hd]
+  * swa / cla       — ring-buffer cache [B, window, kv, hd]  (bounded state)
+  * mla             — compressed latent cache [B, S, kv_lora + rope_dim]
+
+The Pallas kernels in repro.kernels implement the same contracts for TPU; the
+functions here are the reference paths (and what the CPU dry-run lowers).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, softcap
+
+_NEG = -1e30
+
+
+def _online_merge(acc, m, l, scores, v):
+    """One online-softmax accumulation step. scores: [..., q, k], v: [..., k, d]."""
+    m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    pexp = jnp.exp(scores - m_new[..., None])
+    l_new = l * alpha + jnp.sum(pexp, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum("...qk,...kd->...qd", pexp, v)
+    return acc_new, m_new, l_new
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk_local: bool = False,
+    q_chunk: int = 512,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """q: [B,S,H,dh], k/v: [B,S,KV,dh(v)] -> [B,S,H,dhv].
+
+    window>0: sliding-window (swa) or same-chunk (cla when chunk_local) mask,
+    reading only the KV band [chunk_start - band, chunk_end).
+    """
+    B, S, H, dh = q.shape
+    S_kv = k.shape[1]
+    KV = k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    scale = dh**-0.5
+    qc = min(q_chunk, S)
+    n_chunks = S // qc
+    assert S % qc == 0, (S, qc)
+    assert (not causal) or S == S_kv, "causal attention needs q_len == kv_len"
+
+    # [B,KV,G,S,dh] layout so kv heads broadcast over the group dim
+    qg = q.reshape(B, S, KV, G, dh).transpose(0, 2, 3, 1, 4)
+    kk = k.transpose(0, 2, 1, 3)  # [B,KV,S,dh]
+    vv = v.transpose(0, 2, 1, 3)  # [B,KV,S,dv]
+
+    band = 0
+    if window and window < S_kv:
+        band = min(window + qc, S_kv) if not chunk_local else min(2 * window, S_kv)
+
+    def one_chunk(ci):
+        q0 = ci * qc
+        qi = jax.lax.dynamic_slice_in_dim(qg, q0, qc, axis=3)  # [B,KV,G,qc,dh]
+        if band:
+            k0 = jnp.maximum(q0 + qc - band, 0)
+            ks = jax.lax.dynamic_slice_in_dim(kk, k0, band, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(vv, k0, band, axis=2)
+            kpos = k0 + jnp.arange(band)
+        else:
+            ks, vs = kk, vv
+            kpos = jnp.arange(S_kv)
+            k0 = 0
+        s = jnp.einsum("bngqd,bnkd->bngqk", qi, ks).astype(jnp.float32) * scale
+        s = softcap(s, logit_cap)
+        qpos = q0 + jnp.arange(qc)
+        mask = jnp.ones((qc, kpos.shape[0]), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window and window < S_kv:
+            if chunk_local:
+                mask &= (kpos[None, :] // window) == (qpos[:, None] // window)
+            else:
+                mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bngqk,bnkd->bngqd", p.astype(vs.dtype), vs)
+        return o  # [B,KV,G,qc,dv]
+
+    if n_chunks == 1:
+        out = one_chunk(0)  # [B,KV,G,S,dv]
+    else:
+        outs = jax.lax.map(one_chunk, jnp.arange(n_chunks))  # [C,B,KV,G,qc,dv]
+        out = jnp.moveaxis(outs, 0, 3).reshape(B, KV, G, S, dv)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, dv)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    valid: jax.Array,
+    *,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """Single-position decode. q: [B,1,H,dh]; caches [B,Sc,KV,dh(v)];
+    valid: [B,Sc] bool — which cache slots participate."""
+    B, _, H, dh = q.shape
+    Sc, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = dh**-0.5
+    qg = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bngd,bsnd->bngs", qg, k_cache).astype(jnp.float32) * scale
+    s = softcap(s, logit_cap)
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngs,bsnd->bngd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, v_cache.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def gqa_project_qkv(cfg, p, prefix, x, positions, use_rope=True):
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}.wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnk->bsnk", x, p[f"{prefix}.wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnk->bsnk", x, p[f"{prefix}.wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}.bq"].astype(x.dtype)
+        k = k + p[f"{prefix}.bk"].astype(x.dtype)
+        v = v + p[f"{prefix}.bv"].astype(x.dtype)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attn(cfg, p, prefix, x, positions, *, mixer: str, causal=True, kv=None):
+    """Train/prefill GQA. Returns (out, (k, v)) — k/v for cache construction."""
+    window = cfg.window if mixer in ("swa", "cla") else 0
+    use_rope = not (mixer == "gqa" and cfg.name.startswith("llama4"))  # iRoPE: NoPE on global layers
+    q, k, v = gqa_project_qkv(cfg, p, prefix, x, positions, use_rope)
+    o = chunked_attention(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        chunk_local=(mixer == "cla"),
+        logit_cap=cfg.attn_softcap,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", o, p[f"{prefix}.wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def _kv_quantize(x: jax.Array):
+    """Per-(token, head) symmetric int8 quantization. x: [B,KV,hd]."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.float32)
+
+
+def _kv_dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """q: [B,S,KV,hd], scale: [B,S,KV]."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def gqa_decode(cfg, p, prefix, x, pos, cache, *, mixer: str):
+    """One-token decode step. cache: dict(k, v[, k_scale, v_scale]).
+    Ring buffer for swa/cla; optional int8-quantized cache (kv_cache_dtype)."""
+    B = x.shape[0]
+    positions = pos[:, None]  # [B,1]
+    use_rope = not (mixer == "gqa" and cfg.name.startswith("llama4"))
+    q, k, v = gqa_project_qkv(cfg, p, prefix, x, positions, use_rope)
+    k_cache, v_cache = cache["k"], cache["v"]
+    Sc = k_cache.shape[1]
+    slot = pos % Sc  # ring position (== pos for linear caches, Sc >= max_seq)
+    bidx = jnp.arange(B)
+    quant = cfg.kv_cache_dtype == "int8"
+    if quant:
+        kq, ks = _kv_quantize(k[:, 0])
+        vq, vs = _kv_quantize(v[:, 0])
+        k_cache = k_cache.at[bidx, slot].set(kq)
+        v_cache = v_cache.at[bidx, slot].set(vq)
+        k_sc = cache["k_scale"].at[bidx, slot].set(ks)
+        v_sc = cache["v_scale"].at[bidx, slot].set(vs)
+        k_read = _kv_dequantize(k_cache, k_sc, x.dtype)
+        v_read = _kv_dequantize(v_cache, v_sc, x.dtype)
+    else:
+        k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+        v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+        k_read, v_read = k_cache, v_cache
+    slots = jnp.arange(Sc)[None, :]
+    if mixer == "cla":
+        # ring slot s holds absolute position chunk_start + s only when
+        # s <= pos % window; later slots are stale previous-chunk entries
+        valid = slots <= (pos % Sc)[:, None]
+    else:
+        # full (linear) and swa (ring): every written slot participates
+        valid = slots <= pos[:, None]
+    o = decode_attention(q, k_read, v_read, valid, logit_cap=cfg.attn_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", o, p[f"{prefix}.wo"].astype(x.dtype))
+    new_cache = {"k": k_cache, "v": v_cache}
+    if quant:
+        new_cache.update({"k_scale": k_sc, "v_scale": v_sc})
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(cfg, p, prefix, x, positions):
+    from repro.models.layers import rmsnorm
+
+    cq = jnp.einsum("bsd,dr->bsr", x, p[f"{prefix}.wq_a"].astype(x.dtype))
+    cq = rmsnorm(cq, p[f"{prefix}.q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p[f"{prefix}.wq_b"].astype(x.dtype))
+    q_nope = q[..., : cfg.nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg, p, prefix, x, positions):
+    from repro.models.layers import rmsnorm
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p[f"{prefix}.wkv_a"].astype(x.dtype))
+    c_kv = rmsnorm(ckv[..., : cfg.kv_lora_rank], p[f"{prefix}.kv_norm"])
+    k_rope = apply_rope(
+        ckv[..., None, cfg.kv_lora_rank :], positions, cfg.rope_theta
+    )  # [B,S,1,rope_dim]
+    return c_kv, k_rope
+
+
+def mla_attn(cfg, p, prefix, x, positions, *, causal=True):
+    """Training/prefill MLA (direct form). Returns (out, (c_kv, k_rope))."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, prefix, x, positions)
+    c_kv, k_rope = _mla_latent(cfg, p, prefix, x, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p[f"{prefix}.wkv_b"].astype(x.dtype))
+    k_nope = kv[..., : cfg.nope_head_dim]
+    v = kv[..., cfg.nope_head_dim :]  # [B,S,H,v_hd]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, cfg.rope_head_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    o = chunked_attention(q, k, v, causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", o, p[f"{prefix}.wo"].astype(x.dtype))
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(cfg, p, prefix, x, pos, cache):
+    """Absorbed-matrix MLA decode over the compressed cache.
+
+    score_h = q_nope_h . (W_uk_h c_kv) + q_rope_h . k_rope
+            = (W_uk_h^T q_nope_h) . c_kv + q_rope_h . k_rope
+    """
+    B = x.shape[0]
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_q(cfg, p, prefix, x, positions)  # [B,1,H,*]
+    c_new, kr_new = _mla_latent(cfg, p, prefix, x, positions)
+    ckv_cache, kr_cache = cache["c_kv"], cache["k_rope"]
+    Sc = ckv_cache.shape[1]
+    bidx = jnp.arange(B)
+    ckv_cache = ckv_cache.at[bidx, pos].set(c_new[:, 0])
+    kr_cache = kr_cache.at[bidx, pos].set(kr_new[:, 0, 0])
+
+    wkv_b = p[f"{prefix}.wkv_b"].astype(x.dtype)  # [r,H,nope+v]
+    w_uk = wkv_b[..., : cfg.nope_head_dim]  # [r,H,nope]
+    w_uv = wkv_b[..., cfg.nope_head_dim :]  # [r,H,v_hd]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)  # absorbed q
+    s = jnp.einsum("bhr,bsr->bhs", q_lat[:, 0], ckv_cache) + jnp.einsum(
+        "bhk,bsk->bhs", q_rope[:, 0], kr_cache
+    )
+    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+    s = s.astype(jnp.float32) * scale
+    valid = jnp.arange(Sc)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, _NEG)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, ckv_cache)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, w_uv)  # [B,H,v_hd]
+    out = jnp.einsum("bhk,hkd->bd", o, p[f"{prefix}.wo"].astype(x.dtype))[:, None]
+    return out, {"c_kv": ckv_cache, "k_rope": kr_cache}
+
+
+def cross_attn(cfg, p, prefix, x, enc_out):
+    """Encoder-decoder cross attention (full, no RoPE on memory)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}.wq"].astype(x.dtype))
+    k = jnp.einsum("bmd,dnk->bmnk", enc_out, p[f"{prefix}.wk"].astype(x.dtype))
+    v = jnp.einsum("bmd,dnk->bmnk", enc_out, p[f"{prefix}.wv"].astype(x.dtype))
+    o = chunked_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p[f"{prefix}.wo"].astype(x.dtype))

@@ -1,0 +1,139 @@
+"""Elementary layers: norms, RoPE, activations, dense/MoE FFN.
+
+Pure functions over (params-dict, activations); bf16-friendly (reductions in
+fp32). The heavy attention paths live in attention.py / the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def layernorm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(cfg, x, scale, bias=None):
+    if cfg.norm == "layernorm":
+        return layernorm(x, scale, bias if bias is not None else jnp.zeros_like(scale))
+    return rmsnorm(x, scale)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (int)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def dense_ffn(cfg, p, prefix: str, x: jax.Array) -> jax.Array:
+    """Gated FFN (SwiGLU/GeGLU): out = W2( act(W_g x) * (W_u x) )."""
+    g = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}.wg"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}.wu"].astype(x.dtype))
+    h = act_fn(cfg.act)(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p[f"{prefix}.wd"].astype(x.dtype))
+
+
+def moe_ffn(cfg, p, prefix: str, x: jax.Array) -> jax.Array:
+    """Top-k routed MoE with GShard-style capacity dispatch.
+
+    Dense dispatch/combine einsums so GSPMD can shard the expert dim over the
+    "model" mesh axis (expert parallelism); the dispatch one-hots lower to
+    all-to-alls when tokens and experts live on different axes.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    n_tok = B * S
+    cap = max(int(cfg.capacity_factor * K * n_tok / (E * max(B, 1))), 1)  # per batch row
+    xt = x.reshape(B, S, D)
+
+    logits = jnp.einsum("bsd,de->bse", xt, p[f"{prefix}.router"].astype(x.dtype))
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # [B,S,E]
+    topv, topi = jax.lax.top_k(gates, K)  # [B,S,K]
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    # position of each (token, k) in its expert's buffer
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)  # [B,S,K,E]
+    pos = (
+        jnp.cumsum(onehot.reshape(B, S * K, E), axis=1).reshape(B, S, K, E) - onehot
+    )
+    in_cap = pos < cap
+    disp = onehot * in_cap  # [B,S,K,E]
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # [B,S,K,E,C]
+    dispatch = jnp.einsum("bske,bskec->bsec", disp, pos_oh)  # [B,S,E,C]
+    combine = jnp.einsum("bske,bskec,bsk->bsec", disp, pos_oh, topv.astype(jnp.float32))
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), xt)  # [B,E,C,D]
+    g = jnp.einsum("becd,edf->becf", xe, p[f"{prefix}.we_g"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", xe, p[f"{prefix}.we_u"].astype(x.dtype))
+    h = act_fn(cfg.act)(g) * u
+    ye = jnp.einsum("becf,efd->becd", h, p[f"{prefix}.we_d"].astype(x.dtype))
+    return jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), ye)
+
+
+def ffn(cfg, p, prefix: str, kind: str, x: jax.Array) -> jax.Array:
+    if kind == "moe":
+        return moe_ffn(cfg, p, prefix, x)
+    if kind == "none":
+        return jnp.zeros_like(x)
+    return dense_ffn(cfg, p, prefix, x)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """One-hot-matmul embedding lookup. A plain gather from a (vocab->model,
+    embed->data)-sharded table forces SPMD to fully rematerialize the table;
+    the iota-one-hot dot partitions cleanly (MaxText's iota-embed)."""
+    oh = jax.nn.one_hot(ids, table.shape[0], dtype=dtype)
+    return jnp.einsum("...v,vd->...d", oh, table.astype(dtype))
+
+
+def gather_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """sum(one_hot(labels) * logits) — collective-friendly take_along_axis."""
+    oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    return jnp.sum(oh * logits, axis=-1)

@@ -1,0 +1,151 @@
+"""Step functions (train / prefill / decode) + abstract input specs per
+(architecture x shape) cell. These are the functions the launcher jits, the
+dry-run lowers, and the smoke tests execute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import stack
+from repro.models.config import ModelConfig, ShapeCell
+from repro.optim import adamw
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy (fp32 reduction) + small z-loss."""
+    from repro.models.layers import gather_logits
+
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = gather_logits(lf, labels)
+    ce = jnp.mean(lse - gold)
+    zloss = 1e-4 * jnp.mean(lse**2)
+    return ce + zloss
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, remat=False) -> jax.Array:
+    logits = stack.forward_train(cfg, params, batch, remat=remat)
+    labels = batch["dec_labels"] if cfg.is_encdec else batch["labels"]
+    if cfg.frontend == "vision":
+        # loss only on the text tokens that follow the patch prefix
+        logits = logits[:, -labels.shape[1] :]
+    return cross_entropy(logits, labels)
+
+
+def make_train_step(cfg: ModelConfig, opt: adamw.AdamWConfig, accum: int = 1, remat=False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    accum > 1 splits the global batch into microbatches (gradient
+    accumulation) — bounds live activation memory on the large cells.
+    remat=True applies per-layer-group activation checkpointing.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(cfg, p, batch, remat=remat))(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
+            )
+
+            def body(carry, mb):
+                acc, lsum = carry
+                l, g = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(body, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        params, opt_state, stats = adamw.apply_updates(opt, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return stack.forward_prefill(cfg, params, batch, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, token, pos, cache):
+        return stack.forward_decode(cfg, params, token, pos, cache)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract input specs per shape cell (ShapeDtypeStruct — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract inputs for jit(...).lower(**specs). Keys match step args."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), i32)
+
+    if cell.kind == "train":
+        if cfg.is_encdec:
+            s_dec = max(S // 4, 128)
+            batch = {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), jnp.bfloat16),
+                "dec_tokens": tok(B, s_dec),
+                "dec_labels": tok(B, s_dec),
+            }
+        elif cfg.frontend == "vision":
+            P = min(1024, S // 4)
+            batch = {
+                "patches": jax.ShapeDtypeStruct((B, P, cfg.frontend_dim), jnp.bfloat16),
+                "tokens": tok(B, S - P),
+                "labels": tok(B, S),  # loss over full (patch+text) positions - P
+            }
+            batch["labels"] = tok(B, S - P)
+        else:
+            batch = {"tokens": tok(B, S), "labels": tok(B, S)}
+        return {"batch": batch}
+
+    if cell.kind == "prefill":
+        if cfg.is_encdec:
+            s_dec = max(S // 4, 128)
+            batch = {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), jnp.bfloat16),
+                "dec_tokens": tok(B, s_dec),
+            }
+        elif cfg.frontend == "vision":
+            P = min(1024, S // 4)
+            batch = {
+                "patches": jax.ShapeDtypeStruct((B, P, cfg.frontend_dim), jnp.bfloat16),
+                "tokens": tok(B, S - P),
+            }
+        else:
+            batch = {"tokens": tok(B, S)}
+        return {"batch": batch}
+
+    # decode: one new token against a cache of size seq_len
+    enc_len = max(S // 4, 128) if cfg.is_encdec else 0
+    cache_len = S if not cfg.is_encdec else S  # self-attn cache length
+    cache = stack.decode_cache_specs(cfg, B, cache_len, enc_len=S if cfg.is_encdec else 0)
+    return {
+        "token": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+        "cache": cache,
+    }
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """(params, opt_state) ShapeDtypeStructs for the train dry-run."""
+    from repro.models.schema import abstract_params
+
+    ap = abstract_params(stack.build_schema(cfg))
+    return ap, adamw.abstract_state(ap)

@@ -1,0 +1,85 @@
+"""RG-LRU recurrent block (Griffin, arXiv:2402.19427 / RecurrentGemma).
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses jax.lax.associative_scan over the diagonal linear recurrence
+(parallel depth O(log S) — this is what makes the 500k-token cells feasible);
+decode is the O(1) elementwise update. The block is the Griffin recurrent
+block: y = W_out( GeLU(W_gate xn) * RGLRU(conv4(W_x xn)) ).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+from repro.models.xlstm import causal_conv
+
+_C = 8.0
+
+
+def _gates(p, prefix, xr):
+    r = jax.nn.sigmoid(
+        (
+            jnp.einsum("bsd,de->bse", xr, p[f"{prefix}.wa"]).astype(jnp.float32)
+            + p[f"{prefix}.ba"].astype(jnp.float32)
+        )
+    )
+    i = jax.nn.sigmoid(
+        (
+            jnp.einsum("bsd,de->bse", xr, p[f"{prefix}.wi"]).astype(jnp.float32)
+            + p[f"{prefix}.bi"].astype(jnp.float32)
+        )
+    )
+    lam = jax.nn.softplus(p[f"{prefix}.lam"].astype(jnp.float32))  # [d_rnn]
+    log_a = -_C * lam * r  # [B,S,d_rnn]
+    return log_a, i
+
+
+def rglru_scan(log_a, gx):
+    """h_t = a_t h_{t-1} + b_t via associative scan. log_a/gx: [B,S,E]."""
+
+    def combine(l, r):
+        (la1, b1), (la2, b2) = l, r
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * gx
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rglru_block(cfg, p, prefix, x, *, cache=None, return_state: bool = False):
+    """Griffin recurrent residual block. Returns (out, new_cache)."""
+    B, S, D = x.shape
+    xn = rmsnorm(x, p[f"{prefix}.ln"])
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,de->bse", xn, p[f"{prefix}.wgate"].astype(x.dtype))
+    )
+    xr = jnp.einsum("bsd,de->bse", xn, p[f"{prefix}.wx"].astype(x.dtype))
+    if cache is None:
+        xc = causal_conv(xr, p[f"{prefix}.conv"].astype(x.dtype))
+        log_a, i = _gates(p, prefix, xc)
+        h = rglru_scan(log_a, i * xc.astype(jnp.float32))
+        new_cache = None
+        if return_state:
+            W = p[f"{prefix}.conv"].shape[0]
+            new_cache = {"h": h[:, -1], "conv": xr[:, -(W - 1) :, :]}
+    else:
+        buf = jnp.concatenate([cache["conv"], xr], axis=1)
+        xc = jnp.einsum("bwd,wd->bd", buf, p[f"{prefix}.conv"].astype(x.dtype))[:, None]
+        conv_cache = buf[:, 1:]
+        log_a, i = _gates(p, prefix, xc)
+        a = jnp.exp(log_a[:, 0])
+        b = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * (
+            i[:, 0] * xc[:, 0].astype(jnp.float32)
+        )
+        h_new = a * cache["h"] + b
+        h = h_new[:, None]
+        new_cache = {"h": h_new, "conv": conv_cache}
+    y = h.astype(x.dtype) * gate
+    return jnp.einsum("bse,ed->bsd", y, p[f"{prefix}.wout"].astype(x.dtype)), new_cache

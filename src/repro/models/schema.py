@@ -1,0 +1,116 @@
+"""Parameter schema: one declarative source of truth for shapes, logical
+sharding axes and initialization of every weight.
+
+A schema is a flat dict  name -> ParamSpec(shape, axes, init, dtype) .
+From it we derive, without ever materializing weights:
+  * abstract_params(schema)      — ShapeDtypeStruct tree (for .lower())
+  * shardings(schema, rules, mesh) — NamedSharding tree (logical->mesh axes)
+  * init_params(schema, key)     — real arrays (smoke tests / real training)
+
+Logical axis vocabulary (MaxText-style):
+  "layers"  — stacked-layer dim (scanned over; never sharded)
+  "embed"   — d_model            (FSDP axis: sharded over "data" for storage)
+  "vocab"   — vocabulary         (sharded over "model")
+  "heads"   — attention heads    (sharded over "model")
+  "kv"      — kv heads           (replicated or "model" when divisible)
+  "mlp"     — feed-forward dim   (sharded over "model")
+  "experts" — MoE experts        (sharded over "model" = expert parallelism)
+  "state"/"conv"/None — small dims, replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim
+    init: str = "normal"  # normal | zeros | ones | embed | scaled:<fanin-dim>
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = dict  # name -> ParamSpec
+
+
+def abstract_params(schema: Schema) -> dict:
+    return {
+        n: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)) for n, s in schema.items()
+    }
+
+
+def logical_to_spec(axes: tuple, rules: dict) -> P:
+    mesh_axes = []
+    used = set()
+    for ax in axes:
+        m = rules.get(ax)
+        # one mesh axis can shard at most one dim of a tensor
+        if m is None or m in used:
+            mesh_axes.append(None)
+        else:
+            mesh_axes.append(m)
+            used.add(m if isinstance(m, str) else tuple(m))
+    return P(*mesh_axes)
+
+
+def shardings(schema: Schema, rules: dict, mesh: Mesh) -> dict:
+    out = {}
+    for n, s in schema.items():
+        spec = logical_to_spec(s.axes, rules)
+        # drop mesh axes that do not divide the dim (GSPMD would pad; we prefer
+        # replication for oddball dims like kv=8 on a 16-way axis)
+        fixed = []
+        for dim, m in zip(s.shape, spec):
+            if m is None:
+                fixed.append(None)
+                continue
+            size = (
+                mesh.shape[m]
+                if isinstance(m, str)
+                else math.prod(mesh.shape[a] for a in m)
+            )
+            fixed.append(m if dim % size == 0 else None)
+        out[n] = NamedSharding(mesh, P(*fixed))
+    return out
+
+
+def init_params(schema: Schema, key: jax.Array, dtype=None) -> dict:
+    params = {}
+    names = sorted(schema.keys())
+    keys = jax.random.split(key, len(names))
+    for k, n in zip(keys, names):
+        s = schema[n]
+        dt = jnp.dtype(dtype or s.dtype)
+        if s.init == "zeros":
+            params[n] = jnp.zeros(s.shape, dt)
+        elif s.init == "ones":
+            params[n] = jnp.ones(s.shape, dt)
+        elif s.init == "embed":
+            params[n] = (jax.random.normal(k, s.shape, dt) * 0.02).astype(dt)
+        elif s.init.startswith("scaled"):
+            fan_in = int(s.init.split(":")[1]) if ":" in s.init else s.shape[-2]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            params[n] = (jax.random.normal(k, s.shape, dt) * std).astype(dt)
+        else:  # normal
+            params[n] = (jax.random.normal(k, s.shape, dt) * 0.02).astype(dt)
+    return params
+
+
+def param_count(schema: Schema) -> int:
+    return sum(math.prod(s.shape) for s in schema.values())
+
+
+def param_bytes(schema: Schema) -> int:
+    return sum(
+        math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in schema.values()
+    )

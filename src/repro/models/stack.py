@@ -1,0 +1,636 @@
+"""Model stack: declarative parameter schema + forward passes.
+
+Layers are stacked by pattern *group*: a config with pattern period P and
+n_layers = G*P (+ tail) stores each pattern slot's weights as [G, ...] arrays
+and scans over G (jax.lax.scan) — the HLO stays one-group-sized, which is what
+keeps 80-layer × 512-device lowering fast.
+
+Three entry points (all pure):
+  forward_train(cfg, params, batch)             -> logits
+  forward_prefill(cfg, params, batch)           -> (last_logits, cache)
+  forward_decode(cfg, params, token, pos, cache)-> (logits, new_cache)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import rglru as rg
+from repro.models import xlstm as xl
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_ffn, embed_lookup, ffn, norm, rmsnorm
+from repro.models.schema import ParamSpec, Schema
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+
+def _attn_schema(cfg: ModelConfig, pfx: str) -> Schema:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        f"{pfx}.ln": ParamSpec((D,), ("embed",), "zeros"),
+        f"{pfx}.wq": ParamSpec((D, H, hd), ("embed", "heads", None), f"scaled:{D}"),
+        f"{pfx}.wk": ParamSpec((D, KV, hd), ("embed", "kv", None), f"scaled:{D}"),
+        f"{pfx}.wv": ParamSpec((D, KV, hd), ("embed", "kv", None), f"scaled:{D}"),
+        f"{pfx}.wo": ParamSpec((H, hd, D), ("heads", None, "embed"), f"scaled:{H*hd}"),
+    }
+    if cfg.qkv_bias:
+        s[f"{pfx}.bq"] = ParamSpec((H, hd), ("heads", None), "zeros")
+        s[f"{pfx}.bk"] = ParamSpec((KV, hd), ("kv", None), "zeros")
+        s[f"{pfx}.bv"] = ParamSpec((KV, hd), ("kv", None), "zeros")
+    return s
+
+
+def _mla_schema(cfg: ModelConfig, pfx: str) -> Schema:
+    D, H = cfg.d_model, cfg.n_heads
+    qk = cfg.nope_head_dim + cfg.rope_head_dim
+    return {
+        f"{pfx}.ln": ParamSpec((D,), ("embed",), "zeros"),
+        f"{pfx}.wq_a": ParamSpec((D, cfg.q_lora_rank), ("embed", None), f"scaled:{D}"),
+        f"{pfx}.q_norm": ParamSpec((cfg.q_lora_rank,), (None,), "zeros"),
+        f"{pfx}.wq_b": ParamSpec(
+            (cfg.q_lora_rank, H, qk), (None, "heads", None), f"scaled:{cfg.q_lora_rank}"
+        ),
+        f"{pfx}.wkv_a": ParamSpec(
+            (D, cfg.kv_lora_rank + cfg.rope_head_dim), ("embed", None), f"scaled:{D}"
+        ),
+        f"{pfx}.kv_norm": ParamSpec((cfg.kv_lora_rank,), (None,), "zeros"),
+        f"{pfx}.wkv_b": ParamSpec(
+            (cfg.kv_lora_rank, H, cfg.nope_head_dim + cfg.v_hd),
+            (None, "heads", None),
+            f"scaled:{cfg.kv_lora_rank}",
+        ),
+        f"{pfx}.wo": ParamSpec(
+            (H, cfg.v_hd, D), ("heads", None, "embed"), f"scaled:{H*cfg.v_hd}"
+        ),
+    }
+
+
+def _mlstm_schema(cfg: ModelConfig, pfx: str) -> Schema:
+    D, H = cfg.d_model, cfg.n_heads
+    return {
+        f"{pfx}.ln": ParamSpec((D,), ("embed",), "zeros"),
+        f"{pfx}.wu": ParamSpec((D, 2 * D), ("embed", "mlp"), f"scaled:{D}"),
+        f"{pfx}.conv": ParamSpec((4, D), (None, None), f"scaled:4"),
+        f"{pfx}.wq": ParamSpec((D, D), ("embed", "mlp"), f"scaled:{D}"),
+        f"{pfx}.wk": ParamSpec((D, D), ("embed", "mlp"), f"scaled:{D}"),
+        f"{pfx}.wv": ParamSpec((D, D), ("embed", "mlp"), f"scaled:{D}"),
+        f"{pfx}.wi": ParamSpec((D, H), ("embed", None), f"scaled:{D}"),
+        f"{pfx}.wf": ParamSpec((D, H), ("embed", None), f"scaled:{D}"),
+        f"{pfx}.bi": ParamSpec((H,), (None,), "zeros"),
+        f"{pfx}.bf": ParamSpec((H,), (None,), "ones"),
+        f"{pfx}.mn": ParamSpec((D,), ("embed",), "zeros"),
+        f"{pfx}.wd": ParamSpec((D, D), ("mlp", "embed"), f"scaled:{D}"),
+    }
+
+
+def _slstm_schema(cfg: ModelConfig, pfx: str) -> Schema:
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    return {
+        f"{pfx}.ln": ParamSpec((D,), ("embed",), "zeros"),
+        f"{pfx}.wzifo": ParamSpec((D, 4 * D), ("embed", "mlp"), f"scaled:{D}"),
+        f"{pfx}.bzifo": ParamSpec((4 * D,), ("mlp",), "zeros"),
+        f"{pfx}.r": ParamSpec(
+            (4, H, dh, dh), (None, "heads", None, None), f"scaled:{dh}"
+        ),
+        f"{pfx}.mn": ParamSpec((D,), ("embed",), "zeros"),
+        f"{pfx}.wd": ParamSpec((D, D), ("mlp", "embed"), f"scaled:{D}"),
+    }
+
+
+def _rglru_schema(cfg: ModelConfig, pfx: str) -> Schema:
+    D = cfg.d_model
+    E = int(cfg.rnn_scale * D)
+    return {
+        f"{pfx}.ln": ParamSpec((D,), ("embed",), "zeros"),
+        f"{pfx}.wgate": ParamSpec((D, E), ("embed", "mlp"), f"scaled:{D}"),
+        f"{pfx}.wx": ParamSpec((D, E), ("embed", "mlp"), f"scaled:{D}"),
+        f"{pfx}.conv": ParamSpec((cfg.rglru_conv_width, E), (None, "mlp"), "scaled:4"),
+        f"{pfx}.wa": ParamSpec((E, E), ("embed", "mlp"), f"scaled:{E}"),
+        f"{pfx}.wi": ParamSpec((E, E), ("embed", "mlp"), f"scaled:{E}"),
+        f"{pfx}.ba": ParamSpec((E,), ("mlp",), "ones"),
+        f"{pfx}.bi": ParamSpec((E,), ("mlp",), "zeros"),
+        f"{pfx}.lam": ParamSpec((E,), ("mlp",), "ones"),
+        f"{pfx}.wout": ParamSpec((E, D), ("mlp", "embed"), f"scaled:{E}"),
+    }
+
+
+def _ffn_schema(cfg: ModelConfig, pfx: str, kind: str) -> Schema:
+    D, F = cfg.d_model, cfg.d_ff
+    if kind == "none":
+        return {}
+    if kind == "moe":
+        E = cfg.n_experts
+        return {
+            f"{pfx}.ln2": ParamSpec((D,), ("embed",), "zeros"),
+            f"{pfx}.router": ParamSpec((D, E), ("embed", None), f"scaled:{D}"),
+            f"{pfx}.we_g": ParamSpec(
+                (E, D, F), ("experts", "embed", "mlp"), f"scaled:{D}"
+            ),
+            f"{pfx}.we_u": ParamSpec(
+                (E, D, F), ("experts", "embed", "mlp"), f"scaled:{D}"
+            ),
+            f"{pfx}.we_d": ParamSpec(
+                (E, F, D), ("experts", "mlp", "embed"), f"scaled:{F}"
+            ),
+        }
+    return {
+        f"{pfx}.ln2": ParamSpec((D,), ("embed",), "zeros"),
+        f"{pfx}.wg": ParamSpec((D, F), ("embed", "mlp"), f"scaled:{D}"),
+        f"{pfx}.wu": ParamSpec((D, F), ("embed", "mlp"), f"scaled:{D}"),
+        f"{pfx}.wd": ParamSpec((F, D), ("mlp", "embed"), f"scaled:{F}"),
+    }
+
+
+_MIXER_SCHEMA = {
+    "gqa": _attn_schema,
+    "swa": _attn_schema,
+    "cla": _attn_schema,
+    "mla": _mla_schema,
+    "mlstm": _mlstm_schema,
+    "slstm": _slstm_schema,
+    "rglru": _rglru_schema,
+}
+
+
+def _layer_schema(cfg: ModelConfig, pfx: str, mixer: str, ffn_kind: str, cross: bool) -> Schema:
+    s = dict(_MIXER_SCHEMA[mixer](cfg, f"{pfx}.mix"))
+    s.update(_ffn_schema(cfg, f"{pfx}.ffn", ffn_kind))
+    if cross:
+        s.update(_attn_schema(cfg, f"{pfx}.x"))
+        # cross-attention has no qkv bias regardless of cfg
+        for b in (f"{pfx}.x.bq", f"{pfx}.x.bk", f"{pfx}.x.bv"):
+            s.pop(b, None)
+    return s
+
+
+def _stack(s: Schema, g: int) -> Schema:
+    return {
+        n: ParamSpec((g,) + sp.shape, ("layers",) + sp.axes, sp.init, sp.dtype)
+        for n, sp in s.items()
+    }
+
+
+def tail_layers(cfg: ModelConfig) -> tuple:
+    tail = getattr(cfg, "tail", ())
+    return tuple(tail)
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    tail = tail_layers(cfg)
+    assert (cfg.n_layers - len(tail)) % cfg.period == 0
+    return (cfg.n_layers - len(tail)) // cfg.period
+
+
+def build_schema(cfg: ModelConfig) -> Schema:
+    s: Schema = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), "embed"),
+        "final_ln": ParamSpec((cfg.d_model,), ("embed",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec(
+            (cfg.d_model, cfg.vocab), ("embed", "vocab"), f"scaled:{cfg.d_model}"
+        )
+    if cfg.frontend != "none":
+        s["frontend_proj"] = ParamSpec(
+            (cfg.frontend_dim, cfg.d_model), (None, "embed"), f"scaled:{cfg.frontend_dim}"
+        )
+    G = n_groups(cfg)
+    cross = cfg.is_encdec
+    for j, (mixer, fk) in enumerate(cfg.pattern):
+        s.update(_stack(_layer_schema(cfg, f"blk{j}", mixer, fk, cross), G))
+    for i, (mixer, fk) in enumerate(tail_layers(cfg)):
+        s.update(_layer_schema(cfg, f"tail{i}", mixer, fk, cross))
+    if cfg.is_encdec:
+        enc = _layer_schema(cfg, "eblk0", "gqa", "dense", False)
+        s.update(_stack(enc, cfg.n_enc_layers))
+        s["enc_final_ln"] = ParamSpec((cfg.d_model,), ("embed",), "zeros")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _slice_group(params: dict, pfx: str) -> dict:
+    return {k: v for k, v in params.items() if k.startswith(pfx + ".")}
+
+
+def _apply_mixer(cfg, p, pfx, mixer, x, positions, causal=True):
+    """Train/prefill mixer application. Returns (y, cache_seed)."""
+    xn = rmsnorm(x, p[f"{pfx}.ln"])
+    if mixer in ("gqa", "swa", "cla"):
+        y, kv = attn.gqa_attn(cfg, p, pfx, xn, positions, mixer=mixer, causal=causal)
+        return y, ("kv", kv)
+    if mixer == "mla":
+        y, ckr = attn.mla_attn(cfg, p, pfx, xn, positions, causal=causal)
+        return y, ("mla", ckr)
+    if mixer == "mlstm":
+        y, _ = xl.mlstm_block(cfg, {k.replace(pfx, pfx): v for k, v in p.items()}, pfx, x)
+        return y, ("mlstm", None)
+    if mixer == "slstm":
+        y, _ = xl.slstm_block(cfg, p, pfx, x)
+        return y, ("slstm", None)
+    if mixer == "rglru":
+        y, _ = rg.rglru_block(cfg, p, pfx, x)
+        return y, ("rglru", None)
+    raise ValueError(mixer)
+
+
+def _apply_layer(cfg, p, pfx, mixer, fk, x, positions, enc_out=None, causal=True):
+    if mixer in ("mlstm", "slstm", "rglru"):
+        # these blocks norm internally and include their own projections
+        y, seed = _apply_mixer(cfg, p, pfx + ".mix", mixer, x, positions, causal)
+        x = x + y
+    else:
+        y, seed = _apply_mixer(cfg, p, pfx + ".mix", mixer, x, positions, causal)
+        x = x + y
+    if enc_out is not None:
+        xn = rmsnorm(x, p[f"{pfx}.x.ln"])
+        x = x + attn.cross_attn(cfg, p, f"{pfx}.x", xn, enc_out)
+    if fk != "none":
+        xn = rmsnorm(x, p[f"{pfx}.ffn.ln2"])
+        x = x + ffn(cfg, p, f"{pfx}.ffn", fk, xn)
+    return x, seed
+
+
+def _embed_inputs(cfg, params, batch):
+    """Token (and stub-frontend) embedding. Returns (x, positions)."""
+    dt = jnp.bfloat16
+    if cfg.frontend == "vision":
+        emb = jnp.einsum(
+            "bpf,fd->bpd", batch["patches"].astype(dt), params["frontend_proj"].astype(dt)
+        )
+        tok = embed_lookup(params["embed"], batch["tokens"], dt)
+        x = jnp.concatenate([emb, tok], axis=1)
+    elif cfg.frontend == "audio" and "frames" in batch:
+        x = jnp.einsum(
+            "bsf,fd->bsd", batch["frames"].astype(dt), params["frontend_proj"].astype(dt)
+        )
+    else:
+        x = embed_lookup(params["embed"], batch["tokens"], dt)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def _run_encoder(cfg, params, batch):
+    x, positions = (
+        _embed_inputs(cfg, params, {"frames": batch["frames"]})
+        if cfg.frontend == "audio"
+        else _embed_inputs(cfg, params, batch)
+    )
+    stacked = _slice_group(params, "eblk0")
+
+    def body(h, layer_p):
+        h, _ = _apply_layer(cfg, layer_p, "eblk0", "gqa", "dense", h, positions, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    return rmsnorm(x, params["enc_final_ln"])
+
+
+def forward_train(
+    cfg: ModelConfig, params: dict, batch: dict, remat=False
+) -> jax.Array:
+    """Full-sequence forward -> logits [B, S, V].
+
+    remat: False/"none" — no checkpointing; True/"full" — checkpoint each
+    scanned layer group; "dots" — save matmul outputs, recompute elementwise
+    only (jax.checkpoint_policies.dots_with_no_batch_dims_saveable)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _run_encoder(cfg, params, batch)
+        x, positions = _embed_inputs(cfg, params, {"tokens": batch["dec_tokens"]})
+    else:
+        x, positions = _embed_inputs(cfg, params, batch)
+
+    G = n_groups(cfg)
+    if G > 0:
+        stacked = {}
+        for j in range(len(cfg.pattern)):
+            stacked.update(_slice_group(params, f"blk{j}"))
+
+        def body(h, layer_p):
+            for j, (mixer, fk) in enumerate(cfg.pattern):
+                sub = {k: v for k, v in layer_p.items() if k.startswith(f"blk{j}.")}
+                h, _ = _apply_layer(cfg, sub, f"blk{j}", mixer, fk, h, positions, enc_out)
+            return h, None
+
+        if remat == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                prevent_cse=False,
+            )
+        elif remat and remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, stacked)
+    for i, (mixer, fk) in enumerate(tail_layers(cfg)):
+        sub = _slice_group(params, f"tail{i}")
+        x, _ = _apply_layer(cfg, sub, f"tail{i}", mixer, fk, x, positions, enc_out)
+
+    x = rmsnorm(x, params["final_ln"])
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode (KV + recurrent-state caches)
+# ---------------------------------------------------------------------------
+
+
+def _ring_fill(k: jax.Array, cap: int) -> jax.Array:
+    """Pack the last `cap` timesteps of k [B,S,...] into a ring buffer of
+    capacity `cap` laid out by absolute-position % cap."""
+    B, S = k.shape[:2]
+    w = min(cap, S)
+    tail = k[:, S - w :]
+    slots = (jnp.arange(S - w, S)) % cap
+    buf = jnp.zeros((B, cap) + k.shape[2:], k.dtype)
+    return buf.at[:, slots].set(tail)
+
+
+def _cache_capacity(cfg: ModelConfig, mixer: str, cache_len: int) -> int:
+    if mixer in ("swa", "cla"):
+        return min(cfg.window, cache_len)
+    return cache_len
+
+
+def _seed_to_cache(cfg, mixer, seed, cache_len):
+    kind, data = seed
+    if kind == "kv":
+        k, v = data
+        cap = _cache_capacity(cfg, mixer, cache_len)
+        quant = cfg.kv_cache_dtype == "int8"
+        if quant:
+            from repro.models.attention import _kv_quantize
+            import jax as _jax
+
+            kq, ks = _jax.vmap(_kv_quantize, in_axes=1, out_axes=1)(k)
+            vq, vs = _jax.vmap(_kv_quantize, in_axes=1, out_axes=1)(v)
+            if cap == cache_len:
+                pad = cache_len - k.shape[1]
+                out = {
+                    "k": jnp.pad(kq, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "v": jnp.pad(vq, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                    "k_scale": jnp.pad(ks, ((0, 0), (0, pad), (0, 0))),
+                    "v_scale": jnp.pad(vs, ((0, 0), (0, pad), (0, 0))),
+                }
+            else:
+                out = {
+                    "k": _ring_fill(kq, cap),
+                    "v": _ring_fill(vq, cap),
+                    "k_scale": _ring_fill(ks, cap),
+                    "v_scale": _ring_fill(vs, cap),
+                }
+            return out
+        if cap == cache_len:  # linear cache, pad to capacity
+            pad = cache_len - k.shape[1]
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return {"k": k, "v": v}
+        return {"k": _ring_fill(k, cap), "v": _ring_fill(v, cap)}
+    if kind == "mla":
+        c_kv, k_rope = data
+        pad = cache_len - c_kv.shape[1]
+        return {
+            "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+            "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+        }
+    return data  # recurrent states are already decode-shaped
+
+
+def _prefill_layer(cfg, p, pfx, mixer, fk, x, positions, cache_len, enc_out=None):
+    if mixer in ("mlstm", "slstm", "rglru"):
+        fn = {"mlstm": xl.mlstm_block, "slstm": xl.slstm_block, "rglru": rg.rglru_block}[
+            mixer
+        ]
+        y, cache = fn(cfg, p, pfx + ".mix", x, return_state=True)
+        x = x + y
+    else:
+        xn = rmsnorm(x, p[f"{pfx}.mix.ln"])
+        if mixer == "mla":
+            y, seed = attn.mla_attn(cfg, p, pfx + ".mix", xn, positions)
+            cache = _seed_to_cache(cfg, mixer, ("mla", seed), cache_len)
+        else:
+            y, kv = attn.gqa_attn(cfg, p, pfx + ".mix", xn, positions, mixer=mixer)
+            cache = _seed_to_cache(cfg, mixer, ("kv", kv), cache_len)
+        x = x + y
+    if enc_out is not None:
+        xn = rmsnorm(x, p[f"{pfx}.x.ln"])
+        x = x + attn.cross_attn(cfg, p, f"{pfx}.x", xn, enc_out)
+        # cross K/V are position-independent: cache them once
+        dt = x.dtype
+        xk = jnp.einsum("bmd,dnk->bmnk", enc_out, p[f"{pfx}.x.wk"].astype(dt))
+        xv = jnp.einsum("bmd,dnk->bmnk", enc_out, p[f"{pfx}.x.wv"].astype(dt))
+        cache = {"self": cache, "xk": xk, "xv": xv}
+    if fk != "none":
+        xn = rmsnorm(x, p[f"{pfx}.ffn.ln2"])
+        x = x + ffn(cfg, p, f"{pfx}.ffn", fk, xn)
+    return x, cache
+
+
+def forward_prefill(cfg: ModelConfig, params: dict, batch: dict, cache_len: int):
+    """Prefill: full forward + decode-ready cache. Returns (last_logits, cache)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _run_encoder(cfg, params, batch)
+        x, positions = _embed_inputs(cfg, params, {"tokens": batch["dec_tokens"]})
+    else:
+        x, positions = _embed_inputs(cfg, params, batch)
+
+    cache = {}
+    G = n_groups(cfg)
+    if G > 0:
+        stacked = {}
+        for j in range(len(cfg.pattern)):
+            stacked.update(_slice_group(params, f"blk{j}"))
+
+        def body(h, layer_p):
+            caches = {}
+            for j, (mixer, fk) in enumerate(cfg.pattern):
+                sub = {k: v for k, v in layer_p.items() if k.startswith(f"blk{j}.")}
+                h, c = _prefill_layer(
+                    cfg, sub, f"blk{j}", mixer, fk, h, positions, cache_len, enc_out
+                )
+                caches[f"blk{j}"] = c
+            return h, caches
+
+        x, scan_caches = jax.lax.scan(body, x, stacked)
+        cache.update(scan_caches)
+    for i, (mixer, fk) in enumerate(tail_layers(cfg)):
+        sub = _slice_group(params, f"tail{i}")
+        x, c = _prefill_layer(
+            cfg, sub, f"tail{i}", mixer, fk, x, positions, cache_len, enc_out
+        )
+        cache[f"tail{i}"] = c
+
+    x = rmsnorm(x, params["final_ln"])
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(x.dtype))
+    return logits, cache
+
+
+def _decode_layer(cfg, p, pfx, mixer, fk, x, pos, cache):
+    xcache = None
+    if isinstance(cache, dict) and "self" in cache:
+        xcache, cache = cache, cache["self"]
+    if mixer in ("mlstm", "slstm", "rglru"):
+        fn = {"mlstm": xl.mlstm_block, "slstm": xl.slstm_block, "rglru": rg.rglru_block}[
+            mixer
+        ]
+        y, new_c = fn(cfg, p, pfx + ".mix", x, cache=cache)
+        x = x + y
+    else:
+        xn = rmsnorm(x, p[f"{pfx}.mix.ln"])
+        if mixer == "mla":
+            y, new_c = attn.mla_decode(cfg, p, pfx + ".mix", xn, pos, cache)
+        else:
+            y, new_c = attn.gqa_decode(cfg, p, pfx + ".mix", xn, pos, cache, mixer=mixer)
+        x = x + y
+    if xcache is not None:
+        xn = rmsnorm(x, p[f"{pfx}.x.ln"])
+        q = jnp.einsum("bsd,dhk->bshk", xn, p[f"{pfx}.x.wq"].astype(x.dtype))
+        o = attn.decode_attention(
+            q,
+            xcache["xk"],
+            xcache["xv"],
+            jnp.ones((x.shape[0], xcache["xk"].shape[1]), bool),
+        )
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p[f"{pfx}.x.wo"].astype(x.dtype))
+        new_c = {"self": new_c, "xk": xcache["xk"], "xv": xcache["xv"]}
+    if fk != "none":
+        xn = rmsnorm(x, p[f"{pfx}.ffn.ln2"])
+        x = x + ffn(cfg, p, f"{pfx}.ffn", fk, xn)
+    return x, new_c
+
+
+def forward_decode(cfg: ModelConfig, params: dict, token: jax.Array, pos: jax.Array, cache: dict):
+    """One decode step. token/pos: [B]. Returns (logits [B,V], new_cache)."""
+    x = embed_lookup(params["embed"], token, jnp.bfloat16)[:, None]  # [B,1,D]
+
+    new_cache = {}
+    G = n_groups(cfg)
+    if G > 0:
+        stacked = {}
+        for j in range(len(cfg.pattern)):
+            stacked.update(_slice_group(params, f"blk{j}"))
+        blk_cache = {k: v for k, v in cache.items() if k.startswith("blk")}
+
+        def body(h, xs):
+            layer_p, layer_c = xs
+            new_cs = {}
+            for j, (mixer, fk) in enumerate(cfg.pattern):
+                sub = {k: v for k, v in layer_p.items() if k.startswith(f"blk{j}.")}
+                h, c = _decode_layer(cfg, sub, f"blk{j}", mixer, fk, h, pos, layer_c[f"blk{j}"])
+                new_cs[f"blk{j}"] = c
+            return h, new_cs
+
+        x, scan_caches = jax.lax.scan(body, x, (stacked, blk_cache))
+        new_cache.update(scan_caches)
+    for i, (mixer, fk) in enumerate(tail_layers(cfg)):
+        sub = _slice_group(params, f"tail{i}")
+        x, c = _decode_layer(cfg, sub, f"tail{i}", mixer, fk, x, pos, cache[f"tail{i}"])
+        new_cache[f"tail{i}"] = c
+
+    x = rmsnorm(x, params["final_ln"])
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], head.astype(x.dtype))
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache specs (abstract, for the dry-run) and zero-init (for real serving)
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_spec(cfg: ModelConfig, mixer: str, B: int, cache_len: int, dt=jnp.bfloat16):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    H, D = cfg.n_heads, cfg.d_model
+    f32 = jnp.float32
+    if mixer in ("gqa", "swa", "cla"):
+        cap = _cache_capacity(cfg, mixer, cache_len)
+        if cfg.kv_cache_dtype == "int8":
+            return {
+                "k": jax.ShapeDtypeStruct((B, cap, KV, hd), jnp.int8),
+                "v": jax.ShapeDtypeStruct((B, cap, KV, hd), jnp.int8),
+                "k_scale": jax.ShapeDtypeStruct((B, cap, KV), f32),
+                "v_scale": jax.ShapeDtypeStruct((B, cap, KV), f32),
+            }
+        return {
+            "k": jax.ShapeDtypeStruct((B, cap, KV, hd), dt),
+            "v": jax.ShapeDtypeStruct((B, cap, KV, hd), dt),
+        }
+    if mixer == "mla":
+        return {
+            "c_kv": jax.ShapeDtypeStruct((B, cache_len, cfg.kv_lora_rank), dt),
+            "k_rope": jax.ShapeDtypeStruct((B, cache_len, cfg.rope_head_dim), dt),
+        }
+    if mixer == "mlstm":
+        dh = D // H
+        return {
+            "state": {
+                "C": jax.ShapeDtypeStruct((B, H, dh, dh), f32),
+                "n": jax.ShapeDtypeStruct((B, H, dh), f32),
+                "m": jax.ShapeDtypeStruct((B, H), f32),
+            },
+            "conv": jax.ShapeDtypeStruct((B, 3, D), dt),
+        }
+    if mixer == "slstm":
+        dh = D // H
+        v = jax.ShapeDtypeStruct((B, H, dh), f32)
+        return {"c": v, "n": v, "m": v, "h": v}
+    if mixer == "rglru":
+        E = int(cfg.rnn_scale * cfg.d_model)
+        return {
+            "h": jax.ShapeDtypeStruct((B, E), f32),
+            "conv": jax.ShapeDtypeStruct((B, cfg.rglru_conv_width - 1, E), dt),
+        }
+    raise ValueError(mixer)
+
+
+def decode_cache_specs(cfg: ModelConfig, B: int, cache_len: int, enc_len: int = 0):
+    G = n_groups(cfg)
+    cache = {}
+    for j, (mixer, fk) in enumerate(cfg.pattern):
+        spec = _layer_cache_spec(cfg, mixer, B, cache_len)
+        if cfg.is_encdec:
+            spec = {
+                "self": spec,
+                "xk": jax.ShapeDtypeStruct((B, enc_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+                "xv": jax.ShapeDtypeStruct((B, enc_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+            }
+        if G > 0:
+            spec = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((G,) + s.shape, s.dtype), spec
+            )
+        cache[f"blk{j}"] = spec
+    for i, (mixer, fk) in enumerate(tail_layers(cfg)):
+        spec = _layer_cache_spec(cfg, mixer, B, cache_len)
+        if cfg.is_encdec:
+            spec = {
+                "self": spec,
+                "xk": jax.ShapeDtypeStruct((B, enc_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+                "xv": jax.ShapeDtypeStruct((B, enc_len, cfg.n_kv_heads, cfg.hd), jnp.bfloat16),
+            }
+        cache[f"tail{i}"] = spec
+    return cache
+
+
+def init_cache(cfg: ModelConfig, B: int, cache_len: int, enc_len: int = 0):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        decode_cache_specs(cfg, B, cache_len, enc_len),
+    )

@@ -1,0 +1,210 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, sequential recurrence).
+
+Training uses the paper's stabilized parallel form for mLSTM (query-chunked,
+O(S * chunk) memory) and a lax.scan for sLSTM. Decode is the O(1) recurrent
+update for both. d_ff = 0 for this family: the blocks carry their own
+up/down projections (gated output), no separate FFN.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B,S,D], w: [W,D]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def mlstm_parallel(q, k, v, logi, logf, q_chunk: int = 512):
+    """Stabilized parallel mLSTM (xLSTM paper eq. 19-27).
+
+    q/k/v: [B,H,S,dh]; logi/logf: [B,H,S] (log input gate, log sigmoid forget).
+    Returns h: [B,H,S,dh].
+    """
+    B, H, S, dh = q.shape
+    scale = dh**-0.5
+    F = jnp.cumsum(logf, axis=-1)  # [B,H,S]
+    qc = min(q_chunk, S)
+    n_chunks = S // qc
+
+    def one_chunk(ci):
+        q0 = ci * qc
+        qi = jax.lax.dynamic_slice_in_dim(q, q0, qc, axis=2)
+        Fi = jax.lax.dynamic_slice_in_dim(F, q0, qc, axis=2)  # [B,H,qc]
+        # D~[i,j] = F_i - F_j + logi_j for j <= i
+        Dt = Fi[..., :, None] - F[..., None, :] + logi[..., None, :]
+        qpos = q0 + jnp.arange(qc)
+        causal = jnp.arange(S)[None, :] <= qpos[:, None]
+        Dt = jnp.where(causal, Dt, -jnp.inf)
+        m = jnp.maximum(jnp.max(Dt, axis=-1), -1e30)  # [B,H,qc]
+        D = jnp.exp(Dt - m[..., None])
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi, k) * scale
+        Sm = s * D
+        norm = jnp.maximum(jnp.abs(jnp.sum(Sm, axis=-1)), jnp.exp(-m))
+        return jnp.einsum("bhqk,bhkd->bhqd", Sm / norm[..., None], v)
+
+    if n_chunks <= 1:
+        return one_chunk(0)
+    outs = jax.lax.map(one_chunk, jnp.arange(n_chunks))  # [C,B,H,qc,dh]
+    return jnp.moveaxis(outs, 0, 2).reshape(B, H, S, dh)
+
+
+def mlstm_step(state, q, k, v, logi, logf):
+    """O(1) decode update. state: dict(C [B,H,dk,dv], n [B,H,dk], m [B,H]).
+    q/k/v: [B,H,dh]; logi/logf: [B,H]."""
+    C, n, m = state["C"], state["n"], state["m"]
+    dh = q.shape[-1]
+    m_new = jnp.maximum(logf + m, logi)
+    fa = jnp.exp(logf + m - m_new)[..., None]
+    ia = jnp.exp(logi - m_new)[..., None]
+    n_new = fa * n + ia * k
+    C_new = fa[..., None] * C + (ia * k)[..., None] * v[..., None, :]
+    qn = q * (dh**-0.5)
+    num = jnp.einsum("bhk,bhkv->bhv", qn, C_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", qn, n_new)), jnp.exp(-m_new)
+    )
+    h = num / den[..., None]
+    return {"C": C_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_final_state(k, v, logi, logf):
+    """Recurrent state (C, n, m) after consuming the whole sequence — used to
+    seed the decode cache from a prefill. k/v: [B,H,S,dh]; gates [B,H,S]."""
+    F = jnp.cumsum(logf, axis=-1)
+    w_log = F[..., -1:] - F + logi  # [B,H,S]
+    m = jnp.max(w_log, axis=-1)  # [B,H]
+    w = jnp.exp(w_log - m[..., None])
+    C = jnp.einsum("bhs,bhsk,bhsv->bhkv", w, k, v)
+    n = jnp.einsum("bhs,bhsk->bhk", w, k)
+    return {"C": C, "n": n, "m": m}
+
+
+def mlstm_block(cfg, p, prefix, x, *, cache=None, return_state: bool = False):
+    """Full mLSTM residual block. x: [B,S,D] (S=1 with cache).
+    Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    xn = rmsnorm(x, p[f"{prefix}.ln"])
+    u = jnp.einsum("bsd,de->bse", xn, p[f"{prefix}.wu"].astype(x.dtype))  # [B,S,2D]
+    a, b = jnp.split(u, 2, axis=-1)
+    if cache is None:
+        c = causal_conv(a, p[f"{prefix}.conv"].astype(x.dtype))
+        conv_cache = None
+    else:
+        buf = jnp.concatenate([cache["conv"], a], axis=1)  # [B,W,D]
+        c = jnp.einsum("bwd,wd->bd", buf, p[f"{prefix}.conv"].astype(x.dtype))[:, None]
+        conv_cache = buf[:, 1:]
+    c = jax.nn.silu(c)
+    q = jnp.einsum("bsd,de->bse", c, p[f"{prefix}.wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", c, p[f"{prefix}.wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", a, p[f"{prefix}.wv"].astype(x.dtype))
+    gi = jnp.einsum("bsd,dh->bsh", xn, p[f"{prefix}.wi"].astype(x.dtype)) + p[
+        f"{prefix}.bi"
+    ].astype(x.dtype)
+    gf = jnp.einsum("bsd,dh->bsh", xn, p[f"{prefix}.wf"].astype(x.dtype)) + p[
+        f"{prefix}.bf"
+    ].astype(x.dtype)
+    logi = gi.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(gf.astype(jnp.float32))
+
+    qh = q.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    kh = k.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    vh = v.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    if cache is None:
+        kf = kh.astype(jnp.float32)
+        vf = vh.astype(jnp.float32)
+        li = logi.transpose(0, 2, 1)
+        lf = logf.transpose(0, 2, 1)
+        h = mlstm_parallel(qh.astype(jnp.float32), kf, vf, li, lf)
+        new_cache = None
+        if return_state:
+            st = mlstm_final_state(kf, vf, li, lf)
+            new_cache = {
+                "state": st,
+                "conv": a[:, -(p[f"{prefix}.conv"].shape[0] - 1) :, :],
+            }
+    else:
+        st, h1 = mlstm_step(
+            cache["state"],
+            qh[:, :, 0].astype(jnp.float32),
+            kh[:, :, 0].astype(jnp.float32),
+            vh[:, :, 0].astype(jnp.float32),
+            logi[:, 0],
+            logf[:, 0],
+        )
+        h = h1[:, :, None, :]
+        new_cache = {"state": st, "conv": conv_cache}
+    hs = h.transpose(0, 2, 1, 3).reshape(B, S, D).astype(x.dtype)
+    hs = rmsnorm(hs, p[f"{prefix}.mn"])  # per-head norm approximated group-wise
+    out = hs * jax.nn.silu(b)
+    return jnp.einsum("bse,ed->bsd", out, p[f"{prefix}.wd"].astype(x.dtype)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_block(cfg, p, prefix, x, *, cache=None, return_state: bool = False):
+    """sLSTM residual block with per-head block-diagonal recurrence.
+    Training: lax.scan over time. Decode: single step."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    xn = rmsnorm(x, p[f"{prefix}.ln"])
+    # input contributions for the 4 gates: [B,S,4D]
+    zx = jnp.einsum("bsd,de->bse", xn, p[f"{prefix}.wzifo"].astype(x.dtype)) + p[
+        f"{prefix}.bzifo"
+    ].astype(x.dtype)
+    r = p[f"{prefix}.r"].astype(jnp.float32)  # [4,H,dh,dh] recurrent per head
+
+    def step(carry, zt):
+        c, n, m, h = carry  # [B,H,dh] each, fp32
+        rec = jnp.einsum("bhk,ghkl->bghl", h, r)  # [B,4,H,dh]
+        zt = zt.astype(jnp.float32).reshape(B, 4, H, dh) + rec
+        z, i, f, o = zt[:, 0], zt[:, 1], zt[:, 2], zt[:, 3]
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        logf = jax.nn.log_sigmoid(f)
+        m_new = jnp.maximum(logf + m, i)
+        ia = jnp.exp(i - m_new)
+        fa = jnp.exp(logf + m - m_new)
+        c_new = fa * c + ia * z
+        n_new = jnp.maximum(fa * n + ia, jnp.exp(-m_new))
+        h_new = o * (c_new / n_new)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if cache is None:
+        z0 = jnp.zeros((B, H, dh), jnp.float32)
+        carry0 = (z0, jnp.ones_like(z0), jnp.zeros_like(z0), z0)
+        carry, hs = jax.lax.scan(step, carry0, zx.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+        new_cache = (
+            {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+            if return_state
+            else None
+        )
+    else:
+        carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+        carry, h1 = step(carry, zx[:, 0])
+        hs = h1.reshape(B, 1, D).astype(x.dtype)
+        new_cache = {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+    hs = rmsnorm(hs, p[f"{prefix}.mn"])
+    return jnp.einsum("bse,ed->bsd", hs, p[f"{prefix}.wd"].astype(x.dtype)), new_cache

@@ -1,0 +1,42 @@
+"""Slot-managed KV-cache pool for a serving pod.
+
+Slots are the serving analogue of the paper's record locks: a request holds
+its slots from reservation until release, and the *occupancy window* is the
+lock-contention span the GeoTP router minimizes (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models import stack
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class SlotPool:
+    cfg: ModelConfig
+    n_slots: int
+    cache_len: int
+    free: list = None
+    cache: dict = None  # batched decode cache over all slots
+
+    def __post_init__(self):
+        self.free = list(range(self.n_slots))
+        self.cache = stack.init_cache(self.cfg, self.n_slots, self.cache_len)
+
+    def reserve(self, n: int = 1) -> list | None:
+        """Acquire n slots ('locks'); None if unavailable."""
+        if len(self.free) < n:
+            return None
+        out = [self.free.pop() for _ in range(n)]
+        return out
+
+    def release(self, slots: list) -> None:
+        self.free.extend(slots)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self.free) / max(self.n_slots, 1)

@@ -1,0 +1,277 @@
+"""Integration + invariant tests for the discrete-event engine.
+
+These verify the paper's protocol semantics end-to-end on small workloads:
+atomicity, exact single-transaction latency accounting for every commit
+protocol, the decentralized-prepare round-trip saving, staggering behaviour,
+determinism and state-machine health (noops == 0).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, protocol, workloads
+from repro.core.netmodel import make_net_params
+
+
+def _bank_single_txn(keys, writes, dss, num_ds=2, rounds=None, terminals=1, copies=8):
+    """A bank where every slot is the same explicit transaction."""
+    K = len(keys)
+    T, N = terminals, copies
+    key = np.tile(np.asarray(keys, np.int32), (T, N, 1))
+    write = np.tile(np.asarray(writes, bool), (T, N, 1))
+    ds = np.tile(np.asarray(dss, np.int8), (T, N, 1))
+    rnd = np.zeros((T, N, K), np.int8) if rounds is None else np.tile(
+        np.asarray(rounds, np.int8), (T, N, 1)
+    )
+    return workloads.Bank(
+        key=jnp.asarray(key),
+        write=jnp.asarray(write),
+        ds=jnp.asarray(ds),
+        round_id=jnp.asarray(rnd),
+        valid=jnp.ones((T, N, K), bool),
+        is_dist=jnp.asarray(len(set(dss)) > 1).reshape(1, 1).repeat(T, 0).repeat(N, 1),
+        num_records=1000,
+        num_ds=num_ds,
+    )
+
+
+def _run(proto, bank, tau_ms, horizon_s=4.0, terminals=1, jitter=0, **kw):
+    net = make_net_params(tau_ms, tau_ds_ms=kw.pop("tau_ds_ms", None))
+    cfg = engine.SimConfig(
+        terminals=terminals,
+        max_ops=bank.key.shape[-1],
+        num_ds=len(tau_ms),
+        bank_txns=bank.key.shape[1],
+        proto=proto,
+        warmup_us=0,
+        horizon_us=int(horizon_s * 1e6),
+        **kw,
+    )
+    state, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=jitter)
+    return state, m
+
+
+TAU = (10.0, 100.0)  # the paper's motivating example (§II)
+
+
+def _first_commit_latency_ms(m):
+    return m["avg_latency_ms"]
+
+
+class TestProtocolLatency:
+    """Exact latency accounting per protocol, motivating-example topology.
+
+    One terminal, one distributed txn over DS1 (10ms) + DS2 (100ms),
+    exec=100µs/op, flush=1ms, lan=0.2ms. No contention.
+    """
+
+    BANK = staticmethod(
+        lambda: _bank_single_txn(keys=[1, 501], writes=[True, True], dss=[0, 1])
+    )
+
+    def test_ssp_three_wan_rounds(self):
+        # SSP: exec round + prepare round + commit round; dominated by DS2:
+        # 100 (exec) + 1(flush...) + 100 (prepare) + 1 + 100 (commit)/... the
+        # terminal latency counts up to the last ACK: 3 full RTTs of 100ms.
+        _, m = _run(protocol.SSP, self.BANK(), TAU)
+        lat = _first_commit_latency_ms(m)
+        assert 300 <= lat <= 312, lat
+
+    def test_geotp_o1_two_wan_rounds(self):
+        # Decentralized prepare folds the prepare round into execution:
+        # exec+prepare round (100) + commit round (100) => ~2 RTTs.
+        _, m = _run(protocol.GEOTP_O1, self.BANK(), TAU)
+        lat = _first_commit_latency_ms(m)
+        assert 200 <= lat <= 212, lat
+
+    def test_geotp_stagger_does_not_increase_latency(self):
+        # Eq.(2) constraint: latency with O2 == latency with O1 alone.
+        _, m1 = _run(protocol.GEOTP_O1, self.BANK(), TAU)
+        _, m2 = _run(protocol.GEOTP_O12, self.BANK(), TAU)
+        assert m2["avg_latency_ms"] <= m1["avg_latency_ms"] + 1.0
+
+    def test_geotp_stagger_reduces_lcs(self):
+        _, m1 = _run(protocol.GEOTP_O1, self.BANK(), TAU)
+        _, m2 = _run(protocol.GEOTP_O12, self.BANK(), TAU)
+        # O1: DS1 span ~ (100-10/2...) ≈ 145+e; O2: DS1 span ≈ 10+e.
+        # average over both subtxns must drop by ~45ms.
+        assert m2["avg_lcs_ms"] < m1["avg_lcs_ms"] - 30
+
+    def test_ssp_local_two_rounds(self):
+        # no prepare at all: exec round + commit round.
+        _, m = _run(protocol.SSP_LOCAL, self.BANK(), TAU)
+        lat = _first_commit_latency_ms(m)
+        assert 198 <= lat <= 210, lat
+
+    def test_centralized_one_phase_commit(self):
+        # Single-DS txn: exec round + direct commit round on DS1 (10ms RTT).
+        bank = _bank_single_txn(keys=[1, 2], writes=[True, False], dss=[0, 0])
+        for proto in (protocol.SSP, protocol.GEOTP):
+            _, m = _run(proto, bank, TAU)
+            lat = _first_commit_latency_ms(m)
+            assert 20 <= lat <= 28, (proto.name, lat)
+
+    def test_scalardb_per_op_round_trips(self):
+        # middleware CC: each op pays a WAN RTT -> far slower than SSP.
+        _, m_sdb = _run(protocol.SCALARDB, self.BANK(), TAU)
+        _, m_ssp = _run(protocol.SSP, self.BANK(), TAU)
+        assert m_sdb["avg_latency_ms"] > m_ssp["avg_latency_ms"] + 50
+
+    def test_all_commit_no_aborts_no_noops(self):
+        for proto in protocol.PRESETS.values():
+            _, m = _run(proto, self.BANK(), TAU)
+            assert m["noops"] == 0, proto.name
+            assert m["commits"] > 0, proto.name
+            assert m["aborts"] == 0, proto.name
+
+
+class TestContention:
+    def test_blocking_and_fifo(self):
+        # Two terminals, same exclusive key on DS1 -> serialized commits.
+        bank = _bank_single_txn(
+            keys=[7, 501], writes=[True, True], dss=[0, 1], terminals=2
+        )
+        _, m = _run(protocol.GEOTP_O1, bank, TAU, terminals=2)
+        assert m["commits"] > 2
+        assert m["aborts"] == 0
+        assert m["noops"] == 0
+
+    def test_shared_locks_do_not_block(self):
+        bank = _bank_single_txn(
+            keys=[7, 501], writes=[False, False], dss=[0, 1], terminals=4
+        )
+        _, mS = _run(protocol.SSP, bank, TAU, terminals=4)
+        bankX = _bank_single_txn(
+            keys=[7, 501], writes=[True, True], dss=[0, 1], terminals=4
+        )
+        _, mX = _run(protocol.SSP, bankX, TAU, terminals=4)
+        # readers scale, writers serialize
+        assert mS["throughput_tps"] > mX["throughput_tps"] * 1.5
+        assert mS["avg_latency_ms"] < mX["avg_latency_ms"]
+
+    @staticmethod
+    def _deadlock_bank(ds_a=0, ds_b=0, num_ds=1, copies=16):
+        """Hold-and-wait via interactive rounds — a guaranteed deadlock:
+        T0 holds a (round 0) then wants b (round 1); T1 holds b then wants a."""
+        K = 2
+        key = np.zeros((2, copies, K), np.int32)
+        key[0, :, 0], key[0, :, 1] = 11, 12
+        key[1, :, 0], key[1, :, 1] = 12, 11
+        ds = np.zeros((2, copies, K), np.int8)
+        ds[0, :, 0], ds[0, :, 1] = ds_a, ds_b
+        ds[1, :, 0], ds[1, :, 1] = ds_b, ds_a
+        rnd = np.tile(np.asarray([0, 1], np.int8), (2, copies, 1))
+        return workloads.Bank(
+            key=jnp.asarray(key),
+            write=jnp.ones((2, copies, K), bool),
+            ds=jnp.asarray(ds),
+            round_id=jnp.asarray(rnd),
+            valid=jnp.ones((2, copies, K), bool),
+            is_dist=jnp.asarray(np.full((2, copies), ds_a != ds_b)),
+            num_records=1000,
+            num_ds=num_ds,
+        )
+
+    def test_lock_timeout_aborts_resolve_deadlock(self):
+        bank = self._deadlock_bank()
+        proto = dataclasses.replace(protocol.SSP, lock_timeout_us=300_000)
+        _, m = _run(proto, bank, (10.0,), terminals=2, horizon_s=6.0)
+        assert m["noops"] == 0
+        assert m["aborts"] > 0  # the deadlock fired and the timeout broke it
+        assert m["commits"] > 0  # progress resumes after randomized backoff
+
+    def test_early_abort_faster_than_dm_routed(self):
+        # Distributed deadlock across DS0/DS1: with early abort the geo-agent
+        # notifies its peer directly (DS->DS half-round) instead of 1.5 WAN
+        # rounds through the DM -> locks free sooner -> more total progress.
+        bank = self._deadlock_bank(ds_a=0, ds_b=1, num_ds=2, copies=64)
+        base = dataclasses.replace(protocol.GEOTP_O1, lock_timeout_us=150_000)
+        no_ea = dataclasses.replace(base, early_abort=False)
+        _, m_ea = _run(base, bank, TAU, terminals=2, horizon_s=8.0)
+        _, m_no = _run(no_ea, bank, TAU, terminals=2, horizon_s=8.0)
+        assert m_ea["noops"] == 0 and m_no["noops"] == 0
+        assert m_ea["aborts"] > 0
+        # early abort frees peer locks in fewer WAN legs => more txns COMMIT
+        assert m_ea["commits"] > m_no["commits"]
+
+
+class TestRounds:
+    def test_interactive_rounds_add_round_trips(self):
+        b1 = _bank_single_txn(
+            keys=[1, 2, 501, 502], writes=[True] * 4, dss=[0, 0, 1, 1]
+        )
+        b2 = _bank_single_txn(
+            keys=[1, 2, 501, 502],
+            writes=[True] * 4,
+            dss=[0, 0, 1, 1],
+            rounds=[0, 1, 0, 1],  # both data sources active in both rounds
+        )
+        _, m1 = _run(protocol.GEOTP, b1, TAU)
+        _, m2 = _run(protocol.GEOTP, b2, TAU)
+        # the extra interactive round adds ~a full slow-DS round trip (100ms)
+        assert m2["avg_latency_ms"] > m1["avg_latency_ms"] + 80
+        assert m2["noops"] == 0
+
+
+class TestDeterminism:
+    def test_bitwise_reproducible(self):
+        cfg_w = workloads.YCSBConfig(
+            num_ds=2, records_per_node=500, ops_per_txn=4, dist_ratio=0.5, theta=0.9
+        )
+        bank = workloads.make_ycsb_bank(cfg_w, terminals=8, txns_per_terminal=32)
+        runs = []
+        for _ in range(2):
+            _, m = _run(
+                protocol.GEOTP, bank, TAU, terminals=8, horizon_s=3.0, jitter=100
+            )
+            runs.append((m["commits"], m["aborts"], m["events"], m["avg_latency_ms"]))
+        assert runs[0] == runs[1]
+
+
+class TestYCSBEndToEnd:
+    def test_geotp_beats_ssp_medium_contention(self):
+        # paper-scale key space (scaled 1M -> 100k records/node, fewer
+        # terminals): medium contention without distributed-deadlock collapse.
+        cfg_w = workloads.YCSBConfig(
+            num_ds=4, records_per_node=100_000, ops_per_txn=5, dist_ratio=0.3, theta=0.9
+        )
+        bank = workloads.make_ycsb_bank(cfg_w, terminals=32, txns_per_terminal=192)
+        net = make_net_params()
+        res = {}
+        for name in ("ssp", "geotp"):
+            cfg = engine.SimConfig(
+                terminals=32,
+                max_ops=5,
+                num_ds=4,
+                bank_txns=192,
+                proto=protocol.PRESETS[name],
+                warmup_us=2_000_000,
+                horizon_us=10_000_000,
+            )
+            _, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds)
+            assert m["noops"] == 0
+            res[name] = m
+        assert res["geotp"]["throughput_tps"] > res["ssp"]["throughput_tps"] * 1.1
+        assert res["geotp"]["avg_lcs_ms"] < res["ssp"]["avg_lcs_ms"]
+
+
+class TestTPCC:
+    def test_tpcc_runs_and_commits(self):
+        cfg_t = workloads.TPCCConfig(num_ds=2, warehouses_per_node=2, dist_ratio=0.3)
+        bank, ttype = workloads.make_tpcc_bank(cfg_t, terminals=8, txns_per_terminal=64)
+        net = make_net_params((0.0, 27.0))
+        cfg = engine.SimConfig(
+            terminals=8,
+            max_ops=workloads.TPCC_MAX_OPS,
+            num_ds=2,
+            bank_txns=64,
+            proto=protocol.GEOTP,
+            warmup_us=500_000,
+            horizon_us=4_000_000,
+        )
+        _, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds)
+        assert m["noops"] == 0
+        assert m["commits"] > 10

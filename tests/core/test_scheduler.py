@@ -1,0 +1,123 @@
+"""Property + unit tests for the latency-aware scheduler math (Eq.1-3, 8, 9)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduler as sched
+
+
+def test_eq3_paper_example():
+    # §II/§IV-B: tau = 10ms vs 100ms -> fast DS postponed by 90ms.
+    tau = jnp.asarray([10_000, 100_000], jnp.int32)
+    inv = jnp.asarray([True, True])
+    off = sched.stagger_offsets(tau, inv)
+    np.testing.assert_array_equal(np.asarray(off), [90_000, 0])
+
+
+def test_eq3_uninvolved_zero():
+    tau = jnp.asarray([10_000, 100_000, 50_000], jnp.int32)
+    inv = jnp.asarray([True, False, True])
+    off = sched.stagger_offsets(tau, inv)
+    assert off[1] == 0
+    np.testing.assert_array_equal(np.asarray(off), [40_000, 0, 0])
+
+
+def test_eq8_lel_fold_in():
+    # Eq.(8): LEL shifts the stagger.
+    tau = jnp.asarray([10_000, 100_000], jnp.int32)
+    lel = jnp.asarray([30_000, 0], jnp.int32)
+    inv = jnp.asarray([True, True])
+    off = sched.stagger_offsets(tau, inv, lel)
+    np.testing.assert_array_equal(np.asarray(off), [60_000, 0])
+
+
+def test_lcs_matches_motivating_example():
+    # Fig 4a/4c: with postponement the fast DS's span becomes its own RTT.
+    tau = jnp.asarray([10_000, 100_000], jnp.int32)
+    inv = jnp.asarray([True, True])
+    off = sched.stagger_offsets(tau, inv)
+    lcs = sched.lock_contention_span(tau, inv, off)
+    np.testing.assert_array_equal(np.asarray(lcs), [10_000, 100_000])
+    # without postponement both spans are the max RTT
+    lcs0 = sched.lock_contention_span(tau, inv, jnp.zeros_like(off))
+    np.testing.assert_array_equal(np.asarray(lcs0), [100_000, 100_000])
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    tau=st.lists(st.integers(0, 500_000), min_size=2, max_size=8),
+    lel_on=st.booleans(),
+    data=st.data(),
+)
+def test_stagger_invariants(tau, lel_on, data):
+    """Eq.(2)/Eq.(7) constraint: offset + cost <= max cost; slowest never
+    postponed; offsets nonnegative; uninvolved zero."""
+    d = len(tau)
+    inv = data.draw(st.lists(st.booleans(), min_size=d, max_size=d))
+    if not any(inv):
+        inv[0] = True
+    lel = data.draw(st.lists(st.integers(0, 300_000), min_size=d, max_size=d)) if lel_on else None
+    tau_a = jnp.asarray(tau, jnp.int32)
+    inv_a = jnp.asarray(inv)
+    lel_a = jnp.asarray(lel, jnp.int32) if lel_on else None
+    off = np.asarray(sched.stagger_offsets(tau_a, inv_a, lel_a))
+    cost = np.asarray(tau) + (np.asarray(lel) if lel_on else 0)
+    cmax = cost[np.asarray(inv)].max()
+    assert (off >= 0).all()
+    assert (off[~np.asarray(inv)] == 0).all()
+    # constraint: end time never exceeds the original critical path
+    assert (off[np.asarray(inv)] + cost[np.asarray(inv)] <= cmax).all()
+    # slowest involved participant is never postponed
+    slow = np.argmax(np.where(np.asarray(inv), cost, -1))
+    assert off[slow] == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    c=st.lists(st.integers(0, 1000), min_size=1, max_size=16),
+    data=st.data(),
+)
+def test_abort_probability_bounds_and_monotonicity(c, data):
+    k = len(c)
+    t = [ci + data.draw(st.integers(0, 100)) for ci in c]
+    a = data.draw(st.lists(st.integers(0, 50), min_size=k, max_size=k))
+    valid = jnp.ones((k,), bool)
+    pr = float(
+        sched.abort_probability(
+            jnp.asarray(c, jnp.int32), jnp.asarray(t, jnp.int32), jnp.asarray(a, jnp.int32), valid
+        )
+    )
+    assert 0.0 <= pr <= 1.0
+    # more queued transactions => abort probability cannot decrease
+    a2 = jnp.asarray(a, jnp.int32) + 5
+    pr2 = float(
+        sched.abort_probability(
+            jnp.asarray(c, jnp.int32), jnp.asarray(t, jnp.int32), a2, valid
+        )
+    )
+    assert pr2 >= pr - 1e-6
+
+
+def test_abort_probability_cold_records_zero():
+    # untouched records (t_cnt=0) must not force aborts
+    z = jnp.zeros((4,), jnp.int32)
+    pr = sched.abort_probability(z, z, z, jnp.ones((4,), bool))
+    assert float(pr) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_admission_decision():
+    blocked = jnp.asarray(2, jnp.int32)
+    block, abort = sched.admission_decision(
+        jnp.float32(0.9), jnp.float32(0.5), blocked, max_blocked=5
+    )
+    assert bool(block) and not bool(abort)
+    block, abort = sched.admission_decision(
+        jnp.float32(0.9), jnp.float32(0.5), jnp.asarray(5, jnp.int32), max_blocked=5
+    )
+    assert bool(abort) and not bool(block)
+    block, abort = sched.admission_decision(
+        jnp.float32(0.1), jnp.float32(0.5), blocked, max_blocked=5
+    )
+    assert not bool(abort) and not bool(block)

@@ -1,0 +1,164 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes kernel bodies in Python on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode
+from repro.kernels.decode_attention.ref import decode_ref
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.geo_schedule.ops import schedule_batch
+from repro.kernels.geo_schedule.ref import geo_schedule_ref
+from repro.kernels.mlstm.ops import mlstm
+from repro.kernels.mlstm.ref import mlstm_ref
+from repro.kernels.rglru.ops import rglru
+from repro.kernels.rglru.ref import rglru_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dt):
+    return TOL[dt]
+
+
+FLASH_CASES = [
+    # (B, S, H, KV, dh, causal, window, chunk_local)
+    (2, 256, 4, 2, 64, True, 0, False),
+    (1, 512, 4, 4, 128, True, 128, False),
+    (2, 256, 8, 2, 120, True, 64, True),  # unaligned head_dim (danube)
+    (1, 128, 2, 1, 64, False, 0, False),  # MQA encoder (non-causal)
+    (1, 384, 6, 6, 32, True, 96, False),  # odd block/sequence ratios
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    B, S, H, KV, dh, causal, window, cl = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, dh), dtype)
+    out = mha(q, k, v, causal=causal, window=window, chunk_local=cl, bq=128, bk=128)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        window=window,
+        chunk_local=cl,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=_tol(dtype), rtol=_tol(dtype)
+    )
+
+
+DECODE_CASES = [
+    (2, 1024, 8, 2, 64),
+    (4, 512, 4, 4, 128),
+    (1, 2048, 16, 1, 120),  # MQA, unaligned head dim (recurrentgemma)
+    (3, 768, 6, 3, 64),  # non-pow2 everything
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_vs_ref(case, dtype):
+    B, Sc, H, KV, dh = case
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, Sc, KV, dh), dtype)
+    v = jax.random.normal(ks[2], (B, Sc, KV, dh), dtype)
+    pos = jax.random.randint(ks[3], (B,), 1, Sc)
+    valid = jnp.arange(Sc)[None, :] <= pos[:, None]
+    out = decode(q, k, v, valid)
+    ref = decode_ref(q, k, v, valid)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=_tol(dtype), rtol=_tol(dtype)
+    )
+
+
+RGLRU_CASES = [(2, 256, 128), (1, 512, 512), (3, 128, 96)]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_vs_ref(case, dtype):
+    B, S, E = case
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    # realistic decay range: log_a in [-0.2, 0) keeps long memory
+    log_a = -jnp.exp(jax.random.normal(ks[0], (B, S, E))) * 0.05
+    gx = jax.random.normal(ks[1], (B, S, E), dtype)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1 - a * a, 0, 1)) * gx.astype(jnp.float32)
+    out = rglru(log_a, gx)
+    ref = rglru_ref(log_a, b.astype(dtype))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref, np.float32),
+        atol=5 * _tol(dtype),
+        rtol=5 * _tol(dtype),
+    )
+
+
+MLSTM_CASES = [(1, 2, 256, 64), (2, 4, 128, 128), (1, 1, 512, 32)]
+
+
+@pytest.mark.parametrize("case", MLSTM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mlstm_vs_ref(case, dtype):
+    B, H, S, dh = case
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q = jax.random.normal(ks[0], (B, H, S, dh), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, dh), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, dh), dtype)
+    logi = jax.random.normal(ks[3], (B, H, S)) * 0.5
+    logf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, H, S)) + 2.0)
+    out = mlstm(q, k, v, logi, logf, bq=64, bk=64)
+    ref = mlstm_ref(q, k, v, logi, logf)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref, np.float32),
+        atol=10 * _tol(dtype),
+        rtol=10 * _tol(dtype),
+    )
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 4, 8), (256, 8, 16), (100, 3, 5)])
+def test_geo_schedule_vs_ref(n, d, k):
+    ks = jax.random.split(jax.random.PRNGKey(4), 7)
+    tau = jax.random.randint(ks[0], (n, d), 0, 300_000)
+    lel = jax.random.randint(ks[1], (n, d), 0, 50_000)
+    inv = jax.random.bernoulli(ks[2], 0.6, (n, d))
+    inv = inv.at[:, 0].set(True)  # every txn touches at least one DS
+    c = jax.random.randint(ks[3], (n, k), 0, 100)
+    t = c + jax.random.randint(ks[4], (n, k), 0, 50)
+    a = jax.random.randint(ks[5], (n, k), 0, 10)
+    valid = jax.random.bernoulli(ks[6], 0.8, (n, k))
+    off, p = schedule_batch(tau, lel, inv, c, t, a, valid)
+    off_r, p_r = geo_schedule_ref(tau, lel, inv, c, t, a, valid)
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(off_r))
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_r), atol=1e-6)
+    # invariants: offsets respect the Eq.(2)/Eq.(7) constraint
+    cost = np.asarray(tau + lel)
+    cmax = np.where(np.asarray(inv), cost, -1).max(axis=1)
+    assert ((np.asarray(off) + cost)[np.asarray(inv)] <= cmax.repeat(d).reshape(n, d)[np.asarray(inv)] + 0).all()
+
+
+def test_flash_attention_matches_model_reference():
+    """The kernel agrees with the model's chunked-attention path too."""
+    from repro.models.attention import chunked_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    B, S, H, KV, dh = 2, 256, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32)
+    out_kernel = mha(q, k, v, causal=True)
+    out_model = chunked_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out_kernel), np.asarray(out_model), atol=2e-5, rtol=2e-5
+    )

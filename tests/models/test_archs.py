@@ -1,0 +1,192 @@
+"""Per-architecture smoke tests (reduced configs, CPU):
+
+  * forward: output shapes + finite loss
+  * one train step: params update, loss finite, grads flow
+  * prefill == train forward at the last position
+  * decode(cache) == train forward on the extended sequence
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import model, stack
+from repro.models.schema import init_params
+from repro.optim import adamw
+
+ARCHS = registry.names()
+B, S = 2, 64
+
+
+def _batch(cfg, key, with_labels=True, n_tokens=S):
+    toks = jax.random.randint(key, (B, n_tokens), 0, cfg.vocab)
+    if cfg.is_encdec:
+        b = {
+            "frames": jax.random.normal(key, (B, S, cfg.frontend_dim), jnp.bfloat16),
+            "dec_tokens": toks[:, :16],
+        }
+        if with_labels:
+            b["dec_labels"] = toks[:, :16]
+        return b
+    if cfg.frontend == "vision":
+        P = 8
+        b = {
+            "patches": jax.random.normal(key, (B, P, cfg.frontend_dim), jnp.bfloat16),
+            "tokens": toks[:, : n_tokens - P],
+        }
+        if with_labels:
+            b["labels"] = toks[:, : n_tokens - P]
+        return b
+    b = {"tokens": toks[:, :n_tokens]}
+    if with_labels:
+        b["labels"] = toks[:, :n_tokens]
+    return b
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = registry.reduced(arch)
+    params = init_params(stack.build_schema(cfg), rng)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits = stack.forward_train(cfg, params, batch)
+    assert logits.shape[-1] == cfg.vocab
+    assert logits.shape[0] == B
+    loss = model.loss_fn(cfg, params, batch)
+    assert jnp.isfinite(loss), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch, rng):
+    cfg = registry.reduced(arch)
+    params = init_params(stack.build_schema(cfg), rng)
+    opt = adamw.AdamWConfig(lr=1e-3, total_steps=10, warmup_steps=1)
+    step = model.make_train_step(cfg, opt)
+    opt_state = adamw.init_state(params)
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+    new_params, new_opt, metrics = jax.jit(step)(params, opt_state, batch)
+    assert jnp.isfinite(metrics["loss"]), arch
+    assert float(metrics["grad_norm"]) > 0, arch
+    # at least one weight moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved, arch
+    assert int(new_opt["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode_consistency(arch, rng):
+    cfg = registry.reduced(arch)
+    params = init_params(stack.build_schema(cfg), rng)
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab)
+    # recurrent stacks accumulate a little more bf16 noise over depth
+    tol = 0.08 if any(m in ("mlstm", "slstm", "rglru") for m, _ in cfg.pattern) else 0.05
+
+    if cfg.is_encdec:
+        pre = {
+            "frames": jax.random.normal(key, (B, S, cfg.frontend_dim), jnp.bfloat16),
+            "dec_tokens": toks[:, :16],
+        }
+        full = stack.forward_train(cfg, params, pre)
+        lp, cache = stack.forward_prefill(cfg, params, pre, cache_len=32)
+        np.testing.assert_allclose(
+            np.asarray(full[:, 15], np.float32), np.asarray(lp, np.float32), rtol=tol, atol=tol
+        )
+        lg, _ = stack.forward_decode(
+            cfg, params, toks[:, 16], jnp.full((B,), 16, jnp.int32), cache
+        )
+        full2 = stack.forward_train(cfg, params, {**pre, "dec_tokens": toks[:, :17]})
+        np.testing.assert_allclose(
+            np.asarray(full2[:, 16], np.float32), np.asarray(lg, np.float32), rtol=tol, atol=tol
+        )
+        return
+
+    if cfg.frontend == "vision":
+        P = 8
+        patches = jax.random.normal(key, (B, P, cfg.frontend_dim), jnp.bfloat16)
+        pre = {"patches": patches, "tokens": toks[:, : S - P]}
+        full = stack.forward_train(cfg, params, pre)
+        lp, cache = stack.forward_prefill(cfg, params, pre, cache_len=S + 8)
+        np.testing.assert_allclose(
+            np.asarray(full[:, -1], np.float32), np.asarray(lp, np.float32), rtol=tol, atol=tol
+        )
+        lg, _ = stack.forward_decode(
+            cfg, params, toks[:, S - P], jnp.full((B,), S, jnp.int32), cache
+        )
+        full2 = stack.forward_train(
+            cfg, params, {"patches": patches, "tokens": toks[:, : S - P + 1]}
+        )
+        np.testing.assert_allclose(
+            np.asarray(full2[:, -1], np.float32), np.asarray(lg, np.float32), rtol=tol, atol=tol
+        )
+        return
+
+    pre = {"tokens": toks[:, :S]}
+    full = stack.forward_train(cfg, params, pre)
+    lp, cache = stack.forward_prefill(cfg, params, pre, cache_len=S + 8)
+    np.testing.assert_allclose(
+        np.asarray(full[:, -1], np.float32), np.asarray(lp, np.float32), rtol=tol, atol=tol
+    )
+    lg, _ = stack.forward_decode(
+        cfg, params, toks[:, S], jnp.full((B,), S, jnp.int32), cache
+    )
+    full2 = stack.forward_train(cfg, params, {"tokens": toks[:, : S + 1]})
+    np.testing.assert_allclose(
+        np.asarray(full2[:, -1], np.float32), np.asarray(lg, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_sliding_window_masks_distant_tokens():
+    """A token beyond the window must not influence attention output."""
+    cfg = registry.reduced("h2o-danube-3-4b")
+    params = init_params(stack.build_schema(cfg), jax.random.PRNGKey(0))
+    t1 = jax.random.randint(jax.random.PRNGKey(4), (1, S), 0, cfg.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 7) % cfg.vocab)  # perturb far-away token
+    l1 = stack.forward_train(cfg, params, {"tokens": t1})
+    l2 = stack.forward_train(cfg, params, {"tokens": t2})
+    # window=64 >= S in reduced cfg would see it; use explicit small window
+    import dataclasses
+
+    cfg2 = dataclasses.replace(cfg, window=8)
+    l1 = stack.forward_train(cfg2, params, {"tokens": t1})
+    l2 = stack.forward_train(cfg2, params, {"tokens": t2})
+    np.testing.assert_allclose(
+        np.asarray(l1[0, -1], np.float32), np.asarray(l2[0, -1], np.float32), atol=1e-6
+    )
+
+
+def test_causality():
+    """Changing a future token must not change past logits (causal LMs)."""
+    cfg = registry.reduced("llama3.2-3b")
+    params = init_params(stack.build_schema(cfg), jax.random.PRNGKey(0))
+    t1 = jax.random.randint(jax.random.PRNGKey(5), (1, S), 0, cfg.vocab)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 3) % cfg.vocab)
+    l1 = stack.forward_train(cfg, params, {"tokens": t1})
+    l2 = stack.forward_train(cfg, params, {"tokens": t2})
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :-1], np.float32), np.asarray(l2[0, :-1], np.float32), atol=1e-6
+    )
+
+
+def test_loss_decreases_tiny_lm():
+    """~10 steps of AdamW on a repeated batch must reduce the loss."""
+    cfg = registry.reduced("llama3.2-3b")
+    params = init_params(stack.build_schema(cfg), jax.random.PRNGKey(0))
+    opt = adamw.AdamWConfig(lr=3e-3, total_steps=20, warmup_steps=2)
+    step = jax.jit(model.make_train_step(cfg, opt))
+    opt_state = adamw.init_state(params)
+    batch = _batch(cfg, jax.random.PRNGKey(6))
+    losses = []
+    for _ in range(10):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses

@@ -1,0 +1,35 @@
+"""System-level sanity: every public subsystem imports and exposes its API."""
+
+
+def test_subsystems_import():
+    from repro import __version__
+    from repro.core import engine, hotspot, netmodel, protocol, scheduler, workloads
+    from repro.configs import registry
+    from repro.data import pipeline
+    from repro.dist import checkpoint, compression, elastic, sharding
+    from repro.kernels.flash_attention import ops as fa_ops
+    from repro.kernels.decode_attention import ops as da_ops
+    from repro.kernels.geo_schedule import ops as gs_ops
+    from repro.kernels.mlstm import ops as ml_ops
+    from repro.kernels.rglru import ops as rg_ops
+    from repro.launch import mesh, roofline
+    from repro.models import attention, config, flops, layers, model, schema, stack
+    from repro.optim import adamw
+    from repro.serving import engine as serving_engine, kvcache
+
+    assert __version__
+    assert len(registry.names()) == 10
+    assert len(protocol.PRESETS) == 9
+
+
+def test_all_archs_have_config_modules():
+    import importlib
+
+    mods = [
+        "qwen2_72b", "minicpm3_4b", "h2o_danube3_4b", "llama3_2_3b", "xlstm_350m",
+        "seamless_m4t_large_v2", "mixtral_8x7b", "llama4_scout_17b_a16e",
+        "internvl2_26b", "recurrentgemma_9b",
+    ]
+    for m in mods:
+        mod = importlib.import_module(f"repro.configs.{m}")
+        assert mod.CONFIG.n_layers > 0
