@@ -1,4 +1,13 @@
-"""Shared benchmark harness: build banks, run engine presets, cache compiles."""
+"""Shared benchmark harness: build banks, run engine presets, batch sweeps.
+
+`run_point` runs one cell (kept for ad-hoc probes and state-carrying runs);
+`run_sweep` is the primary entry: it turns a whole figure grid — presets ×
+latency matrices × jitter × engine profiles × seeds — into ONE WorldSpec
+batch that compiles once and executes as a single batched device call
+(`engine.simulate_batch`). Every sweep records its aggregate events/sec and
+wall-clock into results/bench/BENCH_engine.json, which doubles as the
+perf-regression baseline for `benchmarks.run --smoke`.
+"""
 
 from __future__ import annotations
 
@@ -6,12 +15,16 @@ import json
 import pathlib
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, protocol, workloads
-from repro.core.netmodel import make_net_params
+from repro.core.netmodel import PAPER_RTT_MS, make_net_params
 
 RESULTS = pathlib.Path("results/bench")
+BENCH_FILE = RESULTS / "BENCH_engine.json"
+DEFAULT_RTT = PAPER_RTT_MS
 
 
 def save(name: str, payload) -> None:
@@ -20,11 +33,35 @@ def save(name: str, payload) -> None:
         json.dump(payload, f, indent=1, default=float)
 
 
+def load_bench() -> dict:
+    if BENCH_FILE.exists():
+        with open(BENCH_FILE) as f:
+            return json.load(f)
+    return {"sweeps": {}, "smoke": {}}
+
+
+def record_bench(tag: str, entry: dict) -> None:
+    """Merge one sweep's perf record into BENCH_engine.json."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    bench = load_bench()
+    bench.setdefault("sweeps", {})[tag] = entry
+    with open(BENCH_FILE, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+
+
+def record_smoke(entry: dict) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    bench = load_bench()
+    bench["smoke"] = entry
+    with open(BENCH_FILE, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+
+
 def run_point(
     preset: str,
     bank,
     terminals: int,
-    rtt_ms=(0.0, 27.0, 73.0, 251.0),
+    rtt_ms=DEFAULT_RTT,
     jitter_milli: int = 30,
     horizon_s: float = 10.0,
     warmup_s: float = 2.0,
@@ -58,6 +95,91 @@ def run_point(
     m["preset"] = preset
     assert m["noops"] == 0, (preset, m["noops"])
     return st, m
+
+
+def _cell_world(cell: dict) -> engine.WorldSpec:
+    return engine.make_world(
+        cell["preset"],
+        cell.get("rtt_ms", DEFAULT_RTT),
+        tau_true_us=cell.get("tau_true_us"),
+        jitter_milli=cell.get("jitter_milli", 30),
+        exec_scale_milli=cell.get("exec_scale_milli"),
+        seed=cell.get("seed", 0),
+    )
+
+
+def run_sweep(
+    tag: str,
+    cells: list,
+    bank,
+    terminals: int,
+    *,
+    banks: list | None = None,
+    horizon_s: float = 10.0,
+    warmup_s: float = 2.0,
+    strategy: str = "auto",
+    record: bool = True,
+):
+    """Run a grid of cells as one batched device call.
+
+    cells: list of dicts. Required key: "preset". Optional: rtt_ms,
+           tau_true_us, jitter_milli, exec_scale_milli, seed — anything that
+           varies across the grid. Extra keys are ignored by the engine, so a
+           cell can carry figure-level labels (theta, level, ...).
+    bank:  Bank shared by every cell, or None with `banks` given.
+    banks: optional per-cell Bank list (same shapes); batched over the sweep.
+
+    Returns (final_states [B-batched], metrics list — one dict per cell, each
+    tagged with its preset and the sweep wall time).
+    """
+    if banks is not None:
+        assert len(banks) == len(cells), "one bank per cell"
+        bank = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *banks)
+        bank_batched = True
+    else:
+        bank_batched = False
+    b0 = banks[0] if banks is not None else bank
+    num_ds = len(cells[0].get("rtt_ms", DEFAULT_RTT))
+    if cells[0].get("tau_true_us") is not None:
+        num_ds = len(cells[0]["tau_true_us"])
+    cfg = engine.SimConfig(
+        terminals=terminals,
+        max_ops=b0.key.shape[-1],
+        num_ds=num_ds,
+        bank_txns=b0.key.shape[1],
+        proto=protocol.PRESETS[cells[0]["preset"]],
+        warmup_us=int(warmup_s * 1e6),
+        horizon_us=int(horizon_s * 1e6),
+    )
+    worlds = engine.stack_worlds([_cell_world(c) for c in cells])
+    t0 = time.time()
+    states, metrics = engine.simulate_batch(
+        cfg, bank, worlds, bank_batched=bank_batched, strategy=strategy
+    )
+    wall = time.time() - t0
+    events = 0
+    for c, m in zip(cells, metrics):
+        m["preset"] = c["preset"]
+        # per-cell cost is amortized in a batched sweep; keep wall_s in the
+        # per-cell sense it had before (total grid wall goes in sweep_wall_s)
+        m["wall_s"] = round(wall / len(cells), 2)
+        m["sweep_wall_s"] = round(wall, 1)
+        events += m["events"]
+        assert m["noops"] == 0, (tag, c["preset"], m["noops"])
+    if record:
+        record_bench(
+            tag,
+            {
+                "worlds": len(cells),
+                "terminals": terminals,
+                "events": events,
+                "wall_s": round(wall, 2),
+                "events_per_sec": round(events / max(wall, 1e-9), 1),
+                "strategy": strategy,
+                "horizon_s": horizon_s,
+            },
+        )
+    return states, metrics
 
 
 def ycsb_bank(

@@ -1,16 +1,21 @@
 """Per-figure benchmark modules (one function per paper table/figure).
 
-Each returns a JSON-serializable payload saved under results/bench/ and prints
-a compact summary. Sizes are scaled to finish on CPU while preserving the
-paper's regimes (1M records/node, the Beijing/Shanghai/Singapore/London RTT
-vector, 5-op YCSB txns, serializable 2PL, 5s lock-wait timeout).
+Each figure's grid — presets × RTT vectors × contention × distributed ratio ×
+seeds — is assembled as a list of WorldSpec cells and executed by
+`common.run_sweep` as one (or a few) batched device calls: one engine compile
+per bank shape instead of one per cell. Results are JSON payloads under
+results/bench/; per-sweep throughput is recorded in BENCH_engine.json.
+
+Sizes are scaled to finish on CPU while preserving the paper's regimes (1M
+records/node, the Beijing/Shanghai/Singapore/London RTT vector, 5-op YCSB
+txns, serializable 2PL, 5s lock-wait timeout).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import run_point, save, summary_line, ycsb_bank
+from benchmarks.common import run_point, run_sweep, save, summary_line, ycsb_bank
 from repro.core import engine, protocol, workloads
 
 QUICK_T = 48  # default terminals for sweeps
@@ -19,15 +24,23 @@ QUICK_T = 48  # default terminals for sweeps
 def fig1_motivation(quick=True):
     """Centralized-txn latency vs the *other* data source's RTT (Fig 1b)."""
     out = []
-    for contention, theta in (("LC", 0.3), ("MC", 0.9)):
+    taus = (10, 25, 50, 75, 100)
+    levels = (("LC", 0.3), ("MC", 0.9))
+    cells, banks = [], []
+    for contention, theta in levels:
         bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.2, num_ds=2, records=500_000)
-        for tau2 in (10, 25, 50, 75, 100):
-            _, m = run_point("ssp", bank, QUICK_T, rtt_ms=(10.0, float(tau2)), horizon_s=8.0)
-            out.append(
-                dict(contention=contention, tau2_ms=tau2, p50_cen=m["p50_centralized_ms"],
-                     avg=m["avg_latency_ms"], tps=m["throughput_tps"])
+        for tau2 in taus:
+            cells.append(
+                dict(preset="ssp", rtt_ms=(10.0, float(tau2)), contention=contention, tau2_ms=tau2)
             )
-            print(summary_line(f"fig1 {contention} tau2={tau2}", m))
+            banks.append(bank)
+    _, ms = run_sweep("fig1", cells, None, QUICK_T, banks=banks, horizon_s=8.0)
+    for c, m in zip(cells, ms):
+        out.append(
+            dict(contention=c["contention"], tau2_ms=c["tau2_ms"], p50_cen=m["p50_centralized_ms"],
+                 avg=m["avg_latency_ms"], tps=m["throughput_tps"])
+        )
+        print(summary_line(f"fig1 {c['contention']} tau2={c['tau2_ms']}", m))
     save("fig1_motivation", out)
     return out
 
@@ -38,17 +51,19 @@ def fig5_overall(quick=True):
     terms = (16, 32, 64) if quick else (16, 32, 64, 128)
     for T in terms:
         bank = ycsb_bank(T, theta=0.9, dist_ratio=0.2)
-        for preset in ("ssp", "ssp-local", "scalardb", "geotp"):
-            _, m = run_point(preset, bank, T)
+        cells = [dict(preset=p) for p in ("ssp", "ssp-local", "scalardb", "geotp")]
+        _, ms = run_sweep(f"fig5_ycsb_T{T}", cells, bank, T)
+        for c, m in zip(cells, ms):
             out.append(dict(bench="ycsb", terminals=T, **m))
-            print(summary_line(f"fig5 ycsb T={T} {preset}", m))
+            print(summary_line(f"fig5 ycsb T={T} {c['preset']}", m))
     for T in (16, 32):
         tcfg = workloads.TPCCConfig(num_ds=4, warehouses_per_node=16, dist_ratio=0.2)
         bank, _ = workloads.make_tpcc_bank(tcfg, T, 256)
-        for preset in ("ssp", "geotp"):
-            _, m = run_point(preset, bank, T)
+        cells = [dict(preset=p) for p in ("ssp", "geotp")]
+        _, ms = run_sweep(f"fig5_tpcc_T{T}", cells, bank, T)
+        for c, m in zip(cells, ms):
             out.append(dict(bench="tpcc", terminals=T, **m))
-            print(summary_line(f"fig5 tpcc T={T} {preset}", m))
+            print(summary_line(f"fig5 tpcc T={T} {c['preset']}", m))
     save("fig5_overall", out)
     return out
 
@@ -57,17 +72,20 @@ def fig7_dist_ratio(quick=True):
     """Vary distributed-txn ratio under 3 contention levels + QURO/Chiller."""
     out = []
     ratios = (0.0, 0.2, 0.6, 1.0) if quick else (0.0, 0.2, 0.4, 0.6, 0.8, 1.0)
+    cells, banks = [], []
     for level, theta in (("low", 0.3), ("medium", 0.9), ("high", 1.2)):
         for dr in ratios:
             bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=dr)
             bank_q = ycsb_bank(QUICK_T, theta=theta, dist_ratio=dr, quro=True)
             for preset in ("ssp", "ssp-local", "chiller", "geotp"):
-                _, m = run_point(preset, bank, QUICK_T)
-                out.append(dict(level=level, dist_ratio=dr, **m))
-                print(summary_line(f"fig7 {level} dr={dr} {preset}", m))
-            _, m = run_point("quro", bank_q, QUICK_T)
-            out.append(dict(level=level, dist_ratio=dr, **m))
-            print(summary_line(f"fig7 {level} dr={dr} quro", m))
+                cells.append(dict(preset=preset, level=level, dist_ratio=dr))
+                banks.append(bank)
+            cells.append(dict(preset="quro", level=level, dist_ratio=dr))
+            banks.append(bank_q)
+    _, ms = run_sweep("fig7", cells, None, QUICK_T, banks=banks)
+    for c, m in zip(cells, ms):
+        out.append(dict(level=c["level"], dist_ratio=c["dist_ratio"], **m))
+        print(summary_line(f"fig7 {c['level']} dr={c['dist_ratio']} {c['preset']}", m))
     save("fig7_dist_ratio", out)
     return out
 
@@ -75,18 +93,23 @@ def fig7_dist_ratio(quick=True):
 def fig8_latency_cdf(quick=True):
     """Latency CDFs at 60% distributed txns (turning points, p99)."""
     out = []
+    cells, banks = [], []
     for level, theta in (("low", 0.3), ("medium", 0.9), ("high", 1.2)):
         bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.6)
         for preset in ("ssp", "ssp-local", "geotp"):
-            st, m = run_point(preset, bank, QUICK_T)
-            edges, cdf = engine.latency_cdf(np.asarray(st.hist_all))
-            _, cdf_cen = engine.latency_cdf(np.asarray(st.hist_cen))
-            out.append(
-                dict(level=level, preset=preset, p99=m["p99_ms"], p999=m["p999_ms"],
-                     edges_ms=edges.tolist(), cdf=cdf.tolist(), cdf_centralized=cdf_cen.tolist(),
-                     tps=m["throughput_tps"])
-            )
-            print(summary_line(f"fig8 {level} {preset}", m))
+            cells.append(dict(preset=preset, level=level))
+            banks.append(bank)
+    states, ms = run_sweep("fig8", cells, None, QUICK_T, banks=banks)
+    for i, (c, m) in enumerate(zip(cells, ms)):
+        st = engine.world_index(states, i)
+        edges, cdf = engine.latency_cdf(np.asarray(st.hist_all))
+        _, cdf_cen = engine.latency_cdf(np.asarray(st.hist_cen))
+        out.append(
+            dict(level=c["level"], preset=c["preset"], p99=m["p99_ms"], p999=m["p999_ms"],
+                 edges_ms=edges.tolist(), cdf=cdf.tolist(), cdf_centralized=cdf_cen.tolist(),
+                 tps=m["throughput_tps"])
+        )
+        print(summary_line(f"fig8 {c['level']} {c['preset']}", m))
     save("fig8_latency_cdf", out)
     return out
 
@@ -94,15 +117,19 @@ def fig8_latency_cdf(quick=True):
 def fig9_tpcc(quick=True):
     """TPC-C Payment-only and NewOrder-only (contention contrast)."""
     out = []
+    cells, banks = [], []
     for tname, ttype in (("payment", workloads.TPCC_PAYMENT), ("neworder", workloads.TPCC_NEWORDER)):
         tcfg = workloads.TPCCConfig(
             num_ds=4, warehouses_per_node=16, dist_ratio=0.2, only_type=ttype
         )
         bank, _ = workloads.make_tpcc_bank(tcfg, QUICK_T, 256)
         for preset in ("ssp", "chiller", "geotp"):
-            _, m = run_point(preset, bank, QUICK_T)
-            out.append(dict(txn=tname, **m))
-            print(summary_line(f"fig9 {tname} {preset}", m))
+            cells.append(dict(preset=preset, txn=tname))
+            banks.append(bank)
+    _, ms = run_sweep("fig9", cells, None, QUICK_T, banks=banks)
+    for c, m in zip(cells, ms):
+        out.append(dict(txn=c["txn"], **m))
+        print(summary_line(f"fig9 {c['txn']} {c['preset']}", m))
     save("fig9_tpcc", out)
     return out
 
@@ -111,18 +138,21 @@ def fig10_network(quick=True):
     """Sweep mean / std of WAN latency (Fig 10)."""
     out = []
     bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.2)
+    cells = []
     for mean in (20, 40, 80):  # std fixed ~ mean/2: lats mean±std
         rtt = (0.0, mean / 2.0, float(mean), mean * 1.5)
         for preset in ("ssp", "geotp"):
-            _, m = run_point(preset, bank, QUICK_T, rtt_ms=rtt)
-            out.append(dict(sweep="mean", mean_ms=mean, **m))
-            print(summary_line(f"fig10 mean={mean} {preset}", m))
+            cells.append(dict(preset=preset, rtt_ms=rtt, sweep="mean", mean_ms=mean))
     for std in (0, 20, 40):  # mean fixed 40
         rtt = (0.0, 40.0 - std / 2, 40.0, 40.0 + std)
         for preset in ("ssp", "geotp"):
-            _, m = run_point(preset, bank, QUICK_T, rtt_ms=rtt)
-            out.append(dict(sweep="std", std_ms=std, **m))
-            print(summary_line(f"fig10 std={std} {preset}", m))
+            cells.append(dict(preset=preset, rtt_ms=rtt, sweep="std", std_ms=std))
+    _, ms = run_sweep("fig10", cells, bank, QUICK_T)
+    for c, m in zip(cells, ms):
+        label = {k: c[k] for k in ("sweep", "mean_ms", "std_ms") if k in c}
+        out.append(dict(**label, **m))
+        tag = f"fig10 {c['sweep']}={c.get('mean_ms', c.get('std_ms'))} {c['preset']}"
+        print(summary_line(tag, m))
     save("fig10_network", out)
     return out
 
@@ -133,12 +163,15 @@ def fig11_dynamic(quick=True):
     rng = np.random.default_rng(7)
     trials = 5 if quick else 20
     bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.6)
+    cells = []
     for trial in range(trials):
         rtt = tuple(float(x) for x in [0.0, *sorted(rng.uniform(10, 250, 3))])
         for preset in ("ssp", "geotp"):
-            _, m = run_point(preset, bank, QUICK_T, rtt_ms=rtt, horizon_s=8.0)
-            out.append(dict(mode="random", trial=trial, rtt=rtt, **m))
-        print(f"fig11 random trial {trial} rtt={tuple(round(r) for r in rtt)} done")
+            cells.append(dict(preset=preset, rtt_ms=rtt, trial=trial))
+    _, ms = run_sweep("fig11_random", cells, bank, QUICK_T, horizon_s=8.0)
+    for c, m in zip(cells, ms):
+        out.append(dict(mode="random", trial=c["trial"], rtt=c["rtt_ms"], **m))
+    print(f"fig11 random: {trials} trials x 2 presets done")
     # online adaptivity: change tau_true every segment, carry engine state
     segs = [(0, 27, 73, 251), (0, 120, 40, 200), (0, 27, 200, 80), (0, 60, 60, 251)]
     import jax.numpy as jnp
@@ -175,12 +208,16 @@ def fig12_ablation(quick=True):
     """O1 / O1-O2 / O1-O3 vs SSP across skew (the 17.7x figure)."""
     out = []
     thetas = (0.1, 0.5, 0.9, 1.1, 1.3) if quick else (0.1, 0.3, 0.5, 0.7, 0.9, 1.1, 1.3, 1.5, 1.7)
+    cells, banks = [], []
     for theta in thetas:
         bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.5)
         for preset in ("ssp", "geotp-o1", "geotp-o1o2", "geotp"):
-            _, m = run_point(preset, bank, QUICK_T)
-            out.append(dict(theta=theta, **m))
-            print(summary_line(f"fig12 theta={theta} {preset}", m))
+            cells.append(dict(preset=preset, theta=theta))
+            banks.append(bank)
+    _, ms = run_sweep("fig12", cells, None, QUICK_T, banks=banks)
+    for c, m in zip(cells, ms):
+        out.append(dict(theta=c["theta"], **m))
+        print(summary_line(f"fig12 theta={c['theta']} {c['preset']}", m))
     save("fig12_ablation", out)
     return out
 
@@ -194,13 +231,19 @@ def table1_heterogeneous(quick=True):
         "S3-mixed": (1000, 1400, 1000, 1400),
     }
     out = []
+    cells, banks = [], []
     for sname, scale in profiles.items():
         for dr in (0.25, 0.75):
             bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=dr)
             for preset in ("ssp", "geotp"):
-                _, m = run_point(preset, bank, QUICK_T, exec_scale_milli=scale)
-                out.append(dict(scenario=sname, dist_ratio=dr, **m))
-                print(summary_line(f"table1 {sname} dr={dr} {preset}", m))
+                cells.append(
+                    dict(preset=preset, exec_scale_milli=scale, scenario=sname, dist_ratio=dr)
+                )
+                banks.append(bank)
+    _, ms = run_sweep("table1", cells, None, QUICK_T, banks=banks)
+    for c, m in zip(cells, ms):
+        out.append(dict(scenario=c["scenario"], dist_ratio=c["dist_ratio"], **m))
+        print(summary_line(f"table1 {c['scenario']} dr={c['dist_ratio']} {c['preset']}", m))
     save("table1_heterogeneous", out)
     return out
 
@@ -208,12 +251,16 @@ def table1_heterogeneous(quick=True):
 def fig13_yugabyte(quick=True):
     """Distributed-database-style baseline (async single-shard apply)."""
     out = []
+    cells, banks = [], []
     for level, theta in (("low", 0.3), ("medium", 0.9), ("high", 1.2)):
         bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.2)
         for preset in ("ssp", "geotp", "yugabyte-like"):
-            _, m = run_point(preset, bank, QUICK_T)
-            out.append(dict(level=level, **m))
-            print(summary_line(f"fig13 {level} {preset}", m))
+            cells.append(dict(preset=preset, level=level))
+            banks.append(bank)
+    _, ms = run_sweep("fig13", cells, None, QUICK_T, banks=banks)
+    for c, m in zip(cells, ms):
+        out.append(dict(level=c["level"], **m))
+        print(summary_line(f"fig13 {c['level']} {c['preset']}", m))
     save("fig13_yugabyte", out)
     return out
 
@@ -221,18 +268,23 @@ def fig13_yugabyte(quick=True):
 def fig14_txn_length(quick=True):
     """Transaction length 5..25 ops; interactive rounds 1..3."""
     out = []
-    for ops in (5, 15, 25):
+    for ops in (5, 15, 25):  # txn length changes the op-slot shape: one sweep each
         bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.2, ops=ops)
-        for preset in ("ssp", "geotp"):
-            _, m = run_point(preset, bank, QUICK_T)
+        cells = [dict(preset=p) for p in ("ssp", "geotp")]
+        _, ms = run_sweep(f"fig14_ops{ops}", cells, bank, QUICK_T)
+        for c, m in zip(cells, ms):
             out.append(dict(sweep="length", ops=ops, **m))
-            print(summary_line(f"fig14 ops={ops} {preset}", m))
+            print(summary_line(f"fig14 ops={ops} {c['preset']}", m))
+    cells, banks = [], []
     for rounds, theta in ((1, 0.3), (2, 0.3), (3, 0.3), (1, 0.9), (2, 0.9), (3, 0.9)):
         bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.2, ops=6, rounds=rounds)
         for preset in ("ssp", "geotp"):
-            _, m = run_point(preset, bank, QUICK_T)
-            out.append(dict(sweep="rounds", rounds=rounds, theta=theta, **m))
-            print(summary_line(f"fig14 rounds={rounds} th={theta} {preset}", m))
+            cells.append(dict(preset=preset, rounds=rounds, theta=theta))
+            banks.append(bank)
+    _, ms = run_sweep("fig14_rounds", cells, None, QUICK_T, banks=banks)
+    for c, m in zip(cells, ms):
+        out.append(dict(sweep="rounds", rounds=c["rounds"], theta=c["theta"], **m))
+        print(summary_line(f"fig14 rounds={c['rounds']} th={c['theta']} {c['preset']}", m))
     save("fig14_txn_length", out)
     return out
 
@@ -241,11 +293,14 @@ def fig15_multiregion(quick=True):
     """Two middleware placements (Beijing DM vs London DM)."""
     out = []
     bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.2)
+    cells = []
     for dm, rtt in (("dm1-beijing", (0.0, 27.0, 73.0, 251.0)), ("dm2-london", (251.0, 226.0, 175.0, 0.0))):
         for preset in ("ssp", "geotp"):
-            _, m = run_point(preset, bank, QUICK_T, rtt_ms=rtt)
-            out.append(dict(dm=dm, **m))
-            print(summary_line(f"fig15 {dm} {preset}", m))
+            cells.append(dict(preset=preset, rtt_ms=rtt, dm=dm))
+    _, ms = run_sweep("fig15", cells, bank, QUICK_T)
+    for c, m in zip(cells, ms):
+        out.append(dict(dm=c["dm"], **m))
+        print(summary_line(f"fig15 {c['dm']} {c['preset']}", m))
     save("fig15_multiregion", out)
     return out
 

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CI entry: pinned deps + tier-1 tests + batched-engine perf smoke.
+#
+#   scripts/ci.sh            # full tier-1 (minus slow marks) + smoke guard
+#   SKIP_TESTS=1 scripts/ci.sh   # smoke guard only
+#
+# The smoke step runs `benchmarks/run.py --smoke`: a <60s fig5 YCSB grid
+# (presets x seeds) executed as one batched device call. It asserts that
+# aggregate events/sec is reported and fails if throughput drops >30% below
+# the baseline stored in results/bench/BENCH_engine.json.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Pinned dev deps (pyproject [dev] extra). Offline containers already bake
+# the toolchain in; fall back to whatever is preinstalled.
+if ! python -c "import jax, pytest" 2>/dev/null; then
+    python -m pip install -e ".[dev]"
+else
+    python -m pip install -q -e ".[dev]" 2>/dev/null \
+        || echo "[ci] pip unavailable/offline: using preinstalled deps"
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "${SKIP_TESTS:-0}" != "1" ]; then
+    python -m pytest -x -q -m "not slow"
+fi
+
+# Perf smoke + regression guard (exits non-zero on >30% events/sec drop).
+python -m benchmarks.run --smoke | tee /tmp/smoke.out
+grep -q "events/sec" /tmp/smoke.out || {
+    echo "[ci] smoke did not report events/sec"
+    exit 1
+}
+echo "[ci] OK"

@@ -3,13 +3,23 @@
 This is the paper's experimental platform, rebuilt as a deterministic JAX
 state machine:
 
-* DM (middleware) + D data sources; int32 µs clock; every event is processed
-  by a `lax.switch` handler inside a `lax.while_loop`.
+* DM (middleware) + D data sources; int32 µs clock; events are processed by a
+  batched *drain* step inside a `lax.while_loop`: every iteration finds the
+  minimum timestamp with one fused reduction over a concatenated
+  `[T + T*D + T*K]` event-time view and then applies **all** events sharing
+  that timestamp in one vectorized pass. Event sets that could interact
+  through shared lock-table or DM state (detected by a conflict mask) fall
+  back to the seed single-event path, so drained runs are bitwise-identical
+  to one-event-per-iteration runs.
 * 2PL lock tables live at the data sources (dense arrays over the benchmark
   key space, FIFO grant by enqueue time, lock-wait-timeout aborts — the
   concurrency-control abstraction the paper's data sources expose).
 * The commit protocol, scheduling policy and heuristics are configured by
-  `repro.core.protocol.ProtocolConfig` — every baseline of §VII is a preset.
+  `repro.core.protocol.ProtocolConfig`; every baseline of §VII is a preset.
+  All protocol knobs are carried in `SimState.dyn` as *traced* scalars, so a
+  single compiled program serves every preset and `jax.vmap` can sweep
+  protocols, latency matrices, jitter and engine profiles in one device call
+  (`WorldSpec` / `simulate_batch`).
 
 Event categories:
   terminal events  — start/retry a transaction, DM commit-log flush
@@ -17,12 +27,14 @@ Event categories:
   op events        — arrival at DS, exec completion, lock-wait timeout
 
 All randomness (network jitter, admission draws) is hash-derived from event
-counters => bitwise-reproducible runs.
+counters => bitwise-reproducible runs (the drain step assigns each batched
+event the iteration number it would have had sequentially).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -31,14 +43,20 @@ import numpy as np
 
 from repro.core import hotspot as hs_mod
 from repro.core import scheduler as sched
-from repro.core.netmodel import INF_US, _hash_u32
+from repro.core.netmodel import (
+    INF_US,
+    PAPER_RTT_MS,
+    _hash_u32,
+    derive_tau_ds_us,
+    make_net_params,
+)
 from repro.core.protocol import (
     PREPARE_COORD,
     PREPARE_DECENTRAL,
     PREPARE_NONE,
-    STAGGER_NET,
-    STAGGER_NET_LEL,
+    PRESETS,
     STAGGER_NONE,
+    STAGGER_NET_LEL,
     ProtocolConfig,
 )
 from repro.core.workloads import Bank
@@ -77,22 +95,137 @@ LK_FREE, LK_SHARED, LK_X = 0, 1, 2
 HIST_BINS = 128
 _HIST_BASE_US = 100.0  # bin 0 at 100 µs, 8 bins per octave
 
+_SALT_MUL = jnp.int32(2654435761 % (2**31))
+
+
+class DynProto(NamedTuple):
+    """Dynamic (traced) protocol knobs.
+
+    Every `ProtocolConfig` field the event handlers consult lives here as a
+    scalar array rather than being baked into the compiled program: one
+    compiled engine serves all presets, and a leading batch axis turns the
+    engine into a multi-protocol sweep under `jax.vmap`.
+    """
+
+    prepare: jax.Array  # i32: PREPARE_COORD / PREPARE_DECENTRAL / PREPARE_NONE
+    stagger: jax.Array  # i32: STAGGER_NONE / STAGGER_NET / STAGGER_NET_LEL
+    admission: jax.Array  # bool (O3)
+    early_abort: jax.Array  # bool (O1 geo-agent peer abort)
+    chiller_two_stage: jax.Array  # bool
+    middleware_cc: jax.Array  # bool (ScalarDB-style per-op WAN RTT)
+    async_local_commit: jax.Array  # bool (YUGA)
+    max_blocked: jax.Array  # i32
+    admission_backoff_us: jax.Array  # i32
+    block_prob_cap: jax.Array  # f32
+    lock_timeout_us: jax.Array  # i32
+    exec_us: jax.Array  # i32
+    log_flush_us: jax.Array  # i32
+    lan_rtt_us: jax.Array  # i32
+    retry_backoff_us: jax.Array  # i32
+    max_retries: jax.Array  # i32
+
+
+def dyn_from_proto(p: ProtocolConfig) -> DynProto:
+    i32 = jnp.int32
+    return DynProto(
+        prepare=i32(p.prepare),
+        stagger=i32(p.stagger),
+        admission=jnp.asarray(p.admission),
+        early_abort=jnp.asarray(p.early_abort),
+        chiller_two_stage=jnp.asarray(p.chiller_two_stage),
+        middleware_cc=jnp.asarray(p.middleware_cc),
+        async_local_commit=jnp.asarray(p.async_local_commit),
+        max_blocked=i32(p.max_blocked),
+        admission_backoff_us=i32(p.admission_backoff_us),
+        block_prob_cap=jnp.float32(p.block_prob_cap),
+        lock_timeout_us=i32(p.lock_timeout_us),
+        exec_us=i32(p.exec_us),
+        log_flush_us=i32(p.log_flush_us),
+        lan_rtt_us=i32(p.lan_rtt_us),
+        retry_backoff_us=i32(p.retry_backoff_us),
+        max_retries=i32(p.max_retries),
+    )
+
+
+class WorldSpec(NamedTuple):
+    """One cell of an evaluation grid: every per-run dynamic input.
+
+    Unbatched leaves describe a single world; `stack_worlds` adds a leading
+    batch axis for `simulate_batch`. `seed` is an informational tag carried
+    through sweeps (the engine itself is deterministic; workload randomness
+    lives in the Bank, whose leaves may also be batched).
+    """
+
+    tau_true: jax.Array  # [D] DM<->DS RTT µs
+    tau_ds: jax.Array  # [D,D] geo-agent mesh RTT µs
+    jitter_milli: jax.Array  # scalar
+    exec_scale_milli: jax.Array  # [D] heterogeneous engine profile
+    lel_scale_milli: jax.Array  # scalar (§IV-C forecast scaling)
+    dyn: DynProto
+    seed: jax.Array  # scalar tag
+
+
+def make_world(
+    proto,
+    rtt_ms=None,
+    *,
+    tau_true_us=None,
+    tau_ds_us=None,
+    jitter_milli: int = 0,
+    exec_scale_milli=None,
+    seed: int = 0,
+) -> WorldSpec:
+    """Build a WorldSpec from a preset name / ProtocolConfig + RTT vector."""
+    if isinstance(proto, str):
+        proto = PRESETS[proto]
+    if tau_true_us is None:
+        net = make_net_params(rtt_ms if rtt_ms is not None else PAPER_RTT_MS)
+        tau_true_us = net.tau_dm
+    tau_true = jnp.asarray(tau_true_us, jnp.int32)
+    if tau_ds_us is None:
+        # geo-agent mesh always derived from tau_true itself, so
+        # caller-supplied tau_true_us stays consistent with the mesh
+        tau_ds_us = derive_tau_ds_us(tau_true)
+    if exec_scale_milli is None:
+        exec_scale_milli = jnp.full(tau_true.shape, 1000, jnp.int32)
+    return WorldSpec(
+        tau_true=tau_true,
+        tau_ds=jnp.asarray(tau_ds_us, jnp.int32),
+        jitter_milli=jnp.int32(jitter_milli),
+        exec_scale_milli=jnp.asarray(exec_scale_milli, jnp.int32),
+        lel_scale_milli=jnp.int32(proto.lel_scale_milli),
+        dyn=dyn_from_proto(proto),
+        seed=jnp.int32(seed),
+    )
+
+
+def stack_worlds(worlds) -> WorldSpec:
+    """[W_1..W_B] -> WorldSpec with a leading batch axis on every leaf."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *worlds)
+
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    """Static engine configuration (shapes + protocol)."""
+    """Static engine configuration (shapes + defaults).
+
+    `proto` is excluded from the jit compile key (`compare=False`): the
+    handlers read every protocol knob dynamically from `SimState.dyn`, so two
+    configs differing only in `proto` share one compiled program. `proto` is
+    only consulted host-side by `init_state` to populate the default knobs.
+    """
 
     terminals: int
     max_ops: int
     num_ds: int
     bank_txns: int
-    proto: ProtocolConfig
+    proto: ProtocolConfig = dataclasses.field(compare=False)
     hot_capacity: int = 8192  # hot-record table slots (paper: AVL+LRU cache)
     warmup_us: int = 2_000_000
     horizon_us: int = 12_000_000
     max_events: int = 4_000_000
     alpha_milli: int = 800  # Eq.(4) EWMA α
     beta_milli: int = 875  # network-latency EWMA (the paper's monitor)
+    drain: bool = True  # batched same-timestamp draining (False = seed path)
 
 
 class SimState(NamedTuple):
@@ -152,19 +285,27 @@ class SimState(NamedTuple):
     slot_commits: jax.Array  # [T,N] i32
     slot_aborts: jax.Array  # [T,N] i32
     slot_lat: jax.Array  # [T,N] i32 (sum of commit latencies, ms)
+    # dynamic protocol knobs (traced; see DynProto)
+    dyn: DynProto
 
 
 def init_state(
     cfg: SimConfig,
     tau_true_us,
     tau_ds_us,
-    jitter_milli: int = 0,
+    jitter_milli=0,
     exec_scale_milli=None,
+    dyn: DynProto | None = None,
+    lel_scale_milli=None,
 ) -> SimState:
     T, K, D, N = (cfg.terminals, cfg.max_ops, cfg.num_ds, cfg.bank_txns)
     i32 = jnp.int32
     if exec_scale_milli is None:
         exec_scale_milli = jnp.full((D,), 1000, i32)
+    if dyn is None:
+        dyn = dyn_from_proto(cfg.proto)
+    if lel_scale_milli is None:
+        lel_scale_milli = cfg.proto.lel_scale_milli
     # ramp terminals in over 2ms to avoid a synchronized start
     start = (jnp.arange(T, dtype=i32) * 2000) // max(T, 1)
     return SimState(
@@ -198,9 +339,9 @@ def init_state(
         tau_true=jnp.asarray(tau_true_us, i32),
         tau_est=jnp.asarray(tau_true_us, i32),
         tau_ds=jnp.asarray(tau_ds_us, i32),
-        jitter_milli=i32(jitter_milli),
+        jitter_milli=jnp.asarray(jitter_milli, i32),
         exec_scale_milli=jnp.asarray(exec_scale_milli, i32),
-        lel_scale_milli=i32(cfg.proto.lel_scale_milli),
+        lel_scale_milli=jnp.asarray(lel_scale_milli, i32),
         commits=i32(0),
         aborts=i32(0),
         commits_dist=i32(0),
@@ -216,6 +357,20 @@ def init_state(
         slot_commits=jnp.zeros((T, N), i32),
         slot_aborts=jnp.zeros((T, N), i32),
         slot_lat=jnp.zeros((T, N), i32),
+        dyn=dyn,
+    )
+
+
+def init_state_world(cfg: SimConfig, world: WorldSpec) -> SimState:
+    """Initialize from a WorldSpec (vmap-compatible over a batch axis)."""
+    return init_state(
+        cfg,
+        world.tau_true,
+        world.tau_ds,
+        world.jitter_milli,
+        world.exec_scale_milli,
+        dyn=world.dyn,
+        lel_scale_milli=world.lel_scale_milli,
     )
 
 
@@ -224,24 +379,47 @@ def init_state(
 # ---------------------------------------------------------------------------
 
 
-def _delay(s: SimState, rtt: jax.Array, salt: jax.Array) -> jax.Array:
-    """One-way delay = rtt/2 with deterministic ±jitter."""
+def _delay_salted(jitter_milli: jax.Array, rtt: jax.Array, salt: jax.Array) -> jax.Array:
+    """One-way delay = rtt/2 with deterministic ±jitter (elementwise over any
+    broadcastable rtt/salt shapes — shared by the sequential handlers and the
+    drain step so both paths use one formula)."""
     half = rtt // 2
     u = (_hash_u32(salt) % jnp.uint32(2001)).astype(jnp.int32) - 1000
-    return half + (half * s.jitter_milli // 1000) * u // 1000
+    return half + (half * jitter_milli // 1000) * u // 1000
+
+
+def _delay(s: SimState, rtt: jax.Array, salt: jax.Array) -> jax.Array:
+    return _delay_salted(s.jitter_milli, rtt, salt)
 
 
 def _salt(s: SimState, a: int) -> jax.Array:
-    return s.iters * jnp.int32(2654435761 % (2**31)) + jnp.int32(a)
+    return s.iters * _SALT_MUL + jnp.int32(a)
 
 
 def _exec_us(cfg: SimConfig, s: SimState, d: jax.Array) -> jax.Array:
-    """Per-op execution time at data source d; ScalarDB-style middleware CC
-    pays an extra DM round trip per statement."""
-    base = jnp.int32(cfg.proto.exec_us) * s.exec_scale_milli[d] // 1000
-    if cfg.proto.middleware_cc:
-        base = base + s.tau_true[d]
-    return base
+    """Per-op execution time at data source d (scalar or any index array);
+    ScalarDB-style middleware CC pays an extra DM round trip per statement."""
+    base = s.dyn.exec_us * s.exec_scale_milli[d] // 1000
+    return base + jnp.where(s.dyn.middleware_cc, s.tau_true[d], 0)
+
+
+def _round_done_transition(
+    dyn: DynProto, is_final, centralized, reply_t, prep_t, local_t
+):
+    """Subtxn state/time after its round's last statement finishes.
+
+    Elementwise over any broadcastable shapes — the sequential round_done
+    (scalars) and the drain step ([T,D]) share this selection, so the
+    drained path cannot drift from the single-event semantics.
+    """
+    dec = dyn.prepare == PREPARE_DECENTRAL
+    go_local = dec & dyn.async_local_commit & is_final & centralized
+    go_prep = dec & is_final & ~centralized
+    new_state = jnp.where(
+        go_local, SUB_LOCAL_COMMIT, jnp.where(go_prep, SUB_PREPARING, SUB_ROUND_REPLY)
+    )
+    new_time = jnp.where(go_local, local_t, jnp.where(go_prep, prep_t, reply_t))
+    return new_state, new_time
 
 
 def _u01(salt: jax.Array) -> jax.Array:
@@ -286,7 +464,7 @@ def _attempt_lock(cfg: SimConfig, s: SimState, t, k) -> SimState:
             jnp.where(ok, OP_EXEC, OP_WAIT).astype(jnp.int8)
         ),
         op_time=s.op_time.at[t, k].set(
-            jnp.where(ok, exec_t, s.now + jnp.int32(cfg.proto.lock_timeout_us))
+            jnp.where(ok, exec_t, s.now + s.dyn.lock_timeout_us)
         ),
         op_enq=s.op_enq.at[t, k].set(s.now),
         first_lock=s.first_lock.at[t, d].min(jnp.where(ok, s.now, INF_US)),
@@ -457,13 +635,13 @@ def _finish_txn(cfg: SimConfig, s: SimState, t, committed) -> SimState:
         cur_round=s.cur_round.at[t].set(0),
     )
     # next / retry
-    retry = ~committed & (s.retries[t] < cfg.proto.max_retries)
-    base = jnp.int32(cfg.proto.retry_backoff_us)
+    retry = ~committed & (s.retries[t] < s.dyn.max_retries)
+    base = s.dyn.retry_backoff_us
     # randomized exponential backoff: breaks deadlock lockstep between
     # terminals that would otherwise retry in phase and re-deadlock forever
     jit = (
         _hash_u32(s.txn_ctr[t] * 977 + t.astype(jnp.int32) * 131 + s.retries[t])
-        % jnp.uint32(jnp.maximum(base, 1))
+        % jnp.maximum(base, 1).astype(jnp.uint32)
     ).astype(jnp.int32)
     backoff = base * (1 + jnp.minimum(s.retries[t], 7)) + jit
     s = s._replace(
@@ -502,18 +680,16 @@ def _lel_forecast(cfg, s: SimState, t) -> jax.Array:
 
 
 def _stagger(cfg: SimConfig, s: SimState, t, inv_mask) -> jax.Array:
-    """Dispatch offsets per DS (Eq.3 / Eq.8 / none / chiller)."""
-    if cfg.proto.stagger == STAGGER_NONE:
-        return jnp.zeros_like(s.tau_est)
-    lel = None
-    if cfg.proto.stagger == STAGGER_NET_LEL:
-        lel = (
-            _lel_forecast(cfg, s, t).astype(jnp.float32)
-            * s.lel_scale_milli.astype(jnp.float32)
-            / 1000.0
-        ).astype(jnp.int32)
-        return sched.stagger_offsets(s.tau_est, inv_mask, lel)
-    return sched.stagger_offsets(s.tau_est, inv_mask, None)
+    """Dispatch offsets per DS (Eq.3 / Eq.8 / none / chiller), selected by the
+    dynamic stagger knob: a zero LEL vector turns Eq.(8) into Eq.(3)."""
+    lel = (
+        _lel_forecast(cfg, s, t).astype(jnp.float32)
+        * s.lel_scale_milli.astype(jnp.float32)
+        / 1000.0
+    ).astype(jnp.int32)
+    lel = jnp.where(s.dyn.stagger == STAGGER_NET_LEL, lel, 0)
+    off = sched.stagger_offsets(s.tau_est, inv_mask, lel)
+    return jnp.where(s.dyn.stagger == STAGGER_NONE, jnp.zeros_like(off), off)
 
 
 def _dispatch_subs(cfg, s: SimState, t, mask, times) -> SimState:
@@ -530,26 +706,28 @@ def _dm_progress(cfg: SimConfig, s: SimState, t) -> SimState:
     """Called whenever the DM hears from a data source: handles chiller stage-2
     dispatch, interactive-round advancement, prepare broadcast (2PC) and the
     commit decision."""
-    p = cfg.proto
     inv = s.inv[t]
     st = s.sub_state[t]
     n_inv = jnp.sum(inv.astype(jnp.int32))
     centralized = n_inv == 1
 
     # chiller stage-2: when every dispatched (stage-1) sub has voted
-    if p.chiller_two_stage:
-        waiting = inv & (st == SUB_CHILLER_WAIT)
-        active = inv & ~waiting
-        ready = jnp.all(~active | (st == SUB_VOTED)) & jnp.any(waiting)
-        s = jax.lax.cond(
-            ready,
-            lambda s_: _dispatch_subs(
-                cfg, s_, t, waiting, jnp.full_like(s_.sub_time[t], s_.now)
-            ),
-            lambda s_: s_,
-            s,
-        )
-        st = s.sub_state[t]
+    waiting = inv & (st == SUB_CHILLER_WAIT)
+    active = inv & ~waiting
+    ready = (
+        jnp.all(~active | (st == SUB_VOTED))
+        & jnp.any(waiting)
+        & s.dyn.chiller_two_stage
+    )
+    s = jax.lax.cond(
+        ready,
+        lambda s_: _dispatch_subs(
+            cfg, s_, t, waiting, jnp.full_like(s_.sub_time[t], s_.now)
+        ),
+        lambda s_: s_,
+        s,
+    )
+    st = s.sub_state[t]
 
     inv_rd = _round_inv(s, t)
     all_rd = jnp.all(~inv_rd | s.rd_done[t])
@@ -574,6 +752,16 @@ def _dm_progress(cfg: SimConfig, s: SimState, t) -> SimState:
         st_ = s_.sub_state[t]
         all_at_dm = jnp.all(~inv | (st_ == SUB_ROUND_AT_DM))
         all_voted = jnp.all(~inv | (st_ == SUB_VOTED))
+        prep = s_.dyn.prepare
+        # one-phase commit for centralized transactions (all protocols); the
+        # no-prepare preset broadcasts commit as soon as every sub reported
+        do_commit = jnp.where(prep == PREPARE_NONE, all_at_dm, centralized & all_at_dm)
+        do_prepare = (prep == PREPARE_COORD) & all_at_dm & ~centralized
+        do_log = (
+            ((prep == PREPARE_COORD) | (prep == PREPARE_DECENTRAL))
+            & all_voted
+            & ~centralized
+        )
 
         def send_commit(s2: SimState) -> SimState:
             salts = _salt(s2, 11) + jnp.arange(cfg.num_ds, dtype=jnp.int32)
@@ -609,34 +797,18 @@ def _dm_progress(cfg: SimConfig, s: SimState, t) -> SimState:
             return s2._replace(
                 phase=s2.phase.at[t].set(T_COMMIT_LOG),
                 term_time=s2.term_time.at[t].set(
-                    s2.now + jnp.int32(p.log_flush_us)
+                    s2.now + s2.dyn.log_flush_us
                 ),
             )
 
-        if p.prepare == PREPARE_NONE:
-            return jax.lax.cond(all_at_dm, send_commit, lambda s2: s2, s_)
-        # one-phase commit for centralized transactions (all protocols)
-        do_1pc = centralized & all_at_dm
-        if p.prepare == PREPARE_COORD:
-            return jax.lax.cond(
-                do_1pc,
-                send_commit,
-                lambda s2: jax.lax.cond(
-                    all_at_dm & ~centralized,
-                    send_prepare,
-                    lambda s3: jax.lax.cond(
-                        all_voted & ~centralized, commit_log, lambda s4: s4, s3
-                    ),
-                    s2,
-                ),
-                s_,
-            )
-        # decentralized prepare
         return jax.lax.cond(
-            do_1pc,
+            do_commit,
             send_commit,
             lambda s2: jax.lax.cond(
-                all_voted & ~centralized, commit_log, lambda s3: s3, s2
+                do_prepare,
+                send_prepare,
+                lambda s3: jax.lax.cond(do_log, commit_log, lambda s4: s4, s3),
+                s2,
             ),
             s_,
         )
@@ -659,7 +831,6 @@ def _initiate_abort(cfg: SimConfig, s: SimState, t, d) -> SimState:
     """Lock-wait timeout at (t, d): abort the whole distributed transaction.
     With early_abort the geo-agent notifies peers directly (DS<->DS);
     otherwise the notification is routed through the DM (1.5 WAN rounds)."""
-    p = cfg.proto
     s = _release_and_grant(cfg, s, t, d)
     s = _hs_complete_ds(cfg, s, t, d, jnp.asarray(False))
 
@@ -671,11 +842,10 @@ def _initiate_abort(cfg: SimConfig, s: SimState, t, d) -> SimState:
     peers = inv & (ids != d) & ~abort_family
 
     salts = _salt(s, 17) + ids
-    if p.early_abort:
-        notify = jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_ds[d], salts)
-    else:
-        to_dm = _delay(s, s.tau_true[d], _salt(s, 19))
-        notify = to_dm + jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_true, salts)
+    notify_direct = jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_ds[d], salts)
+    to_dm = _delay(s, s.tau_true[d], _salt(s, 19))
+    notify_via_dm = to_dm + jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_true, salts)
+    notify = jnp.where(s.dyn.early_abort, notify_direct, notify_via_dm)
 
     own_ack = s.now + _delay(s, s.tau_true[d], _salt(s, 23))
     new_st = jnp.where(peers, SUB_ABORT_PEER, st)
@@ -698,7 +868,6 @@ def _initiate_abort(cfg: SimConfig, s: SimState, t, d) -> SimState:
 def _h_start_txn(cfg: SimConfig, bank: Bank, s: SimState, t, idx) -> SimState:
     """T_IDLE fires: load the txn from the bank, run O3 admission, compute the
     stagger (Eq.3/Eq.8) and dispatch round-0 subtransactions."""
-    p = cfg.proto
     N = cfg.bank_txns
     slot = s.cur[t] % N
     key = bank.key[t, slot]
@@ -735,41 +904,34 @@ def _h_start_txn(cfg: SimConfig, bank: Bank, s: SimState, t, idx) -> SimState:
         row = s_.op_state[t] != OP_NONE
         inv0 = jnp.any(oh & (row & (rnd == 0))[:, None], axis=0)
         off = _stagger(cfg, s_, t, inv0)
-        if p.chiller_two_stage:
-            # intra-region (min-RTT) subs first; cross-region wait (§VII-A-1)
-            tmin = jnp.min(jnp.where(inv0, s_.tau_est, INF_US))
-            stage1 = inv0 & (s_.tau_est <= tmin)
-            stage2 = inv0 & ~stage1
-            s_ = s_._replace(
-                sub_state=s_.sub_state.at[t].set(
-                    jnp.where(
-                        stage2, SUB_CHILLER_WAIT, jnp.where(stage1, SUB_SCHED, SUB_NONE)
-                    ).astype(jnp.int8)
-                ),
-                sub_time=s_.sub_time.at[t].set(
-                    jnp.where(stage1, s_.now, INF_US)
-                ),
-            )
-        else:
-            later = inv & ~inv0
-            s_ = s_._replace(
-                sub_state=s_.sub_state.at[t].set(
-                    jnp.where(
-                        inv0, SUB_SCHED, jnp.where(later, SUB_WAIT_ROUND, SUB_NONE)
-                    ).astype(jnp.int8)
-                ),
-                sub_time=s_.sub_time.at[t].set(
-                    jnp.where(inv0, s_.now + off, INF_US)
-                ),
-            )
+        # chiller: intra-region (min-RTT) subs first; cross-region wait
+        # (§VII-A-1). Selected dynamically against the standard dispatch.
+        tmin = jnp.min(jnp.where(inv0, s_.tau_est, INF_US))
+        stage1 = inv0 & (s_.tau_est <= tmin)
+        stage2 = inv0 & ~stage1
+        chil_state = jnp.where(
+            stage2, SUB_CHILLER_WAIT, jnp.where(stage1, SUB_SCHED, SUB_NONE)
+        )
+        chil_time = jnp.where(stage1, s_.now, INF_US)
+        later = inv & ~inv0
+        norm_state = jnp.where(
+            inv0, SUB_SCHED, jnp.where(later, SUB_WAIT_ROUND, SUB_NONE)
+        )
+        norm_time = jnp.where(inv0, s_.now + off, INF_US)
+        chiller = s_.dyn.chiller_two_stage
+        s_ = s_._replace(
+            sub_state=s_.sub_state.at[t].set(
+                jnp.where(chiller, chil_state, norm_state).astype(jnp.int8)
+            ),
+            sub_time=s_.sub_time.at[t].set(
+                jnp.where(chiller, chil_time, norm_time)
+            ),
+        )
         s_ = s_._replace(
             phase=s_.phase.at[t].set(T_ACTIVE),
             term_time=s_.term_time.at[t].set(INF_US),
         )
         return s_
-
-    if not p.admission:
-        return do_dispatch(s)
 
     # ---- O3 late transaction scheduling (Eq.9) ----------------------------
     slot, found = hs_mod.lookup_slots(s.hs.slot_key, jnp.where(valid, key, -1), valid)
@@ -777,17 +939,19 @@ def _h_start_txn(cfg: SimConfig, bank: Bank, s: SimState, t, idx) -> SimState:
     tc = s.hs.t_cnt[slot] * found.astype(jnp.int32)
     a = s.hs.a_cnt[slot] * found.astype(jnp.int32)
     p_abort = jnp.minimum(
-        sched.abort_probability(c, tc, a, valid), jnp.float32(p.block_prob_cap)
+        sched.abort_probability(c, tc, a, valid), s.dyn.block_prob_cap
     )
     u = _u01(_salt(s, 29) + t.astype(jnp.int32))
     block, force_abort = sched.admission_decision(
-        p_abort, u, s.blocked[t], p.max_blocked
+        p_abort, u, s.blocked[t], s.dyn.max_blocked
     )
+    block = block & s.dyn.admission
+    force_abort = force_abort & s.dyn.admission
 
     def do_block(s_: SimState) -> SimState:
         return s_._replace(
             blocked=s_.blocked.at[t].add(1),
-            term_time=s_.term_time.at[t].set(s_.now + jnp.int32(p.admission_backoff_us)),
+            term_time=s_.term_time.at[t].set(s_.now + s_.dyn.admission_backoff_us),
         )
 
     def do_abort(s_: SimState) -> SimState:
@@ -854,7 +1018,6 @@ def _h_op_exec_done(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
         return _attempt_lock(cfg, s_, t, nxt)
 
     def round_done(s_: SimState) -> SimState:
-        p = cfg.proto
         s_ = s_._replace(
             sub_lel=s_.sub_lel.at[t, d].add(
                 jnp.maximum(s_.now - s_.sub_arrive[t, d], 0)
@@ -873,27 +1036,11 @@ def _h_op_exec_done(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
         aborting = s_.sub_state[t, d] == SUB_ABORT_PEER  # peer abort in flight
 
         reply_t = s_.now + _delay(s_, s_.tau_true[d], _salt(s_, 37))
-        prep_t = s_.now + jnp.int32(p.lan_rtt_us + p.log_flush_us)
-        local_t = s_.now + jnp.int32(p.log_flush_us)
-
-        if p.prepare == PREPARE_DECENTRAL:
-            if p.async_local_commit:
-                new_state = jnp.where(
-                    is_final,
-                    jnp.where(centralized, SUB_LOCAL_COMMIT, SUB_PREPARING),
-                    SUB_ROUND_REPLY,
-                )
-                new_time = jnp.where(
-                    is_final, jnp.where(centralized, local_t, prep_t), reply_t
-                )
-            else:
-                new_state = jnp.where(
-                    is_final & ~centralized, SUB_PREPARING, SUB_ROUND_REPLY
-                )
-                new_time = jnp.where(is_final & ~centralized, prep_t, reply_t)
-        else:
-            new_state = jnp.asarray(SUB_ROUND_REPLY)
-            new_time = reply_t
+        prep_t = s_.now + s_.dyn.lan_rtt_us + s_.dyn.log_flush_us
+        local_t = s_.now + s_.dyn.log_flush_us
+        new_state, new_time = _round_done_transition(
+            s_.dyn, is_final, centralized, reply_t, prep_t, local_t
+        )
         return s_._replace(
             sub_state=s_.sub_state.at[t, d].set(
                 jnp.where(aborting, s_.sub_state[t, d], new_state).astype(jnp.int8)
@@ -957,7 +1104,7 @@ def _h_ds_prep_cmd(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     """SUB_PREP_CMD fires at DS (coordinated 2PC prepare)."""
     return s._replace(
         sub_state=s.sub_state.at[t, d].set(SUB_PREPARING),
-        sub_time=s.sub_time.at[t, d].set(s.now + jnp.int32(cfg.proto.log_flush_us)),
+        sub_time=s.sub_time.at[t, d].set(s.now + s.dyn.log_flush_us),
     )
 
 
@@ -1091,26 +1238,35 @@ _TERM_HANDLER[T_IDLE] = H_START
 _TERM_HANDLER[T_COMMIT_LOG] = H_SEND_COMMITS
 
 
-def _step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
-    """Process the single earliest event."""
-    term_min = jnp.min(s.term_time)
-    sub_min = jnp.min(s.sub_time)
-    op_min = jnp.min(s.op_time)
-    t_now = jnp.minimum(jnp.minimum(term_min, sub_min), op_min)
-    cat = jnp.argmin(jnp.stack([term_min, sub_min, op_min]))
+def _times_flat(s: SimState) -> jax.Array:
+    """Concatenated [T + T*D + T*K] event-time view (term | sub | op)."""
+    return jnp.concatenate(
+        [s.term_time, s.sub_time.reshape(-1), s.op_time.reshape(-1)]
+    )
 
-    # locate the event
-    t_term = jnp.argmin(s.term_time).astype(jnp.int32)
-    sub_flat = jnp.argmin(s.sub_time.reshape(-1)).astype(jnp.int32)
-    op_flat = jnp.argmin(s.op_time.reshape(-1)).astype(jnp.int32)
-    D, K = cfg.num_ds, cfg.max_ops
-    t = jnp.where(cat == 0, t_term, jnp.where(cat == 1, sub_flat // D, op_flat // K))
-    idx = jnp.where(cat == 1, sub_flat % D, op_flat % K)
+
+def _step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
+    """Process the single earliest event (one fused argmin over all queues).
+
+    The concatenated view orders terminal < subtxn < op events, and flat
+    argmin picks the first occurrence — the exact tie-break order of the
+    original three-scan picker, at a third of the reduction cost.
+    """
+    T, D, K = cfg.terminals, cfg.num_ds, cfg.max_ops
+    flat = _times_flat(s)
+    i = jnp.argmin(flat).astype(jnp.int32)
+    t_now = flat[i]
+    is_term = i < T
+    is_sub = ~is_term & (i < T + T * D)
+    j_sub = i - T
+    j_op = i - T - T * D
+    t = jnp.where(is_term, i, jnp.where(is_sub, j_sub // D, j_op // K))
+    idx = jnp.where(is_sub, j_sub % D, jnp.where(is_term, 0, j_op % K))
 
     sub_h = jnp.asarray(_SUB_HANDLER)[s.sub_state[t, jnp.minimum(idx, D - 1)]]
     op_h = jnp.asarray(_OP_HANDLER)[s.op_state[t, jnp.minimum(idx, K - 1)]]
     term_h = jnp.asarray(_TERM_HANDLER)[jnp.minimum(s.phase[t], 4)]
-    hid = jnp.where(cat == 0, term_h, jnp.where(cat == 1, sub_h, op_h))
+    hid = jnp.where(is_term, term_h, jnp.where(is_sub, sub_h, op_h))
 
     s = s._replace(now=t_now, iters=s.iters + 1)
 
@@ -1136,18 +1292,183 @@ def _step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     return jax.lax.switch(hid, branches, s, t, idx)
 
 
+def _drain_ops(cfg: SimConfig, bank: Bank, s: SimState, t_now, due_arr, due_exec) -> SimState:
+    """Apply every op event due at t_now in one vectorized pass.
+
+    Precondition (checked by `_drain_step`, which passes the due masks in):
+    the due set consists only of op arrivals (OP_ENROUTE) and exec
+    completions (OP_EXEC). Those are pairwise independent — and therefore
+    order-insensitive, hence bitwise-equal to the sequential path — iff every
+    lock-table key touched this drain (arrival keys + chain-target keys) is
+    unique and no handler schedules a new event at t_now. Both conditions
+    form the conflict mask; on conflict we fall back to the single-event
+    step.
+    """
+    T, D, K = cfg.terminals, cfg.num_ds, cfg.max_ops
+    i32 = jnp.int32
+    st = s.op_state
+    due_op = due_arr | due_exec
+    n_due = jnp.sum(due_op.astype(i32))
+    d_of = s.op_ds.astype(i32)  # [T,K]
+
+    # ---- chain targets of exec completions (first QUEUED op, same DS/round)
+    row_q = st == OP_QUEUED
+    same_round = s.op_round == s.cur_round[:, None]
+    eq_ds = s.op_ds[:, :, None] == s.op_ds[:, None, :]
+    chain_mask = (
+        due_exec[:, :, None] & row_q[:, None, :] & eq_ds & same_round[:, None, :]
+    )
+    has_next = jnp.any(chain_mask, axis=2)
+    nxt = jnp.argmax(chain_mask, axis=2).astype(i32)  # [T,K]
+    do_chain = due_exec & has_next
+    rd = due_exec & ~has_next  # round completes at (t, d_of)
+
+    # ---- conflict mask: every touched key must be unique ------------------
+    flat_idx = jnp.arange(T * K, dtype=i32).reshape(T, K)
+    chain_key = jnp.take_along_axis(s.op_key, nxt, axis=1)
+    ka = jnp.where(due_arr, s.op_key, -flat_idx - 2)
+    kc = jnp.where(do_chain, chain_key, -flat_idx - 2 - T * K)
+    allk = jnp.sort(jnp.concatenate([ka.reshape(-1), kc.reshape(-1)]))
+    no_dup = jnp.all(allk[1:] != allk[:-1])
+
+    # ---- batched lock decisions (pre-state views are exact: the due set
+    # never changes the holder/waiter population of a *distinct* key, and an
+    # EXEC->HOLD transition keeps holder status) ----------------------------
+    fk = s.op_key.reshape(-1)
+    fw = s.op_write.reshape(-1)
+    fst = st.reshape(-1)
+    holder = (fst == OP_EXEC) | (fst == OP_HOLD)
+    waiting = fst == OP_WAIT
+    eq_key = fk[:, None] == fk[None, :]  # [T*K, T*K]
+    x_held = jnp.any(eq_key & (holder & fw)[None, :], axis=1).reshape(T, K)
+    s_held = jnp.any(eq_key & (holder & ~fw)[None, :], axis=1).reshape(T, K)
+    waiter = jnp.any(eq_key & waiting[None, :], axis=1).reshape(T, K)
+    ok = jnp.where(s.op_write, ~x_held & ~s_held, ~x_held) & ~waiter  # [T,K]
+
+    exec_t = t_now + _exec_us(cfg, s, d_of)  # [T,K]
+    to_t = t_now + s.dyn.lock_timeout_us
+
+    arr_state = jnp.where(ok, OP_EXEC, OP_WAIT)
+    arr_time = jnp.where(ok, exec_t, to_t)
+    ok_chain = jnp.take_along_axis(ok, nxt, axis=1)
+    chain_state = jnp.where(ok_chain, OP_EXEC, OP_WAIT)
+    chain_time = jnp.where(ok_chain, jnp.take_along_axis(exec_t, nxt, axis=1), to_t)
+
+    # ---- round completions, per (t, d) ------------------------------------
+    oh_d = jax.nn.one_hot(d_of, D, dtype=bool)  # [T,K,D]
+    rd_td = jnp.any(oh_d & rd[:, :, None], axis=1)  # [T,D]
+    # each batched event gets the iteration number it would have had in the
+    # sequential flat order => identical reply-jitter salts
+    rank = (jnp.cumsum(due_op.reshape(-1).astype(i32)) - 1).reshape(T, K)
+    iters_ev = s.iters + 1 + rank
+    iters_td = jnp.max(
+        jnp.where(oh_d & rd[:, :, None], iters_ev[:, :, None], 0), axis=1
+    )  # [T,D]
+    salt_td = iters_td * _SALT_MUL + jnp.int32(37)
+    reply_t = t_now + _delay_salted(s.jitter_milli, s.tau_true[None, :], salt_td)  # [T,D]
+
+    opn = st != OP_NONE
+    rmax_td = jnp.max(
+        jnp.where(opn[:, :, None] & oh_d, s.op_round[:, :, None].astype(i32), -1),
+        axis=1,
+    )  # [T,D]
+    is_final = s.cur_round[:, None].astype(i32) >= rmax_td
+    centralized = (jnp.sum(s.inv.astype(i32), axis=1) == 1)[:, None]  # [T,1]
+    aborting = s.sub_state == SUB_ABORT_PEER  # [T,D]
+    prep_t = t_now + s.dyn.lan_rtt_us + s.dyn.log_flush_us
+    local_t = t_now + s.dyn.log_flush_us
+    new_sub_state, new_sub_time = _round_done_transition(
+        s.dyn, is_final, centralized, reply_t, prep_t, local_t
+    )
+    sub_upd = rd_td & ~aborting
+
+    # ---- no drained handler may schedule an event at t_now itself ---------
+    safe_t = (
+        jnp.all(jnp.where(due_arr, arr_time, INF_US) > t_now)
+        & jnp.all(jnp.where(do_chain, chain_time, INF_US) > t_now)
+        & jnp.all(jnp.where(sub_upd, new_sub_time, INF_US) > t_now)
+    )
+    batchable = no_dup & safe_t
+
+    def apply(s_: SimState) -> SimState:
+        op_state = jnp.where(
+            due_arr, arr_state, jnp.where(due_exec, OP_HOLD, st)
+        ).astype(jnp.int8)
+        op_time = jnp.where(due_arr, arr_time, jnp.where(due_exec, INF_US, s_.op_time))
+        op_enq = jnp.where(due_arr, t_now, s_.op_enq)
+        rows = jnp.broadcast_to(jnp.arange(T, dtype=i32)[:, None], (T, K))
+        tgt = jnp.where(do_chain, nxt, K)  # K => dropped
+        op_state = op_state.at[rows, tgt].set(chain_state.astype(jnp.int8), mode="drop")
+        op_time = op_time.at[rows, tgt].set(chain_time, mode="drop")
+        op_enq = op_enq.at[rows, tgt].set(t_now, mode="drop")
+
+        got = (due_arr & ok) | (do_chain & ok_chain)
+        got_td = jnp.any(oh_d & got[:, :, None], axis=1)
+        first_lock = jnp.minimum(s_.first_lock, jnp.where(got_td, t_now, INF_US))
+
+        sub_state = jnp.where(
+            sub_upd, new_sub_state, s_.sub_state.astype(i32)
+        ).astype(jnp.int8)
+        sub_time = jnp.where(sub_upd, new_sub_time, s_.sub_time)
+        sub_lel = s_.sub_lel + jnp.where(
+            rd_td, jnp.maximum(t_now - s_.sub_arrive, 0), 0
+        )
+        return s_._replace(
+            now=t_now,
+            iters=s_.iters + n_due,
+            op_state=op_state,
+            op_time=op_time,
+            op_enq=op_enq,
+            first_lock=first_lock,
+            sub_state=sub_state,
+            sub_time=sub_time,
+            sub_lel=sub_lel,
+        )
+
+    return jax.lax.cond(batchable, apply, lambda s_: _step(cfg, bank, s_), s)
+
+
+def _drain_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
+    """One drain iteration: apply all events due at the minimum timestamp.
+
+    Cheap pre-checks route to the vectorized drain only when the due set is
+    at least two op arrivals / exec completions and nothing else; any other
+    shape (terminal/subtxn events, lock-wait timeouts, a single due event)
+    takes the sequential single-event step unchanged.
+    """
+    t_now = jnp.min(_times_flat(s))
+    due_op = s.op_time == t_now
+    due_arr = due_op & (s.op_state == OP_ENROUTE)
+    due_exec = due_op & (s.op_state == OP_EXEC)
+    n_due = jnp.sum(due_op.astype(jnp.int32))
+    clean = (
+        (jnp.min(s.term_time) > t_now)
+        & (jnp.min(s.sub_time) > t_now)
+        & (jnp.sum(due_arr.astype(jnp.int32)) + jnp.sum(due_exec.astype(jnp.int32)) == n_due)
+        & (n_due >= 2)
+    )
+    return jax.lax.cond(
+        clean,
+        lambda s_: _drain_ops(cfg, bank, s_, t_now, due_arr, due_exec),
+        lambda s_: _step(cfg, bank, s_),
+        s,
+    )
+
+
 def run(cfg: SimConfig, bank: Bank, state: SimState) -> SimState:
-    """Run until the horizon (or the event budget) is exhausted."""
+    """Run until the horizon (or the event budget) is exhausted.
+
+    With cfg.drain the event budget is approximate: a drained batch may
+    overshoot max_events by (batch-1) events.
+    """
+    step = _drain_step if cfg.drain else _step
 
     def cond(s: SimState):
-        nxt = jnp.minimum(
-            jnp.minimum(jnp.min(s.term_time), jnp.min(s.sub_time)),
-            jnp.min(s.op_time),
-        )
+        nxt = jnp.min(_times_flat(s))
         return (nxt < jnp.int32(cfg.horizon_us)) & (s.iters < cfg.max_events)
 
     def body(s: SimState):
-        return _step(cfg, bank, s)
+        return step(cfg, bank, s)
 
     return jax.lax.while_loop(cond, body, state)
 
@@ -1169,6 +1490,87 @@ def simulate(
         state = init_state(cfg, tau_true_us, tau_ds_us, jitter_milli, exec_scale_milli)
     state = _run_jit(cfg, bank, state)
     return state, summarize(cfg, state)
+
+
+# ---------------------------------------------------------------------------
+# multi-world sweeps
+# ---------------------------------------------------------------------------
+
+
+def _batch_over(one, bank, xs, bank_axis, strategy):
+    """Map `one(bank_lane, x_lane)` over a world batch.
+
+    strategy "vmap" runs lanes in lockstep (best on accelerators, where the
+    vector units absorb the batched control flow); "map" runs lanes
+    sequentially inside ONE compiled call (best on CPU: scalar control flow
+    keeps the 16-way handler switch one-branch-per-event, while the grid
+    still compiles once and runs as a single device call).
+    """
+    if strategy == "vmap":
+        return jax.vmap(one, in_axes=(bank_axis, 0))(bank, xs)
+    if bank_axis is None:
+        return jax.lax.map(lambda x: one(bank, x), xs)
+    return jax.lax.map(lambda bx: one(*bx), (bank, xs))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def _sim_batch_fresh(cfg: SimConfig, bank: Bank, worlds: WorldSpec, bank_axis, strategy):
+    def one(b, w):
+        return run(cfg, b, init_state_world(cfg, w))
+
+    return _batch_over(one, bank, worlds, bank_axis, strategy)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(2,))
+def _run_batch(cfg: SimConfig, bank: Bank, states: SimState, bank_axis, strategy):
+    return _batch_over(
+        lambda b, st: run(cfg, b, st), bank, states, bank_axis, strategy
+    )
+
+
+def simulate_batch(
+    cfg: SimConfig,
+    bank: Bank,
+    worlds: WorldSpec,
+    *,
+    bank_batched: bool = False,
+    states: SimState | None = None,
+    strategy: str = "auto",
+):
+    """Run a batch of worlds as one batched device call.
+
+    cfg:    shared static config (shapes/horizon); `cfg.proto` only provides
+            defaults — the per-world knobs come from `worlds.dyn`.
+    bank:   one Bank shared by every world, or (bank_batched=True) a Bank
+            whose leaves carry a leading [B] axis (e.g. per-seed workloads).
+    worlds: WorldSpec with a leading [B] axis on every leaf (`stack_worlds`).
+    strategy: "vmap" (lockstep lanes), "map" (sequential lanes, one compile,
+            one device call) or "auto" (vmap on TPU/GPU, map on CPU).
+
+    Returns (final_states [B-batched], list of B metric dicts). Fresh runs
+    fuse init+run into one compiled call; continuation runs (states given)
+    donate the incoming state buffer, so sweeps of any size reuse memory.
+    """
+    if strategy == "auto":
+        strategy = "vmap" if jax.default_backend() in ("tpu", "gpu") else "map"
+    bank_axis = 0 if bank_batched else None
+    if states is None:
+        states = _sim_batch_fresh(cfg, bank, worlds, bank_axis, strategy)
+    else:
+        states = _run_batch(cfg, bank, states, bank_axis, strategy)
+    return states, summarize_batch(cfg, states)
+
+
+def world_index(states: SimState, i: int) -> SimState:
+    """Slice world i out of a batched final state."""
+    return jax.tree_util.tree_map(lambda x: x[i], states)
+
+
+def summarize_batch(cfg: SimConfig, states: SimState) -> list:
+    """Host-side metric extraction for a batched final state."""
+    B = int(states.now.shape[0])
+    host = jax.tree_util.tree_map(np.asarray, states)
+    return [summarize(cfg, world_index(host, i)) for i in range(B)]
 
 
 def summarize(cfg: SimConfig, s: SimState) -> dict:

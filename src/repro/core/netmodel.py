@@ -62,12 +62,8 @@ def make_net_params(
     the paper's regions (Beijing-Shanghai-Singapore-London).
     """
     tau = jnp.asarray([int(t * MS) for t in rtt_ms], dtype=jnp.int32)
-    d = tau.shape[0]
     if tau_ds_ms is None:
-        tds = jnp.abs(tau[:, None] - tau[None, :])
-        # off-diagonal floors: two distinct sites are at least 1ms apart
-        floor = jnp.where(~jnp.eye(d, dtype=bool), jnp.int32(1 * MS), jnp.int32(0))
-        tds = jnp.maximum(tds, floor)
+        tds = derive_tau_ds_us(tau)
     else:
         tds = jnp.asarray([[int(t * MS) for t in row] for row in tau_ds_ms], dtype=jnp.int32)
     return NetParams(
@@ -75,6 +71,18 @@ def make_net_params(
         tau_ds=tds,
         jitter_milli=jnp.int32(int(jitter_frac * 1000)),
     )
+
+
+def derive_tau_ds_us(tau_us: jax.Array) -> jax.Array:
+    """DS<->DS mesh from the DM RTT vector (µs): triangle routing through
+    geography, |tau_i - tau_j| <= tau_ij, with a 1ms off-diagonal floor (two
+    distinct sites are at least 1ms apart). The single source of the mesh
+    derivation — used by make_net_params and engine.make_world."""
+    tau_us = jnp.asarray(tau_us, jnp.int32)
+    d = tau_us.shape[0]
+    tds = jnp.abs(tau_us[:, None] - tau_us[None, :])
+    floor = jnp.where(~jnp.eye(d, dtype=bool), jnp.int32(1 * MS), jnp.int32(0))
+    return jnp.maximum(tds, floor)
 
 
 def _hash_u32(x: jax.Array) -> jax.Array:

@@ -117,6 +117,30 @@ def admission_decision(
     return block, abort
 
 
+def plan_dispatch(
+    tau: jax.Array,
+    lel: jax.Array,
+    inv: jax.Array,
+    c_cnt: jax.Array,
+    t_cnt: jax.Array,
+    a_cnt: jax.Array,
+    valid: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Shared batched scheduling entry: Eq.(8) offsets + Eq.(9) p_abort.
+
+    The single scheduling surface used by the discrete-event engine's sweeps,
+    the geo-serving router's admission path and the Pallas `geo_schedule`
+    kernel's oracle — one place defines the DM's dispatch math.
+
+    tau/lel: [..., D] int32 µs; inv: [..., D] bool;
+    c/t/a_cnt: [..., K] int32 per-record stats; valid: [..., K] bool.
+    Returns (offsets [..., D] int32, p_abort [...] float32).
+    """
+    off = stagger_offsets(tau, inv, lel)
+    p_abort = abort_probability(c_cnt, t_cnt, a_cnt, valid)
+    return off, p_abort
+
+
 def round_barrier_next_dispatch(
     now: jax.Array, tau: jax.Array, involved_next: jax.Array, lel: jax.Array | None
 ) -> jax.Array:

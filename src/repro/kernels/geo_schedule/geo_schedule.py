@@ -7,8 +7,14 @@ multi-pod requests are (re)scheduled per tick: one [bN, D] + [bN, K] slab per
 grid step, row-max + row-sum reductions on the VPU, no HBM round trips for
 intermediates.
 
-Grid: (N/bN,). Blocks: tau/lel/inv [bN, D]; stats [bN, K]; outputs
-offsets [bN, D] and p_abort [bN, 1].
+Grid: (ceil(N/bN),). Blocks: tau/lel/inv [bN, D]; stats [bN, K]; outputs
+offsets [bN, D] and p_abort [bN, 1]. Batches whose N is not a multiple of bN
+are zero-padded (padded rows have inv/valid all-False, which the kernel maps
+to off=0 / p_abort=0) and sliced back.
+
+Execution mode is auto-selected: compiled on TPU, interpret elsewhere (the
+interpreter runs the same kernel body op-by-op on CPU). Pass `interpret`
+explicitly to override.
 """
 
 from __future__ import annotations
@@ -41,17 +47,23 @@ def _kernel(tau_ref, lel_ref, inv_ref, c_ref, t_ref, a_ref, valid_ref, off_ref, 
     )
 
 
+def _auto_interpret() -> bool:
+    """Compiled on TPU; interpreter everywhere else (CPU dev boxes, CI)."""
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
-def geo_schedule(
-    tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, *, bn: int = 256, interpret: bool = True
-):
-    """See ref.py for semantics. Returns (offsets [N,D] i32, p_abort [N] f32)."""
+def _geo_schedule_call(tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, *, bn, interpret):
     N, D = tau.shape
     K = c_cnt.shape[1]
-    bn = min(bn, N)
-    while N % bn:
-        bn //= 2
-    grid = (N // bn,)
+    pad = (-N) % bn
+    if pad:
+        pad_nd = ((0, pad), (0, 0))
+        tau, lel, inv = (jnp.pad(x, pad_nd) for x in (tau, lel, inv))
+        c_cnt, t_cnt, a_cnt, valid = (
+            jnp.pad(x, pad_nd) for x in (c_cnt, t_cnt, a_cnt, valid)
+        )
+    grid = ((N + pad) // bn,)
     nd_map = lambda i: (i, 0)
 
     off, p = pl.pallas_call(
@@ -71,8 +83,8 @@ def geo_schedule(
             pl.BlockSpec((bn, 1), nd_map),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N, D), jnp.int32),
-            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((N + pad, D), jnp.int32),
+            jax.ShapeDtypeStruct((N + pad, 1), jnp.float32),
         ],
         interpret=interpret,
     )(
@@ -84,4 +96,20 @@ def geo_schedule(
         a_cnt.astype(jnp.int32),
         valid.astype(jnp.int8),
     )
-    return off, p[:, 0]
+    return off[:N], p[:N, 0]
+
+
+def geo_schedule(
+    tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, *, bn: int = 256, interpret: bool | None = None
+):
+    """See ref.py for semantics. Returns (offsets [N,D] i32, p_abort [N] f32).
+
+    interpret=None auto-selects: compiled on TPU, interpreter elsewhere.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    N = tau.shape[0]
+    bn = max(1, min(bn, N))
+    return _geo_schedule_call(
+        tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, bn=bn, interpret=interpret
+    )

@@ -5,6 +5,14 @@ from __future__ import annotations
 from repro.kernels.geo_schedule.geo_schedule import geo_schedule
 
 
-def schedule_batch(tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, *, interpret: bool = True):
-    """Batched Eq.(8) offsets + Eq.(9) abort probabilities for N transactions."""
-    return geo_schedule(tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, interpret=interpret)
+def schedule_batch(
+    tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, *, bn: int = 256, interpret: bool | None = None
+):
+    """Batched Eq.(8) offsets + Eq.(9) abort probabilities for N transactions.
+
+    interpret=None auto-selects the execution mode (compiled on TPU,
+    interpreter on CPU dev boxes).
+    """
+    return geo_schedule(
+        tau, lel, inv, c_cnt, t_cnt, a_cnt, valid, bn=bn, interpret=interpret
+    )

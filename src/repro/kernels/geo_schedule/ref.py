@@ -1,9 +1,13 @@
-"""Oracle for the batched GeoTP scheduler math (Eq.8 stagger + Eq.9 admission)."""
+"""Oracle for the batched GeoTP scheduler math (Eq.8 stagger + Eq.9 admission).
+
+Delegates to `repro.core.scheduler.plan_dispatch`, the shared scheduling
+entry used by the discrete-event engine and the serving router — the kernel
+is validated against the exact code the systems run.
+"""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.core import scheduler as sched
 
 
 def geo_schedule_ref(tau, lel, inv, c_cnt, t_cnt, a_cnt, valid):
@@ -13,16 +17,4 @@ def geo_schedule_ref(tau, lel, inv, c_cnt, t_cnt, a_cnt, valid):
     c/t/a_cnt: [N,K] int32 per-record stats; valid: [N,K] bool.
     Returns (offsets [N,D] int32, p_abort [N] float32).
     """
-    cost = tau.astype(jnp.int32) + lel.astype(jnp.int32)
-    masked = jnp.where(inv, cost, -1)
-    cmax = jnp.max(masked, axis=-1, keepdims=True)
-    off = jnp.where(inv, cmax - cost, 0).astype(jnp.int32)
-    off = jnp.maximum(off, 0)
-
-    t = jnp.maximum(t_cnt.astype(jnp.float32), 0.0) + 1.0
-    cc = jnp.clip(c_cnt.astype(jnp.float32) + 1.0, 0.0, t)
-    ratio = jnp.clip(cc / t, 1e-6, 1.0)
-    expo = jnp.maximum(a_cnt.astype(jnp.float32) - 1.0, 0.0)
-    lp = jnp.where(valid, expo * jnp.log(ratio), 0.0)
-    p_abort = 1.0 - jnp.exp(jnp.sum(lp, axis=-1))
-    return off, p_abort
+    return sched.plan_dispatch(tau, lel, inv, c_cnt, t_cnt, a_cnt, valid)

@@ -111,28 +111,26 @@ class GeoServingEngine:
     def _admit(self, req: Request):
         taus = np.array([self.pods[p].rtt_us for p in req.fanout], np.int64)
         if self.policy == "geotp":
-            # O3: Eq.(9) admission over the participating pods
-            p_abort = float(
-                sched.abort_probability(
-                    jnp.asarray(self.c_cnt[req.fanout], jnp.int32),
-                    jnp.asarray(self.t_cnt[req.fanout], jnp.int32),
-                    jnp.asarray(self.a_cnt[req.fanout], jnp.int32),
-                    jnp.ones(len(req.fanout), bool),
-                )
+            # O2+O3 in one shared scheduling call (the same entry the
+            # DE-engine sweeps and the Pallas kernel oracle go through):
+            # Eq.(8) stagger — near pods dispatch later — and Eq.(9)
+            # admission over the participating pods.
+            lel = self.wait_ewma_us[req.fanout].astype(np.int64)
+            inv = jnp.ones(len(req.fanout), bool)
+            off_j, p_abort_j = sched.plan_dispatch(
+                jnp.asarray(taus + 0, jnp.int32),
+                jnp.asarray(lel, jnp.int32),
+                inv,
+                jnp.asarray(self.c_cnt[req.fanout], jnp.int32),
+                jnp.asarray(self.t_cnt[req.fanout], jnp.int32),
+                jnp.asarray(self.a_cnt[req.fanout], jnp.int32),
+                inv,
             )
-            if self.rng.random() < p_abort:
+            if self.rng.random() < float(p_abort_j):
                 req.rejected = True
                 self.stats.rejected += 1
                 return
-            # O2: Eq.(8) stagger — near pods dispatch later
-            lel = self.wait_ewma_us[req.fanout].astype(np.int64)
-            off = np.asarray(
-                sched.stagger_offsets(
-                    jnp.asarray(taus + 0, jnp.int32),
-                    jnp.ones(len(req.fanout), bool),
-                    jnp.asarray(lel, jnp.int32),
-                )
-            )
+            off = np.asarray(off_j)
         else:
             off = np.zeros(len(req.fanout), np.int64)
         self.a_cnt[req.fanout] += 1

@@ -1,0 +1,173 @@
+"""Tentpole guarantees: batched event draining + multi-world sweeps.
+
+1. The drain step (`SimConfig.drain=True`, the default) must be
+   bitwise-identical to the seed single-event path — same commit/abort
+   counts, same latency histograms, same per-slot metrics — including under
+   heavy timestamp ties (jitter=0, a zero-RTT co-located data source).
+2. `simulate_batch` over a stacked WorldSpec must reproduce the exact
+   metrics of sequential `simulate` calls, for both batching strategies.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, protocol, workloads
+from repro.core.netmodel import make_net_params
+
+T, K, D, N = 8, 4, 2, 32
+RTT = (10.0, 100.0)
+
+
+def _bank(seed=0, theta=0.9):
+    cfg_w = workloads.YCSBConfig(
+        num_ds=D, records_per_node=2000, ops_per_txn=K, dist_ratio=0.5,
+        theta=theta, seed=seed,
+    )
+    return workloads.make_ycsb_bank(cfg_w, terminals=T, txns_per_terminal=N)
+
+
+def _cfg(preset, drain=True, horizon_s=2.0):
+    return engine.SimConfig(
+        terminals=T, max_ops=K, num_ds=D, bank_txns=N,
+        proto=protocol.PRESETS[preset], warmup_us=0,
+        horizon_us=int(horizon_s * 1e6), drain=drain,
+    )
+
+
+def _fingerprint(st, m):
+    """Full bitwise fingerprint: metrics + every histogram/slot array."""
+    return (
+        m,
+        np.asarray(st.hist_all).tobytes(),
+        np.asarray(st.hist_cen).tobytes(),
+        np.asarray(st.hist_dist).tobytes(),
+        np.asarray(st.slot_commits).tobytes(),
+        np.asarray(st.slot_aborts).tobytes(),
+        np.asarray(st.slot_lat).tobytes(),
+        np.asarray(st.hs.w_lat).tobytes(),
+    )
+
+
+class TestDrainBitwiseEquivalence:
+    @pytest.mark.parametrize("preset", ["ssp", "geotp", "chiller"])
+    @pytest.mark.parametrize("jitter", [0, 100])
+    def test_drain_matches_single_event_path(self, preset, jitter):
+        bank = _bank()
+        net = make_net_params(RTT)
+        prints = {}
+        for drain in (False, True):
+            st, m = engine.simulate(
+                _cfg(preset, drain=drain), bank, net.tau_dm, net.tau_ds,
+                jitter_milli=jitter,
+            )
+            assert m["noops"] == 0
+            prints[drain] = _fingerprint(st, m)
+        assert prints[False] == prints[True]
+
+    def test_drain_matches_with_zero_rtt_site_ties(self):
+        # tau=0 for the co-located DS makes message delays 0 => maximal
+        # same-timestamp ties; the drain must still match (via its conflict
+        # mask falling back where batching would reorder effects).
+        bank = _bank(theta=1.2)
+        net = make_net_params((0.0, 27.0))
+        prints = {}
+        for drain in (False, True):
+            st, m = engine.simulate(
+                _cfg("geotp", drain=drain), bank, net.tau_dm, net.tau_ds,
+                jitter_milli=0,
+            )
+            prints[drain] = _fingerprint(st, m)
+        assert prints[False] == prints[True]
+
+
+class TestSimulateBatch:
+    def _worlds_and_cells(self):
+        cells = [
+            ("ssp", RTT, 0),
+            ("ssp-local", RTT, 30),
+            ("chiller", (20.0, 80.0), 0),
+            ("geotp", RTT, 100),
+        ]
+        worlds = engine.stack_worlds(
+            [engine.make_world(p, rtt, jitter_milli=j) for p, rtt, j in cells]
+        )
+        return cells, worlds
+
+    @pytest.mark.parametrize("strategy", ["map", "vmap"])
+    def test_batch_matches_sequential(self, strategy):
+        bank = _bank()
+        cells, worlds = self._worlds_and_cells()
+        cfg = _cfg("geotp", horizon_s=1.0)
+        _, metrics = engine.simulate_batch(
+            cfg, bank, worlds, strategy=strategy
+        )
+        assert len(metrics) == len(cells)
+        for (preset, rtt, jitter), mb in zip(cells, metrics):
+            net = make_net_params(rtt)
+            _, mseq = engine.simulate(
+                _cfg(preset, horizon_s=1.0), bank, net.tau_dm, net.tau_ds,
+                jitter_milli=jitter,
+            )
+            assert mb == mseq, (strategy, preset)
+
+    def test_batched_banks(self):
+        # per-seed banks batched over the sweep (the seeds grid axis)
+        banks = [_bank(seed=sd) for sd in (0, 1, 2)]
+        bank_b = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *banks)
+        worlds = engine.stack_worlds(
+            [engine.make_world("geotp", RTT, jitter_milli=30, seed=sd) for sd in (0, 1, 2)]
+        )
+        cfg = _cfg("geotp", horizon_s=1.0)
+        _, metrics = engine.simulate_batch(
+            cfg, bank_b, worlds, bank_batched=True, strategy="map"
+        )
+        net = make_net_params(RTT)
+        for bank, mb in zip(banks, metrics):
+            _, mseq = engine.simulate(
+                cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30
+            )
+            assert mb == mseq
+
+
+class TestWorldSpec:
+    def test_make_world_carries_protocol_knobs(self):
+        w = engine.make_world("scalardb", RTT, jitter_milli=7, seed=3)
+        p = protocol.PRESETS["scalardb"]
+        assert int(w.dyn.prepare) == p.prepare
+        assert int(w.dyn.stagger) == p.stagger
+        assert bool(w.dyn.middleware_cc) == p.middleware_cc
+        assert bool(w.dyn.admission) == p.admission
+        assert int(w.dyn.lock_timeout_us) == p.lock_timeout_us
+        assert int(w.jitter_milli) == 7
+        assert int(w.seed) == 3
+        assert w.tau_true.shape == (2,)
+
+    def test_proto_excluded_from_compile_key(self):
+        # two configs differing only in proto must hash/compare equal so the
+        # engine compiles once per shape, not once per preset
+        c1 = _cfg("ssp")
+        c2 = _cfg("geotp")
+        assert c1 == c2 and hash(c1) == hash(c2)
+        c3 = dataclasses.replace(c1, drain=False)
+        assert c1 != c3
+
+    def test_dyn_override_beats_cfg_proto(self):
+        # run with cfg.proto=ssp but world knobs geotp: result must equal a
+        # run whose cfg.proto is geotp (proof handlers read only SimState.dyn)
+        bank = _bank()
+        net = make_net_params(RTT)
+        cfg = _cfg("ssp", horizon_s=1.0)
+        st = engine.init_state(
+            cfg, net.tau_dm, net.tau_ds, jitter_milli=30,
+            dyn=engine.dyn_from_proto(protocol.PRESETS["geotp"]),
+        )
+        _, m_dyn = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds, state=st)
+        _, m_ref = engine.simulate(
+            _cfg("geotp", horizon_s=1.0), bank, net.tau_dm, net.tau_ds,
+            jitter_milli=30,
+        )
+        assert m_dyn == m_ref

@@ -127,8 +127,24 @@ def test_mlstm_vs_ref(case, dtype):
     )
 
 
-@pytest.mark.parametrize("n,d,k", [(64, 4, 8), (256, 8, 16), (100, 3, 5)])
-def test_geo_schedule_vs_ref(n, d, k):
+# (N, D, K, bn) — includes N % bn != 0 cases exercising the padded grid.
+GEO_CASES = [
+    (64, 4, 8, 256),
+    (256, 8, 16, 128),
+    (100, 3, 5, 32),
+    (48, 4, 5, 16),
+    (37, 2, 4, 8),
+]
+
+
+@pytest.mark.parametrize("n,d,k,bn", GEO_CASES)
+@pytest.mark.parametrize("interpret", [None, True])
+def test_geo_schedule_vs_ref(n, d, k, bn, interpret):
+    """Kernel parity vs the shared scheduler oracle.
+
+    interpret=None auto-selects the execution mode (compiled on TPU,
+    interpreter on CPU), so on TPU hosts this is a compiled-vs-ref check.
+    """
     ks = jax.random.split(jax.random.PRNGKey(4), 7)
     tau = jax.random.randint(ks[0], (n, d), 0, 300_000)
     lel = jax.random.randint(ks[1], (n, d), 0, 50_000)
@@ -138,8 +154,9 @@ def test_geo_schedule_vs_ref(n, d, k):
     t = c + jax.random.randint(ks[4], (n, k), 0, 50)
     a = jax.random.randint(ks[5], (n, k), 0, 10)
     valid = jax.random.bernoulli(ks[6], 0.8, (n, k))
-    off, p = schedule_batch(tau, lel, inv, c, t, a, valid)
+    off, p = schedule_batch(tau, lel, inv, c, t, a, valid, bn=bn, interpret=interpret)
     off_r, p_r = geo_schedule_ref(tau, lel, inv, c, t, a, valid)
+    assert off.shape == (n, d) and p.shape == (n,)
     np.testing.assert_array_equal(np.asarray(off), np.asarray(off_r))
     np.testing.assert_allclose(np.asarray(p), np.asarray(p_r), atol=1e-6)
     # invariants: offsets respect the Eq.(2)/Eq.(7) constraint
