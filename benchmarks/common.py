@@ -167,6 +167,7 @@ def run_sweep(
         events += m["events"]
         assert m["noops"] == 0, (tag, c["preset"], m["noops"])
     if record:
+        drain = engine.drain_stats(states)
         record_bench(
             tag,
             {
@@ -177,6 +178,10 @@ def run_sweep(
                 "events_per_sec": round(events / max(wall, 1e-9), 1),
                 "strategy": strategy,
                 "horizon_s": horizon_s,
+                # omnibus-drain telemetry: share of events applied by the
+                # masked pass (0.0 under the lockstep/vmap step, which is
+                # branchless per event instead of batching ties)
+                "drain_hit_rate": drain["drain_hit_rate"],
             },
         )
     return states, metrics

@@ -4,10 +4,12 @@
 #   scripts/ci.sh            # full tier-1 (minus slow marks) + smoke guard
 #   SKIP_TESTS=1 scripts/ci.sh   # smoke guard only
 #
-# The smoke step runs `benchmarks/run.py --smoke`: a <60s fig5 YCSB grid
-# (presets x seeds) executed as one batched device call. It asserts that
-# aggregate events/sec is reported and fails if throughput drops >30% below
-# the baseline stored in results/bench/BENCH_engine.json.
+# The smoke step runs `benchmarks/run.py --smoke`: a reduced fig5 YCSB grid
+# (presets x seeds) executed once per batching strategy. It asserts that
+# both strategies report events/sec, that vmap (lockstep, branchless omnibus
+# step) stays within 10% of (or beats) map on CPU, and that map throughput
+# has not dropped >30% below the baseline stored in
+# results/bench/BENCH_engine.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -26,10 +28,20 @@ if [ "${SKIP_TESTS:-0}" != "1" ]; then
     python -m pytest -x -q -m "not slow"
 fi
 
-# Perf smoke + regression guard (exits non-zero on >30% events/sec drop).
+# Perf smoke + regression guards. The smoke exits non-zero itself on a >30%
+# map events/sec drop or vmap < 0.9x map on CPU; assert here that both
+# strategies actually reported and the lockstep ratio was measured.
 python -m benchmarks.run --smoke | tee /tmp/smoke.out
-grep -q "events/sec" /tmp/smoke.out || {
-    echo "[ci] smoke did not report events/sec"
+grep -q "\[smoke\] map: .*events/sec" /tmp/smoke.out || {
+    echo "[ci] smoke did not report map events/sec"
+    exit 1
+}
+grep -q "\[smoke\] vmap: .*events/sec" /tmp/smoke.out || {
+    echo "[ci] smoke did not report vmap events/sec"
+    exit 1
+}
+grep -q "vmap/map events/sec ratio" /tmp/smoke.out || {
+    echo "[ci] smoke did not report the vmap/map ratio"
     exit 1
 }
 echo "[ci] OK"

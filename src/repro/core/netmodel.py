@@ -121,8 +121,20 @@ def ewma_update(est: jax.Array, sample: jax.Array, beta_milli: jax.Array) -> jax
     float32 internally (int32 `est*beta` would overflow for RTTs > ~2 s)."""
     e = est.astype(jnp.float32)
     sm = sample.astype(jnp.float32)
-    b = beta_milli.astype(jnp.float32) / 1000.0
+    b = jnp.asarray(beta_milli).astype(jnp.float32) / 1000.0
     return (e * b + sm * (1.0 - b)).astype(jnp.int32)
+
+
+def ewma_update_where(
+    est: jax.Array, sample: jax.Array, beta_milli: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Masked EWMA delta: update only where `mask`, keep `est` elsewhere.
+
+    The engine's omnibus masked step applies one monitor update per data
+    source with at most one observation per drained timestamp; elementwise
+    float32 math keeps it bitwise-equal to `ewma_update` applied per event.
+    """
+    return jnp.where(mask, ewma_update(est, sample, beta_milli), est)
 
 
 @dataclasses.dataclass(frozen=True)

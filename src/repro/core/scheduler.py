@@ -141,6 +141,35 @@ def plan_dispatch(
     return off, p_abort
 
 
+def commit_decision(
+    prepare: jax.Array,
+    all_at_dm: jax.Array,
+    all_voted: jax.Array,
+    centralized: jax.Array,
+    prepare_none: int,
+    prepare_coord: int,
+    prepare_decentral: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The DM's commit-phase decision, elementwise over any batch shape.
+
+    Single source for both the engine's sequential `_dm_progress` and its
+    omnibus masked step (the two paths must agree bitwise):
+      do_commit  — broadcast commit now (one-phase for centralized txns; the
+                   no-prepare preset commits as soon as every sub reported);
+      do_prepare — coordinated 2PC prepare broadcast;
+      do_log     — all votes in: flush the DM commit log.
+    Priority (commit > prepare > log) is applied by the caller.
+    """
+    do_commit = jnp.where(prepare == prepare_none, all_at_dm, centralized & all_at_dm)
+    do_prepare = (prepare == prepare_coord) & all_at_dm & ~centralized
+    do_log = (
+        ((prepare == prepare_coord) | (prepare == prepare_decentral))
+        & all_voted
+        & ~centralized
+    )
+    return do_commit, do_prepare, do_log
+
+
 def round_barrier_next_dispatch(
     now: jax.Array, tau: jax.Array, involved_next: jax.Array, lel: jax.Array | None
 ) -> jax.Array:

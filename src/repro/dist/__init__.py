@@ -1,0 +1,12 @@
+"""Distributed substrate: sharding rules, GeoTP one-round-commit
+checkpointing, gradient compression and elastic resizing.
+
+The checkpoint manager mirrors the paper's commit-protocol insight at the
+training layer: every host writes its shard (decentralized prepare — the
+write IS the vote), then a single atomic commit marker finalizes the step,
+so recovery never needs a second round of coordination.
+"""
+
+from repro.dist import checkpoint, compression, elastic, sharding
+
+__all__ = ["checkpoint", "compression", "elastic", "sharding"]

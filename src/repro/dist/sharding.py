@@ -1,0 +1,89 @@
+"""Logical-axis -> mesh-axis sharding rules and tree-level sharding builders.
+
+The model schema (repro.models.schema) names every weight dim with a logical
+axis ("embed", "heads", "mlp", ...); this module maps those names onto mesh
+axes per execution mode and materializes NamedSharding trees for params,
+optimizer state and input batches. `repro.launch.dryrun`/`perf` consume these
+to lower cells with explicit in/out shardings.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def train_rules(mesh: Mesh) -> dict:
+    """FSDP storage over the data axes, tensor parallelism over "model".
+
+    "embed" is the FSDP axis (params sharded over data for storage; gathered
+    per layer under jit), the wide dims shard over the model axis.
+    """
+    data = data_axes(mesh)
+    return {
+        "embed": data if len(data) > 1 else (data[0] if data else None),
+        "vocab": "model",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "experts": "model",
+        "layers": None,
+        "state": None,
+        "conv": None,
+    }
+
+
+def decode_rules(mesh: Mesh) -> dict:
+    """Pure tensor parallelism: params replicated over data, sharded over
+    "model" on the wide dims (decode batches are too small for FSDP)."""
+    return {
+        "embed": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "experts": "model",
+        "layers": None,
+        "state": None,
+        "conv": None,
+    }
+
+
+def rules_for(mesh: Mesh, mode: str) -> dict:
+    return train_rules(mesh) if mode == "train" else decode_rules(mesh)
+
+
+def param_shardings(cfg, mesh: Mesh, mode: str = "train") -> dict:
+    """NamedSharding tree matching the arch's parameter schema."""
+    from repro.models import schema, stack
+
+    return schema.shardings(stack.build_schema(cfg), rules_for(mesh, mode), mesh)
+
+
+def opt_shardings(param_sh: dict, mesh: Mesh) -> dict:
+    """AdamW state tree: moments follow the params, the step is replicated."""
+    return {
+        "m": param_sh,
+        "v": param_sh,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(mesh: Mesh, batch_spec: dict) -> dict:
+    """Shard every batch leaf on its leading (batch) dim over the data axes;
+    replicate dims the axis size does not divide (same guard as the schema)."""
+    import math
+
+    import jax
+
+    data = data_axes(mesh)
+    size = math.prod(mesh.shape[a] for a in data) if data else 1
+    axis = data if len(data) > 1 else (data[0] if data else None)
+
+    def one(spec):
+        if axis is None or spec.shape == () or spec.shape[0] % size:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(axis, *([None] * (len(spec.shape) - 1))))
+
+    return jax.tree.map(one, batch_spec)

@@ -34,10 +34,13 @@ def _kernel(la_ref, b_ref, o_ref, h_ref, *, cs: int):
 
     def step(t, h):
         h = jnp.exp(la[t]) * h + b[t]
+        # all-Slice indices: a literal int axis index trips an AttributeError
+        # in this jax version's interpret-mode discharge rule (it assumes
+        # every non-Slice index is an array with .shape)
         pl.store(
             o_ref,
-            (0, pl.dslice(t, 1), slice(None)),
-            h[None].astype(o_ref.dtype),
+            (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+            h[None, None].astype(o_ref.dtype),
         )
         return h
 

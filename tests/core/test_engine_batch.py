@@ -35,6 +35,7 @@ def _cfg(preset, drain=True, horizon_s=2.0):
         terminals=T, max_ops=K, num_ds=D, bank_txns=N,
         proto=protocol.PRESETS[preset], warmup_us=0,
         horizon_us=int(horizon_s * 1e6), drain=drain,
+        track_slots=True,  # widen the bitwise fingerprint
     )
 
 
@@ -131,6 +132,190 @@ class TestSimulateBatch:
                 cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30
             )
             assert mb == mseq
+
+
+class TestLockstepBitwise:
+    """PR-2 tentpole: the branchless omnibus step (`SimConfig.lockstep`,
+    the vmap-strategy hot path) must be bitwise-identical to the sequential
+    switch — same trajectories, metrics, histograms and hotspot table."""
+
+    @pytest.mark.parametrize("preset", ["ssp", "geotp", "chiller"])
+    def test_lockstep_matches_single_event_path(self, preset):
+        bank = _bank()
+        net = make_net_params(RTT)
+        prints = {}
+        for lockstep in (False, True):
+            cfg = dataclasses.replace(
+                _cfg(preset, drain=False), lockstep=lockstep
+            )
+            st, m = engine.simulate(
+                cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30
+            )
+            assert m["noops"] == 0
+            prints[lockstep] = _fingerprint(st, m)
+        assert prints[False] == prints[True]
+
+    def test_lockstep_matches_interactive_rounds(self):
+        # rounds=3 exercises the DM round-advance + shared stagger path
+        cfg_w = workloads.YCSBConfig(
+            num_ds=D, records_per_node=2000, ops_per_txn=6, dist_ratio=0.6,
+            theta=0.9, seed=0, rounds=3,
+        )
+        bank = workloads.make_ycsb_bank(cfg_w, terminals=T, txns_per_terminal=N)
+        net = make_net_params(RTT)
+        prints = {}
+        for lockstep in (False, True):
+            cfg = engine.SimConfig(
+                terminals=T, max_ops=6, num_ds=D, bank_txns=N,
+                proto=protocol.PRESETS["geotp"], warmup_us=0,
+                horizon_us=3_000_000, drain=False, lockstep=lockstep,
+                track_slots=True,
+            )
+            st, m = engine.simulate(
+                cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30
+            )
+            prints[lockstep] = _fingerprint(st, m)
+        assert prints[True][0]["commits"] > 0
+        assert prints[False] == prints[True]
+
+    def test_lockstep_matches_under_aborts(self):
+        # tiny keyspace + hot skew: lock-wait timeouts, abort fan-outs and
+        # retries all flow through the masked pass
+        cfg_w = workloads.YCSBConfig(
+            num_ds=D, records_per_node=4, ops_per_txn=K, dist_ratio=0.8,
+            theta=1.6, seed=1,
+        )
+        bank = workloads.make_ycsb_bank(cfg_w, terminals=T, txns_per_terminal=N)
+        net = make_net_params((5.0, 20.0))
+        prints = {}
+        for lockstep in (False, True):
+            cfg = dataclasses.replace(
+                _cfg("geotp", drain=False, horizon_s=6.0), lockstep=lockstep
+            )
+            st, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds)
+            m = {k: v for k, v in m.items() if v == v}  # drop NaN percentiles
+            prints[lockstep] = _fingerprint(st, m)
+        assert prints[True][0]["aborts"] > 0  # the abort path really ran
+        assert prints[False] == prints[True]
+
+
+class TestAllCategoryDrain:
+    """PR-2 tentpole: terminal/subtxn events drain too.
+
+    Commit-ack and vote fan-in events that share a timestamp at *distinct*
+    terminals and distinct DM-side data sources are independent and must be
+    applied in one omnibus masked pass (drained counter advances), while a
+    same-DM pair must route through the sequential fallback — in both cases
+    bitwise-identical to single-event stepping.
+    """
+
+    T2, K2, D2, N2 = 4, 2, 2, 4
+
+    def _cfg2(self, drain=True):
+        return engine.SimConfig(
+            terminals=self.T2, max_ops=self.K2, num_ds=self.D2,
+            bank_txns=self.N2, proto=protocol.PRESETS["ssp"], warmup_us=0,
+            horizon_us=10_000_000, drain=drain, track_slots=True,
+        )
+
+    def _bank2(self):
+        cfg_w = workloads.YCSBConfig(
+            num_ds=self.D2, records_per_node=64, ops_per_txn=self.K2,
+            dist_ratio=0.5, theta=0.5, seed=0,
+        )
+        return workloads.make_ycsb_bank(
+            cfg_w, terminals=self.T2, txns_per_terminal=self.N2
+        )
+
+    def _mk_state(self, ack_d: int, vote_d: int, done_other=False):
+        """Terminal 0 awaits a commit-ack at DS ack_d; terminal 1 awaits a
+        2PC vote at DS vote_d; both fire at t=1000 µs. The other subtxn of
+        each terminal is in flight (due later) so neither fan-in completes."""
+        cfg = self._cfg2()
+        net = make_net_params(RTT)
+        s = engine.init_state(cfg, net.tau_dm, net.tau_ds, jitter_milli=0)
+        TS = 1000
+        inv = np.zeros((self.T2, self.D2), bool)
+        inv[0] = [True, True]
+        inv[1] = [True, True]
+        sub_state = np.zeros((self.T2, self.D2), np.int8)
+        sub_time = np.full((self.T2, self.D2), engine.INF_US, np.int32)
+        # terminal 0: commit fan-in — acked sub due now, peer acks later
+        # (or is already SUB_DONE when done_other, making this the
+        #  txn-completing ack that must not batch)
+        sub_state[0, ack_d] = engine.SUB_ACK
+        sub_time[0, ack_d] = TS
+        other0 = 1 - ack_d
+        sub_state[0, other0] = engine.SUB_DONE if done_other else engine.SUB_ACK
+        if not done_other:
+            sub_time[0, other0] = TS + 700
+        # terminal 1: 2PC vote fan-in — one vote due now, peer still flushing
+        sub_state[1, vote_d] = engine.SUB_VOTE
+        sub_time[1, vote_d] = TS
+        other1 = 1 - vote_d
+        sub_state[1, other1] = engine.SUB_PREPARING
+        sub_time[1, other1] = TS + 900
+        phase = np.zeros((self.T2,), np.int8)
+        phase[0] = engine.T_COMMIT_WAIT
+        phase[1] = engine.T_ACTIVE
+        return cfg, s._replace(
+            inv=jnp.asarray(inv),
+            sub_state=jnp.asarray(sub_state),
+            sub_time=jnp.asarray(sub_time),
+            phase=jnp.asarray(phase),
+            term_time=jnp.full((self.T2,), engine.INF_US, jnp.int32),
+        )
+
+    @staticmethod
+    def _steps(cfg, bank, s, n, drain):
+        step = engine._drain_step if drain else engine._step
+
+        @jax.jit
+        def go(b, s_):
+            for _ in range(n):
+                s_ = step(cfg, b, s_)
+            return s_
+
+        return go(bank, s)
+
+    @staticmethod
+    def _assert_bitwise(sa, sb):
+        # `drained` is path telemetry; every other leaf (nested hs/dyn
+        # included) must match bitwise
+        fa = jax.tree_util.tree_flatten_with_path(sa._replace(drained=sb.drained))[0]
+        fb = jax.tree_util.tree_flatten_with_path(sb)[0]
+        assert len(fa) == len(fb)
+        for (path, a), (_, b) in zip(fa, fb):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=jax.tree_util.keystr(path)
+            )
+
+    def test_ack_and_vote_fanin_drain_together(self):
+        bank = self._bank2()
+        cfg, s = self._mk_state(ack_d=0, vote_d=1)
+        drained = self._steps(cfg, bank, s, 1, drain=True)
+        seq = self._steps(cfg, bank, s, 2, drain=False)
+        assert int(drained.drained) == 2  # both fan-ins went through the pass
+        assert int(drained.iters) == 2 == int(seq.iters)
+        self._assert_bitwise(drained, seq)
+
+    def test_same_dm_conflict_routes_sequential(self):
+        bank = self._bank2()
+        cfg, s = self._mk_state(ack_d=0, vote_d=0)  # both fan-ins hit DS 0
+        drained = self._steps(cfg, bank, s, 2, drain=True)
+        seq = self._steps(cfg, bank, s, 2, drain=False)
+        assert int(drained.drained) == 0  # conflict mask forced the fallback
+        self._assert_bitwise(drained, seq)
+
+    def test_txn_completing_ack_routes_sequential(self):
+        # the ack that finishes the transaction schedules terminal work at
+        # t_now — the drain must refuse it even at distinct terminals
+        bank = self._bank2()
+        cfg, s = self._mk_state(ack_d=0, vote_d=1, done_other=True)
+        drained = self._steps(cfg, bank, s, 2, drain=True)
+        seq = self._steps(cfg, bank, s, 2, drain=False)
+        assert int(drained.drained) == 0
+        self._assert_bitwise(drained, seq)
 
 
 class TestWorldSpec:

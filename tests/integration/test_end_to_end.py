@@ -65,11 +65,18 @@ def test_dryrun_smoke_8_devices():
         "c=jax.jit(fn,in_shardings=in_sh,out_shardings=out_sh).lower(*args).compile();"
         "print('COMPILED', c.cost_analysis() is not None)"
     )
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    # backend probing hangs without an explicit platform on hosts that pin
+    # one (e.g. containers exporting JAX_PLATFORMS=cpu) — pass it through
+    import os
+
+    if os.environ.get("JAX_PLATFORMS"):
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     out = subprocess.run(
         [sys.executable, "-c", code],
         capture_output=True,
         text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env=env,
         timeout=300,
     )
     assert "COMPILED" in out.stdout, out.stderr[-2000:]
