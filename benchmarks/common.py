@@ -178,10 +178,14 @@ def run_sweep(
                 "events_per_sec": round(events / max(wall, 1e-9), 1),
                 "strategy": strategy,
                 "horizon_s": horizon_s,
-                # omnibus-drain telemetry: share of events applied by the
-                # masked pass (0.0 under the lockstep/vmap step, which is
-                # branchless per event instead of batching ties)
+                # windowed-drain telemetry: share of events applied by masked
+                # window passes, mean events per window, and the actual
+                # while-loop trip count (events - drained + windows). Both
+                # strategies drain now — the lockstep/vmap path reports real
+                # hit rates instead of a silent drain=False downgrade.
                 "drain_hit_rate": drain["drain_hit_rate"],
+                "mean_window_len": drain["mean_window_len"],
+                "loop_iters": drain["loop_iters"],
             },
         )
     return states, metrics

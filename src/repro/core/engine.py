@@ -3,21 +3,26 @@
 This is the paper's experimental platform, rebuilt as a deterministic JAX
 state machine:
 
-* DM (middleware) + D data sources; int32 µs clock; a `lax.while_loop` finds
-  the minimum timestamp with one fused reduction over a concatenated
-  `[T + T*D + T*K]` event-time view each iteration and processes it with one
-  of three bitwise-interchangeable step modes:
+* DM (middleware) + D data sources; int32 µs clock; a `lax.while_loop`
+  processes the concatenated `[T + T*D + T*K]` event-time view (term | sub |
+  op) each iteration with one of four bitwise-interchangeable step modes:
     - `_step` — seed semantics: dispatch the single earliest event through a
       12-way `lax.switch` (state-twin handlers fused);
-    - `_drain_step` (`SimConfig.drain`, default) — apply **all** events of
-      every category sharing the minimum timestamp in one masked pass; due
-      sets that could interact through shared lock-table or DM state
-      (detected by a conflict mask) fall back to `_step`;
-    - `_omni_step` (`SimConfig.lockstep`) — branchless all-category dispatch:
-      the single earliest event processed as one straight-line masked pass
-      with no switch/cond, heavy kernels shared across categories. This is
-      the vmap-strategy hot path, where lockstep lanes execute every branch
-      of a switch anyway and a fused pass is ~5x cheaper per iteration.
+    - `_drain_step` (`SimConfig.drain`, default) — apply the **maximal
+      conflict-free prefix (window)** of the global event order in one masked
+      pass: a stable sort ranks the due horizon, a prefix scan stops the
+      window at the first non-drainable event, the first event that would
+      schedule work inside the window, or the later event of any conflicting
+      pair (shared lock keys, shared DM terminal/DS, ...); degenerate windows
+      fall back to `_step`;
+    - `_omni_step` (`SimConfig.lockstep`, `drain=False`) — branchless
+      all-category dispatch: the single earliest event processed as one
+      straight-line masked pass with no switch/cond, heavy kernels shared
+      across categories (lockstep lanes execute every branch of a switch
+      anyway, so a fused pass is ~5x cheaper per iteration);
+    - `_omni_window` (`SimConfig.lockstep` + `drain`) — the vmap-strategy hot
+      path: the window plan and `_omni_step` both computed branchlessly, one
+      masked select picks per lane, so lockstep lanes drain windows too.
 * 2PL lock tables live at the data sources (dense arrays over the benchmark
   key space, FIFO grant by enqueue time, lock-wait-timeout aborts — the
   concurrency-control abstraction the paper's data sources expose).
@@ -34,8 +39,9 @@ Event categories:
   op events        — arrival at DS, exec completion, lock-wait timeout
 
 All randomness (network jitter, admission draws) is hash-derived from event
-counters => bitwise-reproducible runs (the drain step assigns each batched
-event the iteration number it would have had sequentially).
+counters => bitwise-reproducible runs (the windowed drain assigns each
+batched event the iteration number and timestamp it would have had
+sequentially).
 """
 
 from __future__ import annotations
@@ -239,11 +245,12 @@ class SimConfig:
     max_events: int = 4_000_000
     alpha_milli: int = 800  # Eq.(4) EWMA α
     beta_milli: int = 875  # network-latency EWMA (the paper's monitor)
-    drain: bool = True  # batched same-timestamp draining (False = seed path)
+    drain: bool = True  # windowed conflict-free draining (False = seed path)
     # branchless omnibus step (lockstep lanes): every handler is a masked
     # delta in ONE straight-line pass — no lax.switch/cond, which under vmap
-    # execute every branch and pay a full-state select per branch. Takes
-    # precedence over `drain`. Bitwise-identical to both other step modes.
+    # execute every branch and pay a full-state select per branch. Combined
+    # with `drain` the lockstep path runs `_omni_window` (branchless windowed
+    # drain). Bitwise-identical to the other step modes either way.
     lockstep: bool = False
     # per-bank-slot commit/abort/latency telemetry ([T, N] x3). Nothing in
     # summarize/figures reads it, and it would dominate the lockstep
@@ -305,7 +312,8 @@ class SimState(NamedTuple):
     lcs_sum: jax.Array  # i32, milliseconds
     lcs_cnt: jax.Array
     noops: jax.Array  # i32 — must stay 0 (state-machine invariant)
-    drained: jax.Array  # i32 — events applied via the omnibus masked pass
+    drained: jax.Array  # i32 — events applied via the windowed masked pass
+    windows: jax.Array  # i32 — masked window applications (mean len = drained/windows)
     slot_commits: jax.Array  # [T,N] i32
     slot_aborts: jax.Array  # [T,N] i32
     slot_lat: jax.Array  # [T,N] i32 (sum of commit latencies, ms)
@@ -379,6 +387,7 @@ def init_state(
         lcs_cnt=i32(0),
         noops=i32(0),
         drained=i32(0),
+        windows=i32(0),
         # untracked: a 1-slot stub (size-0 axes reject traced indices at
         # trace time); mode="drop" discards every slot>0 write either way
         slot_commits=jnp.zeros((T, N if cfg.track_slots else 1), i32),
@@ -593,13 +602,7 @@ def _hs_complete_ds(cfg, s: SimState, t, d, committed) -> SimState:
     hs = s.hs
     slot, found = hs_mod.lookup_slots(hs.slot_key, keys, mask)
     lel = s.sub_lel[t, d].astype(jnp.float32)
-    vf = found.astype(jnp.float32)
-    w_old = hs.w_lat[slot].astype(jnp.float32) * vf
-    total = jnp.sum(w_old)
-    n = jnp.maximum(jnp.sum(vf), 1.0)
-    share = jnp.where(total > 0.0, w_old / jnp.maximum(total, 1.0), vf / n)
-    a = jnp.float32(cfg.alpha_milli / 1000.0)
-    new_w = jnp.clip(w_old * a + lel * share * (1.0 - a), 0.0, 1e7).astype(jnp.int32)
+    new_w = hs_mod.eq4_masked_w(hs.w_lat, slot, found, lel, cfg.alpha_milli)
     upd = found.astype(jnp.int32)
     hs = hs._replace(
         w_lat=hs.w_lat.at[slot].set(jnp.where(found, new_w, hs.w_lat[slot])),
@@ -1692,13 +1695,7 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     # Eq.(4) update; that add lives in sub_lel_row (scattered later), so fold
     # it into the value read here
     lel_f = (s.sub_lel[t, d_rel] + w(is_timeout, span_do, 0)).astype(jnp.float32)
-    vf = found_f.astype(jnp.float32)
-    w_old = hs.w_lat[slot_f].astype(jnp.float32) * vf
-    total_f = jnp.sum(w_old)
-    n_f = jnp.maximum(jnp.sum(vf), 1.0)
-    share_f = w(total_f > 0.0, w_old / jnp.maximum(total_f, 1.0), vf / n_f)
-    alpha = jnp.float32(cfg.alpha_milli / 1000.0)
-    new_w = jnp.clip(w_old * alpha + lel_f * share_f * (1.0 - alpha), 0.0, 1e7).astype(i32)
+    new_w = hs_mod.eq4_masked_w(hs.w_lat, slot_f, found_f, lel_f, cfg.alpha_milli)
     upd_f = found_f.astype(i32)
     hs = hs._replace(
         w_lat=hs.w_lat.at[slot_f].set(w(found_f, new_w, hs.w_lat[slot_f])),
@@ -1854,89 +1851,100 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     )
 
 
-def _omni_drain(
-    cfg: SimConfig, bank: Bank, s: SimState, t_now, due_term, due_sub, due_op
-) -> SimState:
-    """Apply every event due at t_now in ONE fused masked pass — the omnibus
-    step. Every drainable category contributes a masked state delta computed
-    on the pre-state; the deltas write provably disjoint slots, so applying
-    them together is bitwise-identical to the sequential flat-order steps.
+def _window_plan(cfg: SimConfig, bank: Bank, s: SimState):
+    """Plan the maximal conflict-free *prefix* (window) of the global event
+    order — the generalization of the tie-only drain to events at distinct
+    timestamps.
 
-    Drain coverage (category -> batch condition):
-      op arrival / exec completion — touched lock keys unique, no event at t_now
-      sub dispatch (SUB_SCHED)     — arrival lands strictly after t_now
-      DS prepare cmd / WAL flushed — scheduled times strictly after t_now
-      DM reply / vote fan-in       — unique terminal AND unique DS across all
-                                     DM-side events; `_dm_progress` must be
-                                     quiescent or take a pure commit/prepare/
-                                     log decision (round advance + chiller
-                                     stage-2 re-dispatch at t_now fall back)
-      commit-ack / abort-ack fan-in— same, and not the txn-completing ack
-                                     (the finish schedules a terminal event
-                                     at t_now — sequential only)
-      terminal commit-log flush    — terminal not touched by any other event
-      DS commit / peer abort       — released keys unique, no waiter queued
-                                     on them (FIFO grant order), no co-due op
-                                     event at the same (t, DS)
-    Unbatchable shapes fall back to the single-event `_step`; each batched
-    event is assigned the iteration number it would have had sequentially,
-    so hash-derived message jitter is reproduced exactly.
+    Per-event timestamps are the event queues themselves; ranking the
+    concatenated [T + T*D + T*K] time view with one stable sort reproduces the
+    sequential processing order exactly (time, then flat-index tie-break).
+    A prefix scan then finds the longest prefix such that
+
+      * every event belongs to a drainable category — txn starts, lock-wait
+        timeouts, round advances, chiller stage-2 re-dispatches, releases with
+        queued waiters and txn-completing acks stop the window (their
+        earliest-scheduled-time is pinned to 0);
+      * no event schedules a new event at or before the window's last
+        timestamp (running min of per-event earliest-scheduled-times must stay
+        strictly above the sorted times);
+      * no two window events interact — order-aware pairwise conflicts mark
+        the *later* event of each conflicting pair, so the window stops
+        exactly at the first conflicting event: duplicate lock keys across
+        arrivals / chain targets / released footprints, a second DM fan-in on
+        one terminal or one data source (EWMA updates once per DS), a DM
+        fan-in or commit-log flush sharing its terminal with any other event,
+        a release sharing its (terminal, DS) with an op event.
+
+    Every windowed event keeps the iteration number (hash salt) and timestamp
+    it would have had sequentially, so applying the whole window in one
+    masked pass is bitwise-identical to single-event stepping.
+
+    Returns ``(use, apply)``: `use` is "the window holds >= 2 events" and
+    `apply(s)` materializes the post-window state.
     """
     T, D, K = cfg.terminals, cfg.num_ds, cfg.max_ops
+    M = T + T * D + T * K
     i32 = jnp.int32
+    BIG = jnp.int32(M)
     st = s.op_state
     sst = s.sub_state
     inv = s.inv
+    evt_term = s.term_time
+    evt_sub = s.sub_time
+    evt_op = s.op_time
+    flat = _times_flat(s)
 
-    # ---- category masks ---------------------------------------------------
-    due_log = due_term & (s.phase == T_COMMIT_LOG)  # [T]
-    due_sched = due_sub & (sst == SUB_SCHED)  # [T,D]
-    due_reply = due_sub & (sst == SUB_ROUND_REPLY)
-    due_prep = due_sub & (sst == SUB_PREP_CMD)
-    due_preparing = due_sub & (sst == SUB_PREPARING)
-    due_vote = due_sub & (sst == SUB_VOTE)
-    due_commit = due_sub & ((sst == SUB_COMMIT_CMD) | (sst == SUB_LOCAL_COMMIT))
-    due_ack = due_sub & (sst == SUB_ACK)
-    due_abort_peer = due_sub & (sst == SUB_ABORT_PEER)
-    due_abort_ack = due_sub & (sst == SUB_ABORT_ACK)
-    due_arr = due_op & (st == OP_ENROUTE)
-    due_exec = due_op & (st == OP_EXEC)
-    dm_mask = due_reply | due_vote | due_ack | due_abort_ack  # [T,D]
-    f_mask = due_commit | due_abort_peer  # [T,D]
+    # ---- sequential ranks of the flat time view ----------------------------
+    # pos[e] = #events lexicographically before e by (time, flat index) — the
+    # exact sequential processing order. Two bitwise-identical routes: the
+    # scalar (map) path uses one stable argsort; the lockstep path counts with
+    # an M x M comparison matrix, because batched sorts under vmap lower to
+    # pathologically slow per-lane comparator loops on CPU while the matrix
+    # is pure elementwise work shared across lanes.
+    if cfg.lockstep:
+        idx_m = jnp.arange(M, dtype=i32)
+        lex_lt = (flat[None, :] < flat[:, None]) | (
+            (flat[None, :] == flat[:, None]) & (idx_m[None, :] < idx_m[:, None])
+        )  # [M,M]: lex_lt[e, e'] <=> e' processed before e
+        pos = jnp.sum(lex_lt, axis=1, dtype=i32)
+    else:
+        order = jnp.argsort(flat, stable=True)
+        pos = jnp.zeros((M,), i32).at[order].set(jnp.arange(M, dtype=i32))
+    pos_term = pos[:T]
+    pos_sub = pos[T : T + T * D].reshape(T, D)
+    pos_op = pos[T + T * D :].reshape(T, K)
+    iters_term = s.iters + 1 + pos_term
+    iters_sub = s.iters + 1 + pos_sub
+    iters_op = s.iters + 1 + pos_op
 
-    # ---- sequential-order ranks: each event gets the iteration number it
-    # would have had in the flat (term | sub | op) tie-break order ----------
-    due_flat = jnp.concatenate(
-        [due_term, due_sub.reshape(-1), due_op.reshape(-1)]
-    )
-    n_due = jnp.sum(due_flat.astype(i32))
-    iters_flat = s.iters + jnp.cumsum(due_flat.astype(i32))  # rank+1 offsets
-    iters_term = iters_flat[:T]
-    iters_sub = iters_flat[T : T + T * D].reshape(T, D)
-    iters_op = iters_flat[T + T * D :].reshape(T, K)
+    # ---- per-slot event categories (what each slot would fire as) ---------
+    cat_log = s.phase == T_COMMIT_LOG
+    cat_sched = sst == SUB_SCHED
+    cat_reply = sst == SUB_ROUND_REPLY
+    cat_vote = sst == SUB_VOTE
+    cat_prog = cat_reply | cat_vote
+    cat_prep = sst == SUB_PREP_CMD
+    cat_preparing = sst == SUB_PREPARING
+    cat_commit = (sst == SUB_COMMIT_CMD) | (sst == SUB_LOCAL_COMMIT)
+    cat_abort_peer = sst == SUB_ABORT_PEER
+    cat_ack = sst == SUB_ACK
+    cat_abort_ack = sst == SUB_ABORT_ACK
+    dm_cat = cat_prog | cat_ack | cat_abort_ack
+    f_cat = cat_commit | cat_abort_peer
+    cat_arr = st == OP_ENROUTE
+    cat_exec = st == OP_EXEC
 
-    d_of = s.op_ds.astype(i32)  # [T,K]
+    d_of = s.op_ds.astype(i32)
     oh_d = jax.nn.one_hot(d_of, D, dtype=bool)  # [T,K,D]
     opn = st != OP_NONE
     tau_row = s.tau_true[None, :]  # [1,D]
     d_ids = jnp.arange(D, dtype=i32)
+    kk = jnp.arange(K, dtype=i32)
 
-    # ======================= op events (arrive / exec) =====================
-    # chain targets of exec completions (first QUEUED op, same DS/round)
-    row_q = st == OP_QUEUED
-    same_round = s.op_round == s.cur_round[:, None]
-    eq_ds = s.op_ds[:, :, None] == s.op_ds[:, None, :]
-    chain_mask = (
-        due_exec[:, :, None] & row_q[:, None, :] & eq_ds & same_round[:, None, :]
-    )
-    has_next = jnp.any(chain_mask, axis=2)
-    nxt = jnp.argmax(chain_mask, axis=2).astype(i32)  # [T,K]
-    do_chain = due_exec & has_next
-    rd = due_exec & ~has_next  # round completes at (t, d_of)
-
-    # batched lock decisions (pre-state views are exact: the due set never
-    # changes the holder/waiter population of a *distinct* key, and an
-    # EXEC->HOLD transition keeps holder status)
+    # ---- op events: batched lock decisions (pre-state views are exact: the
+    # window never batches two events touching one key, and an EXEC->HOLD
+    # transition keeps holder status) ---------------------------------------
     fk = s.op_key.reshape(-1)
     fw = s.op_write.reshape(-1)
     fst = st.reshape(-1)
@@ -1948,67 +1956,75 @@ def _omni_drain(
     waiter = jnp.any(eq_key & waiting[None, :], axis=1).reshape(T, K)
     ok = jnp.where(s.op_write, ~x_held & ~s_held, ~x_held) & ~waiter  # [T,K]
 
-    exec_t = t_now + _exec_us(cfg, s, d_of)  # [T,K]
-    to_t = t_now + s.dyn.lock_timeout_us
+    exec_t = evt_op + _exec_us(cfg, s, d_of)  # [T,K] per-event time basis
+    to_t = evt_op + s.dyn.lock_timeout_us
     arr_state = jnp.where(ok, OP_EXEC, OP_WAIT)
     arr_time = jnp.where(ok, exec_t, to_t)
-    ok_chain = jnp.take_along_axis(ok, nxt, axis=1)
-    chain_state = jnp.where(ok_chain, OP_EXEC, OP_WAIT)
-    chain_time = jnp.where(ok_chain, jnp.take_along_axis(exec_t, nxt, axis=1), to_t)
 
-    # round completions, per (t, d)
-    rd_td = jnp.any(oh_d & rd[:, :, None], axis=1)  # [T,D]
-    iters_rd_td = jnp.max(
-        jnp.where(oh_d & rd[:, :, None], iters_op[:, :, None], 0), axis=1
-    )  # [T,D]
-    salt_td = iters_rd_td * _SALT_MUL + jnp.int32(37)
-    reply_t = t_now + _delay_salted(s.jitter_milli, tau_row, salt_td)  # [T,D]
+    # chain targets of exec completions (first QUEUED op, same DS/round); the
+    # chained lock attempt happens at the *source* completion time
+    row_q = st == OP_QUEUED
+    same_round = s.op_round == s.cur_round[:, None]
+    eq_ds = s.op_ds[:, :, None] == s.op_ds[:, None, :]
+    chain_mask = (
+        cat_exec[:, :, None] & row_q[:, None, :] & eq_ds & same_round[:, None, :]
+    )
+    has_next = jnp.any(chain_mask, axis=2)
+    nxt = jnp.argmax(chain_mask, axis=2).astype(i32)  # [T,K]
+    do_chain_cat = cat_exec & has_next
+    rd_cat = cat_exec & ~has_next  # round completes at (t, d_of)
+    ok_chain = jnp.take_along_axis(ok, nxt, axis=1)
+    chain_state = jnp.where(ok_chain, OP_EXEC, OP_WAIT)  # at source slots
+    chain_time = jnp.where(ok_chain, exec_t, to_t)  # source time + same-DS exec
+
+    # round completions, per (t, d) — at most one in-flight op per (t, d)
+    rd3 = oh_d & rd_cat[:, :, None]  # [T,K,D]
+    time_rd = jnp.max(jnp.where(rd3, evt_op[:, :, None], 0), axis=1)
+    iters_rd = jnp.max(jnp.where(rd3, iters_op[:, :, None], 0), axis=1)
+    salt_td = iters_rd * _SALT_MUL + jnp.int32(37)
+    reply_t = time_rd + _delay_salted(s.jitter_milli, tau_row, salt_td)
     rmax_td = jnp.max(
         jnp.where(opn[:, :, None] & oh_d, s.op_round[:, :, None].astype(i32), -1),
         axis=1,
-    )  # [T,D]
+    )
     is_final_td = s.cur_round[:, None].astype(i32) >= rmax_td
-    n_inv = jnp.sum(inv.astype(i32), axis=1)  # [T]
+    n_inv = jnp.sum(inv.astype(i32), axis=1)
     centr_t = n_inv == 1
-    aborting_td = sst == SUB_ABORT_PEER  # [T,D]
-    prep_round_t = t_now + s.dyn.lan_rtt_us + s.dyn.log_flush_us
-    local_round_t = t_now + s.dyn.log_flush_us
+    aborting_td = sst == SUB_ABORT_PEER
+    prep_round_t = time_rd + s.dyn.lan_rtt_us + s.dyn.log_flush_us
+    local_round_t = time_rd + s.dyn.log_flush_us
     new_sub_state, new_sub_time = _round_done_transition(
         s.dyn, is_final_td, centr_t[:, None], reply_t, prep_round_t, local_round_t
     )
-    sub_upd = rd_td & ~aborting_td
 
-    # ================= sub dispatch (DM -> DS statements) ==================
+    # ---- sub dispatch (DM -> DS statements) -------------------------------
     arr_salt = iters_sub * _SALT_MUL + jnp.int32(41)
-    arrival_td = t_now + _delay_salted(s.jitter_milli, tau_row, arr_salt)  # [T,D]
-    sched_at_op = jnp.take_along_axis(due_sched, d_of, axis=1)  # [T,K]
-    c_ops = sched_at_op & (st == OP_PENDING) & same_round  # [T,K]
-    cand3 = c_ops[:, :, None] & oh_d  # [T,K,D]
+    arrival_td = evt_sub + _delay_salted(s.jitter_milli, tau_row, arr_salt)
+    sched_at_op = jnp.take_along_axis(cat_sched, d_of, axis=1)  # [T,K]
+    c_ops = sched_at_op & (st == OP_PENDING) & same_round
+    cand3 = c_ops[:, :, None] & oh_d
     has_c = jnp.any(cand3, axis=1)  # [T,D]
-    first_c = jnp.argmax(cand3, axis=1).astype(i32)  # [T,D]
-    is_first = (
-        c_ops
-        & (jnp.take_along_axis(first_c, d_of, axis=1) == jnp.arange(K, dtype=i32)[None, :])
-        & jnp.take_along_axis(has_c, d_of, axis=1)
-    )  # [T,K]
+    first_c = jnp.argmax(cand3, axis=1).astype(i32)
     arr_at_op = jnp.take_along_axis(arrival_td, d_of, axis=1)  # [T,K]
 
-    # ============ DS-side prepare command / WAL-flushed vote ===============
-    prep_time = t_now + s.dyn.log_flush_us
+    # ---- DS-side prepare command / WAL-flushed vote -----------------------
+    prep_time = evt_sub + s.dyn.log_flush_us
     vote_salt = iters_sub * _SALT_MUL + jnp.int32(43)
-    vote_t = t_now + _delay_salted(s.jitter_milli, tau_row, vote_salt)  # [T,D]
+    vote_t = evt_sub + _delay_salted(s.jitter_milli, tau_row, vote_salt)
 
-    # ================== DM-side fan-ins (reply/vote/acks) ==================
+    # ---- DM-side fan-ins: only the *first* (in sequential order) fan-in of
+    # each terminal may enter a window, so its `_dm_progress` view — the
+    # pre-state plus its own self-update — is exact ------------------------
+    dm_rank = jnp.where(dm_cat, pos_sub, BIG)
+    dm_first = jax.nn.one_hot(jnp.argmin(dm_rank, axis=1), D, dtype=bool) & dm_cat
     dm_self = jnp.where(
-        due_reply,
+        cat_reply,
         SUB_ROUND_AT_DM,
-        jnp.where(due_vote, SUB_VOTED, jnp.where(due_ack, SUB_DONE, SUB_ABORTED)),
-    )  # [T,D]
-    sta = jnp.where(dm_mask, dm_self, sst.astype(i32))  # state after self-update
-    rd_after = s.rd_done | due_reply | due_vote
-    dm_t = jnp.any(dm_mask, axis=1)  # [T]
-    prog_t = jnp.any(due_reply | due_vote, axis=1)  # [T]
-    # `_dm_progress` on the post-self-update view, vectorized over terminals
+        jnp.where(cat_vote, SUB_VOTED, jnp.where(cat_ack, SUB_DONE, SUB_ABORTED)),
+    )
+    sta = jnp.where(dm_first, dm_self, sst.astype(i32))
+    rd_done_first = s.rd_done | (dm_first & cat_prog)
+    prog_first = jnp.any(dm_first & cat_prog, axis=1)  # [T]
     waiting_c = inv & (sta == SUB_CHILLER_WAIT)
     active_c = inv & ~waiting_c
     ready_chiller = (
@@ -2016,13 +2032,13 @@ def _omni_drain(
         & jnp.any(waiting_c, axis=1)
         & s.dyn.chiller_two_stage
     )
-    inv_rd = jnp.any(oh_d & (opn & same_round)[:, :, None], axis=1)  # [T,D]
-    all_rd = jnp.all(~inv_rd | rd_after, axis=1)
+    inv_rd = jnp.any(oh_d & (opn & same_round)[:, :, None], axis=1)
+    all_rd = jnp.all(~inv_rd | rd_done_first, axis=1)
     rmax_t = jnp.max(jnp.where(opn, s.op_round.astype(i32), -1), axis=1)
     final_t = s.cur_round.astype(i32) >= rmax_t
     aborting_t = s.phase == T_ABORT_WAIT
-    act = prog_t & all_rd & ~aborting_t
-    advance_t = act & ~final_t  # round advance re-dispatches at t_now
+    act = prog_first & all_rd & ~aborting_t
+    advance_t = act & ~final_t  # round advance re-dispatches at its own time
     all_at_dm = jnp.all(~inv | (sta == SUB_ROUND_AT_DM), axis=1)
     all_voted = jnp.all(~inv | (sta == SUB_VOTED), axis=1)
     dec_c, dec_p, dec_l = sched.commit_decision(
@@ -2038,111 +2054,169 @@ def _omni_drain(
     send_c = gate & dec_c
     send_p = gate & dec_p & ~dec_c
     log_t = gate & dec_l & ~dec_c & ~dec_p
-    done_ack_t = jnp.any(due_ack, axis=1) & jnp.all(~inv | (sta == SUB_DONE), axis=1)
-    done_abk_t = jnp.any(due_abort_ack, axis=1) & jnp.all(
+    done_ack_t = jnp.any(dm_first & cat_ack, axis=1) & jnp.all(
+        ~inv | (sta == SUB_DONE), axis=1
+    )
+    done_abk_t = jnp.any(dm_first & cat_abort_ack, axis=1) & jnp.all(
         ~inv | (sta == SUB_ABORTED), axis=1
     )
-    iter_dm_t = jnp.sum(jnp.where(dm_mask, iters_sub, 0), axis=1)  # [T]
-    salt_dmc = iter_dm_t[:, None] * _SALT_MUL + jnp.int32(11) + d_ids[None, :]
-    dt_commit = t_now + _delay_salted(s.jitter_milli, tau_row, salt_dmc)  # [T,D]
-    salt_dmp = iter_dm_t[:, None] * _SALT_MUL + jnp.int32(13) + d_ids[None, :]
-    dt_prepare = t_now + _delay_salted(s.jitter_milli, tau_row, salt_dmp)
-    log_term_t = t_now + s.dyn.log_flush_us
-    d_has_dm = jnp.any(dm_mask, axis=0)  # [D] — latency-monitor update targets
+    time_dm = jnp.sum(jnp.where(dm_first, evt_sub, 0), axis=1)  # [T]
+    iter_dm = jnp.sum(jnp.where(dm_first, iters_sub, 0), axis=1)
+    salt_dmc = iter_dm[:, None] * _SALT_MUL + jnp.int32(11) + d_ids[None, :]
+    dt_commit = time_dm[:, None] + _delay_salted(s.jitter_milli, tau_row, salt_dmc)
+    salt_dmp = iter_dm[:, None] * _SALT_MUL + jnp.int32(13) + d_ids[None, :]
+    dt_prepare = time_dm[:, None] + _delay_salted(s.jitter_milli, tau_row, salt_dmp)
+    log_term_t = time_dm + s.dyn.log_flush_us
 
-    # ================= terminal commit-log flush (broadcast) ===============
+    # ---- terminal commit-log flush (broadcast) ----------------------------
     salt_e = iters_term[:, None] * _SALT_MUL + jnp.int32(31) + d_ids[None, :]
-    dt_log = t_now + _delay_salted(s.jitter_milli, tau_row, salt_e)  # [T,D]
+    dt_log = evt_term[:, None] + _delay_salted(s.jitter_milli, tau_row, salt_e)
 
-    # ============= DS-side commit apply / peer-abort release ===============
-    f_at_op = jnp.take_along_axis(f_mask, d_of, axis=1)  # [T,K]
-    cancel = opn & f_at_op  # ops cancelled (this IS the release)
-    rel_held = cancel & ((st == OP_EXEC) | (st == OP_HOLD))
-    # FIFO grant order matters only if someone queues on a released key
-    rel_flat = rel_held.reshape(-1)
-    waiter_on_rel = jnp.any(
-        waiting & jnp.any(eq_key & rel_flat[None, :], axis=1)
-    )
-    # hotspot Eq.(4) updates, one slot set per footprint key (keys unique)
-    mask_f3 = f_mask[:, :, None] & opn[:, None, :] & (
-        d_of[:, None, :] == d_ids[:, None]
-    )  # [T,D,K]
-    keys_f3 = jnp.where(mask_f3, s.op_key[:, None, :], -1)
-    slot_f, found_f = hs_mod.lookup_slots(
-        s.hs.slot_key, keys_f3.reshape(-1), mask_f3.reshape(-1)
-    )
-    slot_f = slot_f.reshape(T, D, K)
-    found_f = found_f.reshape(T, D, K)
-    lel_f = s.sub_lel[:, :, None].astype(jnp.float32)
-    vf = found_f.astype(jnp.float32)
-    w_old = s.hs.w_lat[slot_f].astype(jnp.float32) * vf
-    total_f = jnp.sum(w_old, axis=2, keepdims=True)
-    n_f = jnp.maximum(jnp.sum(vf, axis=2, keepdims=True), 1.0)
-    share_f = jnp.where(total_f > 0.0, w_old / jnp.maximum(total_f, 1.0), vf / n_f)
-    alpha = jnp.float32(cfg.alpha_milli / 1000.0)
-    new_w = jnp.clip(
-        w_old * alpha + lel_f * share_f * (1.0 - alpha), 0.0, 1e7
-    ).astype(i32)
-    upd_f = found_f.astype(i32)
-    committed_f = due_commit[:, :, None] & mask_f3
-    # ack back to the DM
-    ack_salt = iters_sub * _SALT_MUL + jnp.where(due_commit, 47, 53)
-    ack_t = t_now + _delay_salted(s.jitter_milli, tau_row, ack_salt)  # [T,D]
-    # lock-contention-span metric (commit events only)
-    meas = t_now >= jnp.int32(cfg.warmup_us)
-    lcs_have = due_commit & (s.first_lock < INF_US) & meas
-    lcs_span = jnp.where(lcs_have, (t_now - s.first_lock + 500) // 1000, 0)
+    # ---- DS-side commit apply / peer-abort release ------------------------
+    f_at_op = jnp.take_along_axis(f_cat, d_of, axis=1)  # [T,K]
+    cancel_cat = opn & f_at_op  # ops cancelled (this IS the release)
+    rel_held_cat = cancel_cat & ((st == OP_EXEC) | (st == OP_HOLD))
+    ack_salt = iters_sub * _SALT_MUL + jnp.where(cat_commit, 47, 53)
+    ack_t = evt_sub + _delay_salted(s.jitter_milli, tau_row, ack_salt)
+    # FIFO grant order matters only if someone queues on a released key —
+    # such a release is not drainable (the grants would need exact ordering)
+    rel_waiter_td = jnp.any(oh_d & (rel_held_cat & waiter)[:, :, None], axis=1)
 
-    # ===================== conflict mask (batchability) ====================
-    # every lock-table key touched this drain must be unique: arrival keys,
-    # chain-target keys, and the commit/abort footprint keys
-    flat_idx = jnp.arange(T * K, dtype=i32).reshape(T, K)
-    chain_key = jnp.take_along_axis(s.op_key, nxt, axis=1)
-    ka = jnp.where(due_arr, s.op_key, -flat_idx - 2)
-    kc = jnp.where(do_chain, chain_key, -flat_idx - 2 - T * K)
-    kf = jnp.where(cancel, s.op_key, -flat_idx - 2 - 2 * T * K)
-    allk = jnp.sort(
-        jnp.concatenate([ka.reshape(-1), kc.reshape(-1), kf.reshape(-1)])
+    # ---- earliest-scheduled-time n(e) per event slot: INF_US = schedules
+    # nothing, 0 = not drainable (stops the window at this event) -----------
+    n_prog = jnp.where(
+        ready_chiller | advance_t,
+        0,
+        jnp.where(
+            send_c,
+            jnp.min(jnp.where(inv, dt_commit, INF_US), axis=1),
+            jnp.where(
+                send_p,
+                jnp.min(jnp.where(inv, dt_prepare, INF_US), axis=1),
+                jnp.where(log_t, log_term_t, INF_US),
+            ),
+        ),
     )
-    no_dup = jnp.all(allk[1:] != allk[:-1])
+    n_ack = jnp.where(done_ack_t | done_abk_t, 0, INF_US)
+    n_term = jnp.where(cat_log, jnp.min(jnp.where(inv, dt_log, INF_US), axis=1), 0)
+    n_sub = jnp.zeros((T, D), i32)
+    n_sub = jnp.where(cat_sched, jnp.where(has_c, arrival_td, INF_US), n_sub)
+    n_sub = jnp.where(cat_prep, prep_time, n_sub)
+    n_sub = jnp.where(cat_preparing, vote_t, n_sub)
+    n_sub = jnp.where(f_cat, jnp.where(rel_waiter_td, 0, ack_t), n_sub)
+    n_sub = jnp.where(dm_first & cat_prog, n_prog[:, None], n_sub)
+    n_sub = jnp.where(dm_first & (cat_ack | cat_abort_ack), n_ack[:, None], n_sub)
+    rd_sched_t = jnp.where(
+        jnp.take_along_axis(aborting_td, d_of, axis=1),
+        INF_US,
+        jnp.take_along_axis(new_sub_time, d_of, axis=1),
+    )
+    n_op = jnp.zeros((T, K), i32)
+    n_op = jnp.where(cat_arr, arr_time, n_op)
+    n_op = jnp.where(do_chain_cat, chain_time, n_op)
+    n_op = jnp.where(rd_cat, rd_sched_t, n_op)
 
-    # DM-side events: unique terminal x unique DS, and the terminal must not
-    # be touched by any other due event (their actions write whole-row state)
-    dm_unique = jnp.all(jnp.sum(dm_mask.astype(i32), axis=1) <= 1) & jnp.all(
-        jnp.sum(dm_mask.astype(i32), axis=0) <= 1
-    )
-    other_t = (
-        due_log
-        | jnp.any(due_sub & ~dm_mask, axis=1)
-        | jnp.any(due_op, axis=1)
-    )
-    dm_excl = ~jnp.any(dm_t & other_t)
-    log_excl = ~jnp.any(due_log & (jnp.any(due_sub, axis=1) | jnp.any(due_op, axis=1)))
-    dm_quiet = ~jnp.any(
-        (prog_t & ready_chiller) | advance_t | done_ack_t | done_abk_t
-    )
-    # commit/abort releases: no co-due op event at the same (t, DS)
-    op_due_td = jnp.any(oh_d & due_op[:, :, None], axis=1)  # [T,D]
-    f_ok = ~jnp.any(f_mask & op_due_td) & ~waiter_on_rel
+    # ---- order-aware pairwise conflicts: mark the LATER event of each pair
+    # so the prefix stops exactly at the first conflicting event ------------
+    # (a) duplicate lock keys among arrivals, chain targets, released
+    #     footprints. Each touch lives at an op slot (the chain touch at its
+    #     target slot, stamped with the source event's rank); reusing the
+    #     eq_key matrix, key_min[j] is the earliest rank at which slot j's key
+    #     is touched, and any strictly later touch of the same key conflicts.
+    #     A single event touching one key twice (a release footprint with a
+    #     duplicated record) shares one rank and stays drainable — one event
+    #     batches with itself trivially.
+    pos_f_at_op = jnp.take_along_axis(jnp.where(f_cat, pos_sub, BIG), d_of, axis=1)
+    # reverse chain map: tgt3[t,k,j] <=> source op k chains to target op j
+    # (gather-based — a scatter here would lower to a per-lane loop under vmap)
+    tgt3 = do_chain_cat[:, :, None] & (kk[None, None, :] == nxt[:, :, None])
+    pos_chain_touch = jnp.min(jnp.where(tgt3, pos_op[:, :, None], BIG), axis=1)
+    touch_min = jnp.minimum(
+        jnp.where(cat_arr, pos_op, BIG),
+        jnp.minimum(pos_chain_touch, jnp.where(cancel_cat, pos_f_at_op, BIG)),
+    ).reshape(-1)
+    key_min = jnp.min(jnp.where(eq_key, touch_min[None, :], BIG), axis=1).reshape(T, K)
+    dup_arr = cat_arr & (pos_op > key_min)
+    dup_chain = do_chain_cat & (pos_op > jnp.take_along_axis(key_min, nxt, axis=1))
+    dup_cancel = cancel_cat & (pos_f_at_op > key_min)
+    rel_dup_td = jnp.any(oh_d & dup_cancel[:, :, None], axis=1)
 
-    # no drained handler may schedule a new event at t_now itself
-    big = INF_US
-    safe_t = (
-        jnp.all(jnp.where(due_arr, arr_time, big) > t_now)
-        & jnp.all(jnp.where(do_chain, chain_time, big) > t_now)
-        & jnp.all(jnp.where(sub_upd, new_sub_time, big) > t_now)
-        & jnp.all(jnp.where(due_sched, arrival_td, big) > t_now)
-        & jnp.all(jnp.where(due_prep, prep_time, big) > t_now)
-        & jnp.all(jnp.where(due_preparing, vote_t, big) > t_now)
-        & jnp.all(jnp.where(send_c[:, None] & inv, dt_commit, big) > t_now)
-        & jnp.all(jnp.where(send_p[:, None] & inv, dt_prepare, big) > t_now)
-        & jnp.all(jnp.where(log_t, log_term_t, big) > t_now)
-        & jnp.all(jnp.where(due_log[:, None] & inv, dt_log, big) > t_now)
-        & jnp.all(jnp.where(f_mask, ack_t, big) > t_now)
+    # (b) row-exclusive events (DM fan-ins read/write whole terminal rows;
+    #     commit-log flushes broadcast) vs any other event of the terminal
+    pos_any = jnp.minimum(
+        pos_term, jnp.minimum(jnp.min(pos_sub, axis=1), jnp.min(pos_op, axis=1))
     )
-    batchable = (
-        no_dup & dm_unique & dm_excl & log_excl & dm_quiet & f_ok & safe_t
+    pos_excl = jnp.minimum(
+        jnp.where(cat_log, pos_term, BIG),
+        jnp.min(jnp.where(dm_cat, pos_sub, BIG), axis=1),
     )
+    conflict_term = (pos_excl < pos_term) | (cat_log & (pos_any < pos_term))
+    conflict_sub = (pos_excl[:, None] < pos_sub) | (
+        dm_cat & (pos_any[:, None] < pos_sub)
+    )
+    conflict_op = pos_excl[:, None] < pos_op
+
+    # (c) at most one DM fan-in per data source (the latency monitor applies
+    #     one EWMA update per DS per window)
+    dm_col_min = jnp.min(jnp.where(dm_cat, pos_sub, BIG), axis=0)
+    conflict_sub = conflict_sub | (dm_cat & (dm_col_min[None, :] < pos_sub))
+
+    # (d) a release and an op event at the same (terminal, DS), or a release
+    #     whose footprint duplicates an earlier-touched key
+    pos_op_td = jnp.min(jnp.where(oh_d, pos_op[:, :, None], BIG), axis=1)
+    conflict_sub = conflict_sub | (f_cat & ((pos_op_td < pos_sub) | rel_dup_td))
+    conflict_op = conflict_op | (pos_f_at_op < pos_op) | dup_arr | dup_chain
+
+    # ---- maximal prefix over the sorted event order -----------------------
+    # The window ends at the first (by rank) "stopper": a conflicted event, an
+    # event at/after the horizon, or the first event whose time some
+    # earlier-or-equal-rank event schedules at or before (running min of n(e)
+    # in rank order must stay strictly above the event times).
+    n_flat = jnp.concatenate([n_term, n_sub.reshape(-1), n_op.reshape(-1)])
+    conflict = jnp.concatenate(
+        [conflict_term, conflict_sub.reshape(-1), conflict_op.reshape(-1)]
+    )
+    horizon_i = jnp.int32(cfg.horizon_us)
+    if cfg.lockstep:
+        # unsorted-space equivalent of the cummin prefix: no scatters, no
+        # scans — vmapped scatters/sorts lower to per-lane loops on CPU,
+        # while one more M x M pass is shared elementwise work
+        sched_stop = (n_flat <= flat) | jnp.any(
+            lex_lt & (n_flat[None, :] <= flat[:, None]), axis=1
+        )
+        stop = sched_stop | conflict | (flat >= horizon_i)
+        n_win = jnp.min(jnp.where(stop, pos, BIG))
+        t_last = jnp.max(jnp.where(pos < n_win, flat, 0))
+    else:
+        time_sorted = flat[order]
+        cmin = jax.lax.cummin(n_flat[order])
+        good = (cmin > time_sorted) & (time_sorted < horizon_i) & ~conflict[order]
+        n_win = jnp.where(jnp.all(good), BIG, jnp.argmax(~good).astype(i32))
+        t_last = time_sorted[jnp.maximum(n_win - 1, 0)]
+    win_term = pos_term < n_win
+    win_sub = pos_sub < n_win
+    win_op = pos_op < n_win
+    use = n_win >= 2
+
+    # ---- windowed masks ---------------------------------------------------
+    due_log = win_term & cat_log
+    due_sched = win_sub & cat_sched
+    due_prep = win_sub & cat_prep
+    due_preparing = win_sub & cat_preparing
+    dm_mask = win_sub & dm_cat  # all are their terminal's first fan-in
+    due_commit = win_sub & cat_commit
+    f_mask = win_sub & f_cat
+    due_arr = win_op & cat_arr
+    due_exec = win_op & cat_exec
+    do_chain = due_exec & has_next
+    rd = due_exec & ~has_next
+    rd_td = jnp.any(oh_d & rd[:, :, None], axis=1)
+    sub_upd = rd_td & ~aborting_td
+    prog_w = jnp.any(dm_mask & cat_prog, axis=1)
+    send_c_w = send_c & prog_w
+    send_p_w = send_p & prog_w
+    log_w = log_t & prog_w
+    cancel = opn & jnp.take_along_axis(f_mask, d_of, axis=1)
 
     def apply(s_: SimState) -> SimState:
         # ---- op arrays: arrivals/execs, chained statements, dispatch marks,
@@ -2151,22 +2225,32 @@ def _omni_drain(
             due_arr, arr_state, jnp.where(due_exec, OP_HOLD, st.astype(i32))
         )
         op_time = jnp.where(due_arr, arr_time, jnp.where(due_exec, INF_US, s_.op_time))
-        op_enq = jnp.where(due_arr, t_now, s_.op_enq)
-        rows = jnp.broadcast_to(jnp.arange(T, dtype=i32)[:, None], (T, K))
-        tgt = jnp.where(do_chain, nxt, K)  # K => dropped
-        op_state = op_state.at[rows, tgt].set(chain_state, mode="drop")
-        op_time = op_time.at[rows, tgt].set(chain_time, mode="drop")
-        op_enq = op_enq.at[rows, tgt].set(t_now, mode="drop")
-        op_state = jnp.where(
-            c_ops, jnp.where(is_first, OP_ENROUTE, OP_QUEUED), op_state
+        op_enq = jnp.where(due_arr, evt_op, s_.op_enq)
+        tgt3_w = tgt3 & do_chain[:, :, None]
+        chain_tgt = jnp.any(tgt3_w, axis=1)  # [T,K] chain-target slots
+        pick = lambda v: jnp.max(jnp.where(tgt3_w, v[:, :, None], 0), axis=1)
+        op_state = jnp.where(chain_tgt, pick(chain_state), op_state)
+        op_time = jnp.where(chain_tgt, pick(chain_time), op_time)
+        op_enq = jnp.where(chain_tgt, pick(evt_op), op_enq)
+        sched_w = jnp.take_along_axis(due_sched, d_of, axis=1)
+        c_ops_w = sched_w & (st == OP_PENDING) & same_round
+        is_first_w = (
+            c_ops_w
+            & (jnp.take_along_axis(first_c, d_of, axis=1) == kk[None, :])
+            & jnp.take_along_axis(has_c, d_of, axis=1)
         )
-        op_time = jnp.where(is_first, arr_at_op, op_time)
+        op_state = jnp.where(
+            c_ops_w, jnp.where(is_first_w, OP_ENROUTE, OP_QUEUED), op_state
+        )
+        op_time = jnp.where(is_first_w, arr_at_op, op_time)
         op_state = jnp.where(cancel, OP_DONE, op_state).astype(jnp.int8)
         op_time = jnp.where(cancel, INF_US, op_time)
 
         got = (due_arr & ok) | (do_chain & ok_chain)
-        got_td = jnp.any(oh_d & got[:, :, None], axis=1)
-        first_lock = jnp.minimum(s_.first_lock, jnp.where(got_td, t_now, INF_US))
+        got_t = jnp.min(
+            jnp.where(oh_d & got[:, :, None], evt_op[:, :, None], INF_US), axis=1
+        )
+        first_lock = jnp.minimum(s_.first_lock, got_t)
 
         # ---- sub arrays: self-updates first, then whole-row broadcasts ----
         sub_state = jnp.where(sub_upd, new_sub_state, sst.astype(i32))
@@ -2180,30 +2264,50 @@ def _omni_drain(
         sub_arrive = jnp.where(due_sched, arrival_td, s_.sub_arrive)
         sub_state = jnp.where(dm_mask, dm_self, sub_state)
         sub_time = jnp.where(dm_mask, INF_US, sub_time)
-        row_c = send_c[:, None] & inv
+        row_c = send_c_w[:, None] & inv
         sub_state = jnp.where(row_c, SUB_COMMIT_CMD, sub_state)
         sub_time = jnp.where(row_c, dt_commit, sub_time)
-        row_p = send_p[:, None] & inv
+        row_p = send_p_w[:, None] & inv
         sub_state = jnp.where(row_p, SUB_PREP_CMD, sub_state)
         sub_time = jnp.where(row_p, dt_prepare, sub_time)
         row_e = due_log[:, None] & inv
         sub_state = jnp.where(row_e, SUB_COMMIT_CMD, sub_state)
         sub_time = jnp.where(row_e, dt_log, sub_time)
         sub_state = jnp.where(due_commit, SUB_ACK, sub_state)
-        sub_state = jnp.where(due_abort_peer, SUB_ABORT_ACK, sub_state)
+        sub_state = jnp.where(f_mask & ~due_commit, SUB_ABORT_ACK, sub_state)
         sub_time = jnp.where(f_mask, ack_t, sub_time)
         sub_lel = s_.sub_lel + jnp.where(
-            rd_td, jnp.maximum(t_now - s_.sub_arrive, 0), 0
+            rd_td, jnp.maximum(time_rd - s_.sub_arrive, 0), 0
         )
+        rd_done = s_.rd_done | (dm_mask & cat_prog)
 
-        # ---- terminal phase/timer (disjoint terminals by the conflict mask)
-        phase = jnp.where(send_c, T_COMMIT_WAIT, s_.phase.astype(i32))
-        phase = jnp.where(log_t, T_COMMIT_LOG, phase)
+        # ---- terminal phase/timer (window events own their terminals) -----
+        phase = jnp.where(send_c_w, T_COMMIT_WAIT, s_.phase.astype(i32))
+        phase = jnp.where(log_w, T_COMMIT_LOG, phase)
         phase = jnp.where(due_log, T_COMMIT_WAIT, phase).astype(jnp.int8)
-        term_time = jnp.where(send_c | due_log, INF_US, s_.term_time)
-        term_time = jnp.where(log_t, log_term_t, term_time)
+        term_time = jnp.where(send_c_w | due_log, INF_US, s_.term_time)
+        term_time = jnp.where(log_w, log_term_t, term_time)
 
-        # ---- hotspot table: one slot write per footprint key --------------
+        # ---- hotspot table: one slot write per released footprint key -----
+        # the probe-loop lookup runs on [T,K] (each released op belongs to
+        # exactly one (t, d_of) release); the [T,D,K] view below only groups
+        # the Eq.(4) shares per release and is pure elementwise work
+        slot_k, found_k = hs_mod.lookup_slots(
+            s_.hs.slot_key,
+            jnp.where(cancel, s_.op_key, -1).reshape(-1),
+            cancel.reshape(-1),
+        )
+        slot_k = slot_k.reshape(T, K)
+        found_k = found_k.reshape(T, K)
+        mask_f3 = cancel[:, None, :] & (d_of[:, None, :] == d_ids[:, None])
+        slot_f = jnp.where(mask_f3, slot_k[:, None, :], cfg.hot_capacity)
+        found_f = mask_f3 & found_k[:, None, :]
+        lel_f = s_.sub_lel[:, :, None].astype(jnp.float32)
+        new_w = hs_mod.eq4_masked_w(
+            s_.hs.w_lat, slot_f, found_f, lel_f, cfg.alpha_milli
+        )
+        upd_f = found_f.astype(i32)
+        committed_f = due_commit[:, :, None] & mask_f3
         hs = s_.hs
         slot_fl = slot_f.reshape(-1)
         found_fl = found_f.reshape(-1)
@@ -2219,10 +2323,18 @@ def _omni_drain(
             ),
         )
 
+        # lock-contention-span metric (commit events, per-event warmup gate)
+        lcs_have = due_commit & (s_.first_lock < INF_US) & (
+            evt_sub >= jnp.int32(cfg.warmup_us)
+        )
+        lcs_span = jnp.where(lcs_have, (evt_sub - s_.first_lock + 500) // 1000, 0)
+
+        d_has_dm = jnp.any(dm_mask, axis=0)  # [D] latency-monitor targets
         return s_._replace(
-            now=t_now,
-            iters=s_.iters + n_due,
-            drained=s_.drained + n_due,
+            now=t_last,
+            iters=s_.iters + n_win,
+            drained=s_.drained + n_win,
+            windows=s_.windows + 1,
             op_state=op_state,
             op_time=op_time,
             op_enq=op_enq,
@@ -2231,7 +2343,7 @@ def _omni_drain(
             sub_time=sub_time,
             sub_arrive=sub_arrive,
             sub_lel=sub_lel,
-            rd_done=rd_after,
+            rd_done=rd_done,
             tau_est=ewma_update_where(
                 s_.tau_est, s_.tau_true, jnp.int32(cfg.beta_milli), d_has_dm
             ),
@@ -2242,18 +2354,18 @@ def _omni_drain(
             lcs_cnt=s_.lcs_cnt + jnp.sum(lcs_have.astype(i32)),
         )
 
-    return jax.lax.cond(batchable, apply, lambda s_: _step(cfg, bank, s_), s)
+    return use, apply
 
 
 def _drain_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
-    """One drain iteration: apply all events due at the minimum timestamp.
+    """One drain iteration: apply the maximal conflict-free window of events.
 
-    Cheap pre-checks route to the omnibus masked pass only when every due
-    event belongs to a drainable category and at least two are due; txn
-    starts (admission + hot-table claims), lock-wait timeouts (abort fan-out
-    through the grant machinery) and unexpected states always take the
-    sequential single-event step, as does any due set the omnibus conflict
-    mask rejects.
+    Cheap pre-checks route to the windowed masked pass only when every event
+    due at the minimum timestamp belongs to a drainable category; txn starts
+    (admission + hot-table claims), lock-wait timeouts (abort fan-out through
+    the grant machinery) and unexpected states always take the sequential
+    single-event step, as does any window the prefix scan cuts below two
+    events.
     """
     t_now = jnp.min(_times_flat(s))
     due_term = s.term_time == t_now
@@ -2273,33 +2385,43 @@ def _drain_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         | (sst == SUB_ABORT_ACK)
     )
     op_drainable = (s.op_state == OP_ENROUTE) | (s.op_state == OP_EXEC)
-    n_due = (
-        jnp.sum(due_term.astype(jnp.int32))
-        + jnp.sum(due_sub.astype(jnp.int32))
-        + jnp.sum(due_op.astype(jnp.int32))
-    )
     clean = (
         ~jnp.any(due_term & (s.phase != T_COMMIT_LOG))
         & ~jnp.any(due_sub & ~sub_drainable)
         & ~jnp.any(due_op & ~op_drainable)
-        & (n_due >= 2)
     )
-    return jax.lax.cond(
-        clean,
-        lambda s_: _omni_drain(cfg, bank, s_, t_now, due_term, due_sub, due_op),
-        lambda s_: _step(cfg, bank, s_),
-        s,
-    )
+
+    def windowed(s_: SimState) -> SimState:
+        use, apply = _window_plan(cfg, bank, s_)
+        return jax.lax.cond(use, apply, lambda s2: _step(cfg, bank, s2), s_)
+
+    return jax.lax.cond(clean, windowed, lambda s_: _step(cfg, bank, s_), s)
+
+
+def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
+    """Branchless windowed drain — the lockstep (vmap) hot path.
+
+    Computes the window plan and the branchless single-event `_omni_step`
+    unconditionally and selects per-leaf with one masked `where` — no
+    `lax.switch`/`lax.cond`, whose branches all execute under vmap anyway and
+    pay a full-state select per branch. Lanes whose window is degenerate
+    (< 2 events) fall back to `_omni_step` without diverging, so vmap lanes
+    drain real windows instead of being silently downgraded to `drain=False`.
+    """
+    use, apply = _window_plan(cfg, bank, s)
+    s_win = apply(s)
+    s_one = _omni_step(cfg, bank, s)
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(use, a, b), s_win, s_one)
 
 
 def run(cfg: SimConfig, bank: Bank, state: SimState) -> SimState:
     """Run until the horizon (or the event budget) is exhausted.
 
-    With cfg.drain the event budget is approximate: a drained batch may
-    overshoot max_events by (batch-1) events.
+    With cfg.drain the event budget is approximate: a drained window may
+    overshoot max_events by (window-1) events.
     """
     if cfg.lockstep:
-        step = _omni_step
+        step = _omni_window if cfg.drain else _omni_step
     else:
         step = _drain_step if cfg.drain else _step
 
@@ -2340,11 +2462,12 @@ def simulate(
 def _batch_over(one, bank, xs, bank_axis, strategy):
     """Map `one(bank_lane, x_lane)` over a world batch.
 
-    strategy "vmap" runs lanes in lockstep through the branchless omnibus
-    step (best on accelerators; within ~10% of map on CPU at smoke width);
-    "map" runs lanes sequentially inside ONE compiled call (scalar control
-    flow dispatches one switch branch per event and skips the drain machinery
-    off the tie path, and per-world cost stays flat as the grid widens).
+    strategy "vmap" runs lanes in lockstep through the branchless windowed
+    drain (`_omni_window`) — one fused pass per iteration, no switch/cond, so
+    the window plan amortizes across lanes (the accelerator path); "map" runs
+    lanes sequentially inside ONE compiled call (scalar control flow takes
+    the window plan's cond-gated route and per-world cost stays flat as the
+    grid widens — the fastest CPU strategy).
     """
     if strategy == "vmap":
         return jax.vmap(one, in_axes=(bank_axis, 0))(bank, xs)
@@ -2395,10 +2518,12 @@ def simulate_batch(
         strategy = "vmap" if jax.default_backend() in ("tpu", "gpu") else "map"
     if strategy == "vmap":
         # lockstep lanes execute every lax.switch/cond branch per iteration;
-        # the branchless omnibus step is strictly cheaper there (the drain's
-        # conflict-mask machinery would run every step on top of the switch).
-        # Bitwise-identical trajectories, so strategies stay interchangeable.
-        cfg = dataclasses.replace(cfg, lockstep=True, drain=False)
+        # the branchless omnibus/window steps are strictly cheaper there.
+        # cfg.drain is honored: lockstep lanes route through `_omni_window`
+        # (windowed drain, branchless select) instead of being silently
+        # downgraded to drain=False as before — vmap runs now report a real
+        # drain hit rate. Bitwise-identical trajectories either way.
+        cfg = dataclasses.replace(cfg, lockstep=True)
     bank_axis = 0 if bank_batched else None
     if states is None:
         states = _sim_batch_fresh(cfg, bank, worlds, bank_axis, strategy)
@@ -2450,19 +2575,26 @@ def summarize(cfg: SimConfig, s: SimState) -> dict:
 
 
 def drain_stats(state: SimState) -> dict:
-    """Omnibus-drain telemetry for a final state (single or batched).
+    """Windowed-drain telemetry for a final state (single or batched).
 
     Deliberately NOT part of `summarize`: the metric dicts there are part of
     the bitwise drain-vs-sequential contract, while the hit rate by
     construction differs between the two paths.
+
+    `loop_iters` is the actual `lax.while_loop` trip count: sequential events
+    take one iteration each, a whole window takes one iteration.
     """
     events = int(np.sum(np.asarray(state.iters)))
     drained = int(np.sum(np.asarray(state.drained)))
+    windows = int(np.sum(np.asarray(state.windows)))
     return {
         "events": events,
         "drained_events": drained,
         "seq_events": events - drained,
         "drain_hit_rate": round(drained / max(events, 1), 4),
+        "windows": windows,
+        "mean_window_len": round(drained / max(windows, 1), 2),
+        "loop_iters": (events - drained) + windows,
     }
 
 

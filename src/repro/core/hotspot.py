@@ -183,6 +183,33 @@ def find_or_claim_slots(
     return slot, evict
 
 
+def eq4_masked_w(
+    w_lat: jax.Array,
+    slot: jax.Array,
+    found: jax.Array,
+    lel: jax.Array,
+    alpha_milli: int,
+) -> jax.Array:
+    """Eq.(4) share/EWMA/clip over one footprint's records (trailing axis).
+
+    slot/found: [..., K] hash-table slots + hit mask for a subtransaction's
+    footprint, grouped per subtransaction along every leading axis;
+    lel: float32, broadcastable against [..., 1] (the measured LEL).
+    Returns the updated w_lat values [..., K] int32 (meaningful where found).
+
+    Single source for every engine path that applies the update — the
+    sequential handler, the branchless omnibus step and the windowed drain
+    must agree bitwise, like `commit_decision` / `ewma_update_where`.
+    """
+    vf = found.astype(jnp.float32)
+    w_old = w_lat[slot].astype(jnp.float32) * vf
+    total = jnp.sum(w_old, axis=-1, keepdims=True)
+    n = jnp.maximum(jnp.sum(vf, axis=-1, keepdims=True), 1.0)
+    share = jnp.where(total > 0.0, w_old / jnp.maximum(total, 1.0), vf / n)
+    a = jnp.float32(alpha_milli / 1000.0)
+    return jnp.clip(w_old * a + lel * share * (1.0 - a), 0.0, 1e7).astype(jnp.int32)
+
+
 def lookup_slots(
     slot_key: jax.Array, keys: jax.Array, valid: jax.Array, probes: int = 8
 ) -> tuple[jax.Array, jax.Array]:

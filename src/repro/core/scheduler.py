@@ -48,7 +48,21 @@ def stagger_offsets(
     if lel is None:
         cost = tau
     else:
-        scaled = (lel.astype(jnp.int64) * jnp.int64(scale_milli) // 1000).astype(jnp.int32)
+        if isinstance(scale_milli, int) and scale_milli == 1000:
+            # identity scale — every in-repo caller pre-scales the forecast
+            # upstream (engine `_stagger`). Skipping the *1000//1000 round
+            # trip avoids the int32 product wrapping for forecasts above
+            # ~2.1e6 µs (the upstream Eq.4 clip allows up to 1e7).
+            scaled = lel.astype(jnp.int32)
+        else:
+            # int32 on purpose: x64 is disabled engine-wide, so an int64
+            # request would silently truncate to int32 anyway (and spam
+            # truncation UserWarnings). Caveat: the product wraps for
+            # lel * scale_milli >= 2**31 — keep forecasts scaled down
+            # before calling with a non-identity scale.
+            scaled = (
+                lel.astype(jnp.int32) * jnp.asarray(scale_milli, jnp.int32) // 1000
+            )
         cost = tau + scaled
     masked = jnp.where(involved, cost, jnp.int32(-1))
     cmax = jnp.max(masked, axis=-1, keepdims=True)

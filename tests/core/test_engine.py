@@ -38,7 +38,7 @@ def _bank_single_txn(keys, writes, dss, num_ds=2, rounds=None, terminals=1, copi
     )
 
 
-def _run(proto, bank, tau_ms, horizon_s=4.0, terminals=1, jitter=0, **kw):
+def _run(proto, bank, tau_ms, horizon_s=2.0, terminals=1, jitter=0, **kw):
     net = make_net_params(tau_ms, tau_ds_ms=kw.pop("tau_ds_ms", None))
     cfg = engine.SimConfig(
         terminals=terminals,
@@ -129,6 +129,7 @@ class TestProtocolLatency:
 
 
 class TestContention:
+    @pytest.mark.slow
     def test_blocking_and_fifo(self):
         # Two terminals, same exclusive key on DS1 -> serialized commits.
         bank = _bank_single_txn(
@@ -139,6 +140,7 @@ class TestContention:
         assert m["aborts"] == 0
         assert m["noops"] == 0
 
+    @pytest.mark.slow
     def test_shared_locks_do_not_block(self):
         bank = _bank_single_txn(
             keys=[7, 501], writes=[False, False], dss=[0, 1], terminals=4
@@ -183,6 +185,7 @@ class TestContention:
         assert m["aborts"] > 0  # the deadlock fired and the timeout broke it
         assert m["commits"] > 0  # progress resumes after randomized backoff
 
+    @pytest.mark.slow
     def test_early_abort_faster_than_dm_routed(self):
         # Distributed deadlock across DS0/DS1: with early abort the geo-agent
         # notifies its peer directly (DS->DS half-round) instead of 1.5 WAN
@@ -198,6 +201,7 @@ class TestContention:
         assert m_ea["commits"] > m_no["commits"]
 
 
+@pytest.mark.slow
 class TestRounds:
     def test_interactive_rounds_add_round_trips(self):
         b1 = _bank_single_txn(
@@ -216,6 +220,7 @@ class TestRounds:
         assert m2["noops"] == 0
 
 
+@pytest.mark.slow
 class TestDeterminism:
     def test_bitwise_reproducible(self):
         cfg_w = workloads.YCSBConfig(
@@ -231,6 +236,7 @@ class TestDeterminism:
         assert runs[0] == runs[1]
 
 
+@pytest.mark.slow
 class TestYCSBEndToEnd:
     def test_geotp_beats_ssp_medium_contention(self):
         # paper-scale key space (scaled 1M -> 100k records/node, fewer
@@ -258,6 +264,7 @@ class TestYCSBEndToEnd:
         assert res["geotp"]["avg_lcs_ms"] < res["ssp"]["avg_lcs_ms"]
 
 
+@pytest.mark.slow
 class TestTPCC:
     def test_tpcc_runs_and_commits(self):
         cfg_t = workloads.TPCCConfig(num_ds=2, warehouses_per_node=2, dist_ratio=0.3)

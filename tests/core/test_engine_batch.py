@@ -9,6 +9,7 @@
 """
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,30 @@ def _cfg(preset, drain=True, horizon_s=2.0):
         horizon_us=int(horizon_s * 1e6), drain=drain,
         track_slots=True,  # widen the bitwise fingerprint
     )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def _stepped(cfg, bank, s, n, drain):
+    """Run n engine steps jitted; module-level so the compiled graphs are
+    shared across every test using the same (cfg, n, drain) key."""
+    step = engine._drain_step if drain else engine._step
+    for _ in range(n):
+        s = step(cfg, bank, s)
+    return s
+
+
+def _assert_state_bitwise(sa, sb):
+    # `drained`/`windows` are path telemetry; every other leaf (nested
+    # hs/dyn included) must match bitwise
+    fa = jax.tree_util.tree_flatten_with_path(
+        sa._replace(drained=sb.drained, windows=sb.windows)
+    )[0]
+    fb = jax.tree_util.tree_flatten_with_path(sb)[0]
+    assert len(fa) == len(fb)
+    for (path, a), (_, b) in zip(fa, fb):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=jax.tree_util.keystr(path)
+        )
 
 
 def _fingerprint(st, m):
@@ -98,6 +123,7 @@ class TestSimulateBatch:
         )
         return cells, worlds
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("strategy", ["map", "vmap"])
     def test_batch_matches_sequential(self, strategy):
         bank = _bank()
@@ -115,6 +141,7 @@ class TestSimulateBatch:
             )
             assert mb == mseq, (strategy, preset)
 
+    @pytest.mark.slow
     def test_batched_banks(self):
         # per-seed banks batched over the sweep (the seeds grid axis)
         banks = [_bank(seed=sd) for sd in (0, 1, 2)]
@@ -155,6 +182,26 @@ class TestLockstepBitwise:
             prints[lockstep] = _fingerprint(st, m)
         assert prints[False] == prints[True]
 
+    def test_lockstep_window_matches_drain_path(self):
+        # `_omni_window` (lockstep + drain) must reproduce the windowed map
+        # path bitwise — including the drained/windows telemetry, proving
+        # vmap lanes drain the same windows instead of being downgraded
+        bank = _bank()
+        net = make_net_params(RTT)
+        cfg = _cfg("ssp")  # drain=True
+        st_m, m_m = engine.simulate(
+            cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30
+        )
+        cfg_l = dataclasses.replace(cfg, lockstep=True)
+        st_l, m_l = engine.simulate(
+            cfg_l, bank, net.tau_dm, net.tau_ds, jitter_milli=30
+        )
+        assert m_m == m_l
+        assert int(st_l.drained) == int(st_m.drained) > 0
+        assert int(st_l.windows) == int(st_m.windows) > 0
+        assert _fingerprint(st_l, m_l) == _fingerprint(st_m, m_m)
+
+    @pytest.mark.slow
     def test_lockstep_matches_interactive_rounds(self):
         # rounds=3 exercises the DM round-advance + shared stagger path
         cfg_w = workloads.YCSBConfig(
@@ -178,6 +225,7 @@ class TestLockstepBitwise:
         assert prints[True][0]["commits"] > 0
         assert prints[False] == prints[True]
 
+    @pytest.mark.slow
     def test_lockstep_matches_under_aborts(self):
         # tiny keyspace + hot skew: lock-wait timeouts, abort fan-outs and
         # retries all flow through the masked pass
@@ -268,27 +316,9 @@ class TestAllCategoryDrain:
 
     @staticmethod
     def _steps(cfg, bank, s, n, drain):
-        step = engine._drain_step if drain else engine._step
+        return _stepped(cfg, bank, s, n, drain)
 
-        @jax.jit
-        def go(b, s_):
-            for _ in range(n):
-                s_ = step(cfg, b, s_)
-            return s_
-
-        return go(bank, s)
-
-    @staticmethod
-    def _assert_bitwise(sa, sb):
-        # `drained` is path telemetry; every other leaf (nested hs/dyn
-        # included) must match bitwise
-        fa = jax.tree_util.tree_flatten_with_path(sa._replace(drained=sb.drained))[0]
-        fb = jax.tree_util.tree_flatten_with_path(sb)[0]
-        assert len(fa) == len(fb)
-        for (path, a), (_, b) in zip(fa, fb):
-            np.testing.assert_array_equal(
-                np.asarray(a), np.asarray(b), err_msg=jax.tree_util.keystr(path)
-            )
+    _assert_bitwise = staticmethod(_assert_state_bitwise)
 
     def test_ack_and_vote_fanin_drain_together(self):
         bank = self._bank2()
@@ -299,6 +329,7 @@ class TestAllCategoryDrain:
         assert int(drained.iters) == 2 == int(seq.iters)
         self._assert_bitwise(drained, seq)
 
+    @pytest.mark.slow
     def test_same_dm_conflict_routes_sequential(self):
         bank = self._bank2()
         cfg, s = self._mk_state(ack_d=0, vote_d=0)  # both fan-ins hit DS 0
@@ -312,10 +343,181 @@ class TestAllCategoryDrain:
         # t_now — the drain must refuse it even at distinct terminals
         bank = self._bank2()
         cfg, s = self._mk_state(ack_d=0, vote_d=1, done_other=True)
-        drained = self._steps(cfg, bank, s, 2, drain=True)
+        # two 1-step drain calls reuse the (1, True) graph compiled above
+        drained = self._steps(cfg, bank, s, 1, drain=True)
+        drained = self._steps(cfg, bank, drained, 1, drain=True)
         seq = self._steps(cfg, bank, s, 2, drain=False)
         assert int(drained.drained) == 0
         self._assert_bitwise(drained, seq)
+
+
+class TestWindowedDrain:
+    """PR-3 tentpole: the drain batches the maximal conflict-free *prefix* of
+    the global event order — events at distinct timestamps apply in one
+    while-loop iteration, each keeping the iteration number and timestamp it
+    would have had sequentially, and the window stops exactly at the first
+    conflicting event."""
+
+    T2, K2, D2, N2 = 4, 2, 2, 4
+
+    def _cfg2(self, drain=True):
+        return engine.SimConfig(
+            terminals=self.T2, max_ops=self.K2, num_ds=self.D2,
+            bank_txns=self.N2, proto=protocol.PRESETS["ssp"], warmup_us=0,
+            horizon_us=10_000_000, drain=drain, track_slots=True,
+        )
+
+    def _bank2(self):
+        cfg_w = workloads.YCSBConfig(
+            num_ds=self.D2, records_per_node=64, ops_per_txn=self.K2,
+            dist_ratio=0.5, theta=0.5, seed=0,
+        )
+        return workloads.make_ycsb_bank(
+            cfg_w, terminals=self.T2, txns_per_terminal=self.N2
+        )
+
+    def _fanin_state(self, ack_t_us: int, vote_t_us: int):
+        """Terminal 0 awaits a commit-ack at DS 0 due at ack_t_us; terminal 1
+        awaits a 2PC vote at DS 1 due at vote_t_us — two DM fan-ins at
+        *different* timestamps, neither completing its transaction."""
+        cfg = self._cfg2()
+        net = make_net_params(RTT)
+        s = engine.init_state(cfg, net.tau_dm, net.tau_ds, jitter_milli=0)
+        inv = np.zeros((self.T2, self.D2), bool)
+        inv[0] = [True, True]
+        inv[1] = [True, True]
+        sub_state = np.zeros((self.T2, self.D2), np.int8)
+        sub_time = np.full((self.T2, self.D2), engine.INF_US, np.int32)
+        sub_state[0, 0] = engine.SUB_ACK
+        sub_time[0, 0] = ack_t_us
+        sub_state[0, 1] = engine.SUB_ACK
+        sub_time[0, 1] = ack_t_us + 900_000  # peer ack far out
+        sub_state[1, 1] = engine.SUB_VOTE
+        sub_time[1, 1] = vote_t_us
+        sub_state[1, 0] = engine.SUB_PREPARING
+        sub_time[1, 0] = vote_t_us + 900_000  # peer still flushing WAL
+        phase = np.zeros((self.T2,), np.int8)
+        phase[0] = engine.T_COMMIT_WAIT
+        phase[1] = engine.T_ACTIVE
+        return cfg, s._replace(
+            inv=jnp.asarray(inv),
+            sub_state=jnp.asarray(sub_state),
+            sub_time=jnp.asarray(sub_time),
+            phase=jnp.asarray(phase),
+            term_time=jnp.full((self.T2,), engine.INF_US, jnp.int32),
+        )
+
+    def _arrival_state(self, keys, dss, times):
+        """One ENROUTE op per terminal i, on key/DS/due-time keys[i]/dss[i]/
+        times[i] (None = terminal idle). Execution slowed to 50 ms so chained
+        exec completions land far beyond any window boundary here."""
+        cfg = self._cfg2()
+        net = make_net_params(RTT)
+        s = engine.init_state(cfg, net.tau_dm, net.tau_ds, jitter_milli=0)
+        T2, K2, D2 = self.T2, self.K2, self.D2
+        op_state = np.zeros((T2, K2), np.int8)
+        op_key = np.zeros((T2, K2), np.int32)
+        op_ds = np.zeros((T2, K2), np.int8)
+        op_write = np.zeros((T2, K2), bool)
+        op_time = np.full((T2, K2), engine.INF_US, np.int32)
+        inv = np.zeros((T2, D2), bool)
+        sub_state = np.zeros((T2, D2), np.int8)
+        sub_arrive = np.zeros((T2, D2), np.int32)
+        phase = np.zeros((T2,), np.int8)
+        for t, (k, d, ts) in enumerate(zip(keys, dss, times)):
+            if ts is None:
+                continue
+            op_state[t, 0] = engine.OP_ENROUTE
+            op_key[t, 0] = k
+            op_ds[t, 0] = d
+            op_write[t, 0] = True
+            op_time[t, 0] = ts
+            inv[t, d] = True
+            sub_state[t, d] = engine.SUB_RUN
+            sub_arrive[t, d] = max(ts - 100, 0)
+            phase[t] = engine.T_ACTIVE
+        return cfg, s._replace(
+            op_state=jnp.asarray(op_state),
+            op_key=jnp.asarray(op_key),
+            op_ds=jnp.asarray(op_ds),
+            op_write=jnp.asarray(op_write),
+            op_time=jnp.asarray(op_time),
+            inv=jnp.asarray(inv),
+            sub_state=jnp.asarray(sub_state),
+            sub_arrive=jnp.asarray(sub_arrive),
+            phase=jnp.asarray(phase),
+            term_time=jnp.full((self.T2,), engine.INF_US, jnp.int32),
+            dyn=s.dyn._replace(exec_us=jnp.int32(50_000)),
+        )
+
+    def test_window_spans_distinct_timestamps(self):
+        # an ack at t=1000 and a vote at t=1400 — nothing ties, yet both
+        # apply in ONE masked window pass, bitwise-equal to two _step calls
+        bank = self._bank2()
+        cfg, s = self._fanin_state(ack_t_us=1000, vote_t_us=1400)
+        drained = _stepped(cfg, bank, s, 1, True)
+        seq = _stepped(cfg, bank, s, 2, False)
+        assert int(drained.drained) == 2
+        assert int(drained.windows) == 1
+        assert int(drained.iters) == 2 == int(seq.iters)
+        assert int(drained.now) == 1400 == int(seq.now)
+        _assert_state_bitwise(drained, seq)
+
+    def test_window_stops_at_lock_key_collision(self):
+        # arrivals at t=1000 (key 7), t=1100 (key 9), t=1200 (key 7 again):
+        # the window takes the first two and stops exactly at the colliding
+        # arrival, which runs sequentially on the next iteration
+        bank = self._bank2()
+        cfg, s = self._arrival_state(
+            keys=[7, 9, 7, 0], dss=[0, 1, 0, 0], times=[1000, 1100, 1200, None]
+        )
+        drained = _stepped(cfg, bank, s, 1, True)
+        assert int(drained.drained) == 2  # key-7 rerun excluded
+        assert int(drained.windows) == 1
+        assert int(drained.now) == 1100
+        # next iteration the colliding arrival is first: it queues behind the
+        # key-7 holder (lock-wait, no conflict any more) and batches with the
+        # two exec completions at t=51000/51100 — a second 3-event window
+        drained = _stepped(cfg, bank, drained, 1, True)
+        assert int(drained.drained) == 5
+        assert int(drained.windows) == 2
+        # 5 sequential steps as 2+2+1 so the (2, False) graph is reused
+        seq = _stepped(cfg, bank, s, 2, False)
+        seq = _stepped(cfg, bank, seq, 2, False)
+        seq = _stepped(cfg, bank, seq, 1, False)
+        _assert_state_bitwise(drained, seq)
+
+    def test_window_stops_before_scheduling_event(self):
+        # the t=1000 arrival schedules its exec completion at t=51000; an
+        # arrival at t=60000 therefore cannot join the window
+        bank = self._bank2()
+        cfg, s = self._arrival_state(
+            keys=[7, 9, 11, 0], dss=[0, 1, 1, 0], times=[1000, 40_000, 60_000, None]
+        )
+        drained = _stepped(cfg, bank, s, 1, True)
+        assert int(drained.drained) == 2  # 1000 + 40000 batch; 60000 excluded
+        assert int(drained.now) == 40_000
+        seq = _stepped(cfg, bank, s, 2, False)
+        _assert_state_bitwise(drained, seq)
+
+    @pytest.mark.slow
+    def test_abort_heavy_drain_bitwise(self):
+        # tiny hot keyspace: lock-wait timeouts, abort fan-outs and retries
+        # interleave with windows; full-run fingerprints must stay identical
+        cfg_w = workloads.YCSBConfig(
+            num_ds=D, records_per_node=4, ops_per_txn=K, dist_ratio=0.8,
+            theta=1.6, seed=1,
+        )
+        bank = workloads.make_ycsb_bank(cfg_w, terminals=T, txns_per_terminal=N)
+        net = make_net_params((5.0, 20.0))
+        prints = {}
+        for drain in (False, True):
+            cfg = _cfg("geotp", drain=drain, horizon_s=6.0)
+            st, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds)
+            m = {k: v for k, v in m.items() if v == v}  # drop NaN percentiles
+            prints[drain] = _fingerprint(st, m)
+        assert prints[True][0]["aborts"] > 0  # the abort path really ran
+        assert prints[False] == prints[True]
 
 
 class TestWorldSpec:
