@@ -1,29 +1,29 @@
-"""Shared benchmark harness: build banks, run engine presets, batch sweeps.
+"""Shared benchmark harness — a thin client of the engine's public API.
 
-`run_point` runs one cell (kept for ad-hoc probes and state-carrying runs);
-`run_sweep` is the primary entry: it turns a whole figure grid — presets ×
-latency matrices × jitter × engine profiles × seeds — into ONE WorldSpec
-batch that compiles once and executes as a single batched device call
-(`engine.simulate_batch`). Every sweep records its aggregate events/sec and
-wall-clock into results/bench/BENCH_engine.json, which doubles as the
-perf-regression baseline for `benchmarks.run --smoke`.
+`run_sweep` turns a whole figure grid — presets × latency matrices × jitter ×
+engine profiles × seeds — into an `engine.Grid` (validated cell-by-cell) and
+executes it through an `engine.Simulator` as ONE batched device call,
+returning the structured `engine.RunResult`. `run_point` runs a single cell
+through the same facade (kept for ad-hoc probes; continuation / online
+reconfiguration runs go through `engine.Simulator.resume` — see
+`benchmarks.figures.fig11_dynamic`).
+
+Every recorded sweep lands in results/bench/BENCH_engine.json via
+`RunResult.save` / `record_bench` — the exact legacy `sweeps.<tag>` schema
+plus the jax runtime environment — and doubles as the perf-regression
+baseline for `benchmarks.run --smoke`.
 """
 
 from __future__ import annotations
 
 import json
 import pathlib
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import engine, protocol, workloads
+from repro.core import engine, workloads
 from repro.core.netmodel import PAPER_RTT_MS, make_net_params
 
 RESULTS = pathlib.Path("results/bench")
-BENCH_FILE = RESULTS / "BENCH_engine.json"
+BENCH_FILE = engine.BENCH_FILE
 DEFAULT_RTT = PAPER_RTT_MS
 
 
@@ -33,28 +33,11 @@ def save(name: str, payload) -> None:
         json.dump(payload, f, indent=1, default=float)
 
 
-def load_bench() -> dict:
-    if BENCH_FILE.exists():
-        with open(BENCH_FILE) as f:
-            return json.load(f)
-    return {"sweeps": {}, "smoke": {}}
-
-
-def record_bench(tag: str, entry: dict) -> None:
-    """Merge one sweep's perf record into BENCH_engine.json."""
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    bench = load_bench()
-    bench.setdefault("sweeps", {})[tag] = entry
-    with open(BENCH_FILE, "w") as f:
-        json.dump(bench, f, indent=1, default=float)
-
-
-def record_smoke(entry: dict) -> None:
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    bench = load_bench()
-    bench["smoke"] = entry
-    with open(BENCH_FILE, "w") as f:
-        json.dump(bench, f, indent=1, default=float)
+# bench-record IO lives with the engine API (one writer, env keys included);
+# these aliases keep the historical benchmarks.common entry points working
+load_bench = engine.load_bench
+record_bench = engine.record_bench
+record_smoke = engine.record_smoke
 
 
 def run_point(
@@ -67,45 +50,32 @@ def run_point(
     warmup_s: float = 2.0,
     exec_scale_milli=None,
     proto_override=None,
-    state=None,
     tau_true_us=None,
 ):
-    proto = proto_override or protocol.PRESETS[preset]
+    """Run one cell through the Simulator facade; returns (RunResult, metrics)."""
+    proto = proto_override or preset
     net = make_net_params(rtt_ms)
-    cfg = engine.SimConfig(
+    sim = engine.Simulator(
         terminals=terminals,
         max_ops=bank.key.shape[-1],
         num_ds=len(rtt_ms),
         bank_txns=bank.key.shape[1],
         proto=proto,
-        warmup_us=int(warmup_s * 1e6),
-        horizon_us=int(horizon_s * 1e6),
+        horizon_s=horizon_s,
+        warmup_s=warmup_s,
     )
-    t0 = time.time()
-    st, m = engine.simulate(
-        cfg,
-        bank,
-        tau_true_us if tau_true_us is not None else net.tau_dm,
-        net.tau_ds,
+    world = engine.make_world(
+        proto,
+        tau_true_us=tau_true_us if tau_true_us is not None else net.tau_dm,
+        tau_ds_us=net.tau_ds,
         jitter_milli=jitter_milli,
         exec_scale_milli=exec_scale_milli,
-        state=state,
     )
-    m["wall_s"] = round(time.time() - t0, 1)
+    res = sim.run(world, bank, labels=dict(preset=preset))
+    m = res.metrics[0]
+    m["wall_s"] = round(res.wall_s, 1)
     m["preset"] = preset
-    assert m["noops"] == 0, (preset, m["noops"])
-    return st, m
-
-
-def _cell_world(cell: dict) -> engine.WorldSpec:
-    return engine.make_world(
-        cell["preset"],
-        cell.get("rtt_ms", DEFAULT_RTT),
-        tau_true_us=cell.get("tau_true_us"),
-        jitter_milli=cell.get("jitter_milli", 30),
-        exec_scale_milli=cell.get("exec_scale_milli"),
-        seed=cell.get("seed", 0),
-    )
+    return res, m
 
 
 def run_sweep(
@@ -119,76 +89,34 @@ def run_sweep(
     warmup_s: float = 2.0,
     strategy: str = "auto",
     record: bool = True,
-):
-    """Run a grid of cells as one batched device call.
+) -> engine.RunResult:
+    """Run a grid of cells as one batched device call; returns a RunResult.
 
-    cells: list of dicts. Required key: "preset". Optional: rtt_ms,
-           tau_true_us, jitter_milli, exec_scale_milli, seed — anything that
-           varies across the grid. Extra keys are ignored by the engine, so a
-           cell can carry figure-level labels (theta, level, ...).
+    cells: list of dicts (the historical cell format — now validated by
+           `engine.Grid`: a heterogeneous num_ds, unknown preset or
+           mismatched per-cell bank raises with the offending cell index
+           instead of silently inheriting cells[0]'s shapes).
+           Required key: "preset". Optional: rtt_ms, tau_true_us,
+           jitter_milli, exec_scale_milli, seed. Extra keys are carried as
+           labels into `RunResult.rows()` (theta, level, ...).
     bank:  Bank shared by every cell, or None with `banks` given.
     banks: optional per-cell Bank list (same shapes); batched over the sweep.
-
-    Returns (final_states [B-batched], metrics list — one dict per cell, each
-    tagged with its preset and the sweep wall time).
     """
-    if banks is not None:
-        assert len(banks) == len(cells), "one bank per cell"
-        bank = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *banks)
-        bank_batched = True
-    else:
-        bank_batched = False
+    grid = engine.Grid(cells, banks=banks)
     b0 = banks[0] if banks is not None else bank
-    num_ds = len(cells[0].get("rtt_ms", DEFAULT_RTT))
-    if cells[0].get("tau_true_us") is not None:
-        num_ds = len(cells[0]["tau_true_us"])
-    cfg = engine.SimConfig(
-        terminals=terminals,
-        max_ops=b0.key.shape[-1],
-        num_ds=num_ds,
-        bank_txns=b0.key.shape[1],
-        proto=protocol.PRESETS[cells[0]["preset"]],
-        warmup_us=int(warmup_s * 1e6),
-        horizon_us=int(horizon_s * 1e6),
+    sim = engine.Simulator.from_bank(
+        b0, terminals=terminals, horizon_s=horizon_s, warmup_s=warmup_s
     )
-    worlds = engine.stack_worlds([_cell_world(c) for c in cells])
-    t0 = time.time()
-    states, metrics = engine.simulate_batch(
-        cfg, bank, worlds, bank_batched=bank_batched, strategy=strategy
-    )
-    wall = time.time() - t0
-    events = 0
-    for c, m in zip(cells, metrics):
+    res = sim.run_grid(grid, bank, strategy=strategy)
+    for c, m in zip(cells, res.metrics):
         m["preset"] = c["preset"]
         # per-cell cost is amortized in a batched sweep; keep wall_s in the
         # per-cell sense it had before (total grid wall goes in sweep_wall_s)
-        m["wall_s"] = round(wall / len(cells), 2)
-        m["sweep_wall_s"] = round(wall, 1)
-        events += m["events"]
-        assert m["noops"] == 0, (tag, c["preset"], m["noops"])
+        m["wall_s"] = round(res.wall_s / len(cells), 2)
+        m["sweep_wall_s"] = round(res.wall_s, 1)
     if record:
-        drain = engine.drain_stats(states)
-        record_bench(
-            tag,
-            {
-                "worlds": len(cells),
-                "terminals": terminals,
-                "events": events,
-                "wall_s": round(wall, 2),
-                "events_per_sec": round(events / max(wall, 1e-9), 1),
-                "strategy": strategy,
-                "horizon_s": horizon_s,
-                # windowed-drain telemetry: share of events applied by masked
-                # window passes, mean events per window, and the actual
-                # while-loop trip count (events - drained + windows). Both
-                # strategies drain now — the lockstep/vmap path reports real
-                # hit rates instead of a silent drain=False downgrade.
-                "drain_hit_rate": drain["drain_hit_rate"],
-                "mean_window_len": drain["mean_window_len"],
-                "loop_iters": drain["loop_iters"],
-            },
-        )
-    return states, metrics
+        res.save(tag)
+    return res
 
 
 def ycsb_bank(

@@ -1,10 +1,12 @@
 """Per-figure benchmark modules (one function per paper table/figure).
 
 Each figure's grid — presets × RTT vectors × contention × distributed ratio ×
-seeds — is assembled as a list of WorldSpec cells and executed by
-`common.run_sweep` as one (or a few) batched device calls: one engine compile
-per bank shape instead of one per cell. Results are JSON payloads under
-results/bench/; per-sweep throughput is recorded in BENCH_engine.json.
+seeds — is assembled as a list of cells, validated by `engine.Grid` and
+executed through the `engine.Simulator` facade (`common.run_sweep`) as one
+(or a few) batched device calls: one engine compile per bank shape instead of
+one per cell. Each sweep returns an `engine.RunResult`; results are JSON
+payloads under results/bench/; per-sweep throughput is recorded in
+BENCH_engine.json.
 
 Sizes are scaled to finish on CPU while preserving the paper's regimes (1M
 records/node, the Beijing/Shanghai/Singapore/London RTT vector, 5-op YCSB
@@ -15,8 +17,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import run_point, run_sweep, save, summary_line, ycsb_bank
-from repro.core import engine, protocol, workloads
+from benchmarks.common import run_sweep, save, summary_line, ycsb_bank
+from repro.core import engine, workloads
 
 QUICK_T = 48  # default terminals for sweeps
 
@@ -34,7 +36,7 @@ def fig1_motivation(quick=True):
                 dict(preset="ssp", rtt_ms=(10.0, float(tau2)), contention=contention, tau2_ms=tau2)
             )
             banks.append(bank)
-    _, ms = run_sweep("fig1", cells, None, QUICK_T, banks=banks, horizon_s=8.0)
+    ms = run_sweep("fig1", cells, None, QUICK_T, banks=banks, horizon_s=8.0).metrics
     for c, m in zip(cells, ms):
         out.append(
             dict(contention=c["contention"], tau2_ms=c["tau2_ms"], p50_cen=m["p50_centralized_ms"],
@@ -52,7 +54,7 @@ def fig5_overall(quick=True):
     for T in terms:
         bank = ycsb_bank(T, theta=0.9, dist_ratio=0.2)
         cells = [dict(preset=p) for p in ("ssp", "ssp-local", "scalardb", "geotp")]
-        _, ms = run_sweep(f"fig5_ycsb_T{T}", cells, bank, T)
+        ms = run_sweep(f"fig5_ycsb_T{T}", cells, bank, T).metrics
         for c, m in zip(cells, ms):
             out.append(dict(bench="ycsb", terminals=T, **m))
             print(summary_line(f"fig5 ycsb T={T} {c['preset']}", m))
@@ -60,7 +62,7 @@ def fig5_overall(quick=True):
         tcfg = workloads.TPCCConfig(num_ds=4, warehouses_per_node=16, dist_ratio=0.2)
         bank, _ = workloads.make_tpcc_bank(tcfg, T, 256)
         cells = [dict(preset=p) for p in ("ssp", "geotp")]
-        _, ms = run_sweep(f"fig5_tpcc_T{T}", cells, bank, T)
+        ms = run_sweep(f"fig5_tpcc_T{T}", cells, bank, T).metrics
         for c, m in zip(cells, ms):
             out.append(dict(bench="tpcc", terminals=T, **m))
             print(summary_line(f"fig5 tpcc T={T} {c['preset']}", m))
@@ -82,7 +84,7 @@ def fig7_dist_ratio(quick=True):
                 banks.append(bank)
             cells.append(dict(preset="quro", level=level, dist_ratio=dr))
             banks.append(bank_q)
-    _, ms = run_sweep("fig7", cells, None, QUICK_T, banks=banks)
+    ms = run_sweep("fig7", cells, None, QUICK_T, banks=banks).metrics
     for c, m in zip(cells, ms):
         out.append(dict(level=c["level"], dist_ratio=c["dist_ratio"], **m))
         print(summary_line(f"fig7 {c['level']} dr={c['dist_ratio']} {c['preset']}", m))
@@ -99,9 +101,9 @@ def fig8_latency_cdf(quick=True):
         for preset in ("ssp", "ssp-local", "geotp"):
             cells.append(dict(preset=preset, level=level))
             banks.append(bank)
-    states, ms = run_sweep("fig8", cells, None, QUICK_T, banks=banks)
-    for i, (c, m) in enumerate(zip(cells, ms)):
-        st = engine.world_index(states, i)
+    res = run_sweep("fig8", cells, None, QUICK_T, banks=banks)
+    for i, (c, m) in enumerate(zip(cells, res.metrics)):
+        st = res.world(i)
         edges, cdf = engine.latency_cdf(np.asarray(st.hist_all))
         _, cdf_cen = engine.latency_cdf(np.asarray(st.hist_cen))
         out.append(
@@ -126,7 +128,7 @@ def fig9_tpcc(quick=True):
         for preset in ("ssp", "chiller", "geotp"):
             cells.append(dict(preset=preset, txn=tname))
             banks.append(bank)
-    _, ms = run_sweep("fig9", cells, None, QUICK_T, banks=banks)
+    ms = run_sweep("fig9", cells, None, QUICK_T, banks=banks).metrics
     for c, m in zip(cells, ms):
         out.append(dict(txn=c["txn"], **m))
         print(summary_line(f"fig9 {c['txn']} {c['preset']}", m))
@@ -147,7 +149,7 @@ def fig10_network(quick=True):
         rtt = (0.0, 40.0 - std / 2, 40.0, 40.0 + std)
         for preset in ("ssp", "geotp"):
             cells.append(dict(preset=preset, rtt_ms=rtt, sweep="std", std_ms=std))
-    _, ms = run_sweep("fig10", cells, bank, QUICK_T)
+    ms = run_sweep("fig10", cells, bank, QUICK_T).metrics
     for c, m in zip(cells, ms):
         label = {k: c[k] for k in ("sweep", "mean_ms", "std_ms") if k in c}
         out.append(dict(**label, **m))
@@ -168,34 +170,40 @@ def fig11_dynamic(quick=True):
         rtt = tuple(float(x) for x in [0.0, *sorted(rng.uniform(10, 250, 3))])
         for preset in ("ssp", "geotp"):
             cells.append(dict(preset=preset, rtt_ms=rtt, trial=trial))
-    _, ms = run_sweep("fig11_random", cells, bank, QUICK_T, horizon_s=8.0)
+    ms = run_sweep("fig11_random", cells, bank, QUICK_T, horizon_s=8.0).metrics
     for c, m in zip(cells, ms):
         out.append(dict(mode="random", trial=c["trial"], rtt=c["rtt_ms"], **m))
     print(f"fig11 random: {trials} trials x 2 presets done")
-    # online adaptivity: change tau_true every segment, carry engine state
+    # online adaptivity: change tau_true every segment, resume the engine
+    # state through the Simulator facade (donated continuation buffers)
     segs = [(0, 27, 73, 251), (0, 120, 40, 200), (0, 27, 200, 80), (0, 60, 60, 251)]
     import jax.numpy as jnp
 
+    sim = engine.Simulator.from_bank(
+        bank, terminals=QUICK_T, horizon_s=8.0, warmup_s=1.0
+    )
     for preset in ("ssp", "geotp"):
-        st = None
+        res = None
         tps = []
         for i, rtt in enumerate(segs):
             tau = jnp.asarray([int(r * 1000) for r in rtt], jnp.int32)
-            if st is None:
-                st, m = run_point(preset, bank, QUICK_T, rtt_ms=tuple(map(float, rtt)),
-                                  horizon_s=8.0, warmup_s=1.0)
+            if res is None:
+                world = engine.make_world(
+                    preset, tuple(map(float, rtt)), jitter_milli=30
+                )
+                res = sim.run(world, bank)
+                m = res.metrics[0]
             else:
                 # continue from prior state with new true latencies
-                st = st._replace(tau_true=tau)
-                base_commits = int(st.commits)
-                cfg = engine.SimConfig(
-                    terminals=QUICK_T, max_ops=bank.key.shape[-1], num_ds=4,
-                    bank_txns=bank.key.shape[1], proto=protocol.PRESETS[preset],
-                    warmup_us=0, horizon_us=int(st.now) + 8_000_000,
+                res = res.with_states(res.states._replace(tau_true=tau))
+                base_commits = int(res.states.commits)
+                res = sim.resume(
+                    res,
+                    horizon_s=int(res.states.now) / 1e6 + 8.0,
+                    warmup_s=0.0,
                 )
-                st = engine._run_jit(cfg, bank, st)
-                m = engine.summarize(cfg, st)
-                m["throughput_tps"] = (int(st.commits) - base_commits) / 8.0
+                m = dict(res.metrics[0])
+                m["throughput_tps"] = (int(res.states.commits) - base_commits) / 8.0
             tps.append(m["throughput_tps"])
             out.append(dict(mode="online", preset=preset, segment=i, rtt=rtt,
                             tps=m["throughput_tps"]))
@@ -214,7 +222,7 @@ def fig12_ablation(quick=True):
         for preset in ("ssp", "geotp-o1", "geotp-o1o2", "geotp"):
             cells.append(dict(preset=preset, theta=theta))
             banks.append(bank)
-    _, ms = run_sweep("fig12", cells, None, QUICK_T, banks=banks)
+    ms = run_sweep("fig12", cells, None, QUICK_T, banks=banks).metrics
     for c, m in zip(cells, ms):
         out.append(dict(theta=c["theta"], **m))
         print(summary_line(f"fig12 theta={c['theta']} {c['preset']}", m))
@@ -240,7 +248,7 @@ def table1_heterogeneous(quick=True):
                     dict(preset=preset, exec_scale_milli=scale, scenario=sname, dist_ratio=dr)
                 )
                 banks.append(bank)
-    _, ms = run_sweep("table1", cells, None, QUICK_T, banks=banks)
+    ms = run_sweep("table1", cells, None, QUICK_T, banks=banks).metrics
     for c, m in zip(cells, ms):
         out.append(dict(scenario=c["scenario"], dist_ratio=c["dist_ratio"], **m))
         print(summary_line(f"table1 {c['scenario']} dr={c['dist_ratio']} {c['preset']}", m))
@@ -257,7 +265,7 @@ def fig13_yugabyte(quick=True):
         for preset in ("ssp", "geotp", "yugabyte-like"):
             cells.append(dict(preset=preset, level=level))
             banks.append(bank)
-    _, ms = run_sweep("fig13", cells, None, QUICK_T, banks=banks)
+    ms = run_sweep("fig13", cells, None, QUICK_T, banks=banks).metrics
     for c, m in zip(cells, ms):
         out.append(dict(level=c["level"], **m))
         print(summary_line(f"fig13 {c['level']} {c['preset']}", m))
@@ -271,7 +279,7 @@ def fig14_txn_length(quick=True):
     for ops in (5, 15, 25):  # txn length changes the op-slot shape: one sweep each
         bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.2, ops=ops)
         cells = [dict(preset=p) for p in ("ssp", "geotp")]
-        _, ms = run_sweep(f"fig14_ops{ops}", cells, bank, QUICK_T)
+        ms = run_sweep(f"fig14_ops{ops}", cells, bank, QUICK_T).metrics
         for c, m in zip(cells, ms):
             out.append(dict(sweep="length", ops=ops, **m))
             print(summary_line(f"fig14 ops={ops} {c['preset']}", m))
@@ -281,7 +289,7 @@ def fig14_txn_length(quick=True):
         for preset in ("ssp", "geotp"):
             cells.append(dict(preset=preset, rounds=rounds, theta=theta))
             banks.append(bank)
-    _, ms = run_sweep("fig14_rounds", cells, None, QUICK_T, banks=banks)
+    ms = run_sweep("fig14_rounds", cells, None, QUICK_T, banks=banks).metrics
     for c, m in zip(cells, ms):
         out.append(dict(sweep="rounds", rounds=c["rounds"], theta=c["theta"], **m))
         print(summary_line(f"fig14 rounds={c['rounds']} th={c['theta']} {c['preset']}", m))
@@ -297,7 +305,7 @@ def fig15_multiregion(quick=True):
     for dm, rtt in (("dm1-beijing", (0.0, 27.0, 73.0, 251.0)), ("dm2-london", (251.0, 226.0, 175.0, 0.0))):
         for preset in ("ssp", "geotp"):
             cells.append(dict(preset=preset, rtt_ms=rtt, dm=dm))
-    _, ms = run_sweep("fig15", cells, bank, QUICK_T)
+    ms = run_sweep("fig15", cells, bank, QUICK_T).metrics
     for c, m in zip(cells, ms):
         out.append(dict(dm=c["dm"], **m))
         print(summary_line(f"fig15 {c['dm']} {c['preset']}", m))

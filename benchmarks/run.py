@@ -169,7 +169,7 @@ def smoke() -> int:
     for strategy in ("map", "vmap"):
         jax.clear_caches()
         t0 = time.time()
-        states, metrics = common.run_sweep(
+        res = common.run_sweep(
             f"smoke_fig5_{strategy}",
             cells,
             None,
@@ -180,9 +180,9 @@ def smoke() -> int:
             strategy=strategy,
         )
         wall = time.time() - t0
-        events = sum(m["events"] for m in metrics)
+        events = res.events
         eps[strategy] = events / max(wall, 1e-9)
-        drain[strategy] = engine.drain_stats(states)
+        drain[strategy] = res.drain
         if strategy == "map":
             # the primary "batched" record stays the map-strategy run — the
             # same pipeline PR-1 baselined, so the stored-baseline guard is

@@ -16,23 +16,22 @@ lcs = scheduler.lock_contention_span(tau, involved, offsets)
 print("Eq.(3) dispatch offsets (µs):", offsets, "-> lock spans:", lcs)
 
 # ---- 2. The discrete-event engine: GeoTP vs 2PC on YCSB --------------------
-from repro.core import engine, protocol, workloads
-from repro.core.netmodel import make_net_params
+# Public API: a Simulator fixed to the static shapes (compiled once) runs a
+# declarative Grid of presets as ONE batched device call.
+from repro.core import workloads
+from repro.core.engine import Grid, Simulator
 
 bank = workloads.make_ycsb_bank(
     workloads.YCSBConfig(records_per_node=100_000, theta=0.9, dist_ratio=0.3),
     terminals=16,
     txns_per_terminal=128,
 )
-net = make_net_params()  # Beijing / Shanghai / Singapore / London
-for name in ("ssp", "geotp"):
-    cfg = engine.SimConfig(
-        terminals=16, max_ops=5, num_ds=4, bank_txns=128,
-        proto=protocol.PRESETS[name], warmup_us=1_000_000, horizon_us=6_000_000,
-    )
-    _, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds)
-    print(f"{name:6s}: {m['throughput_tps']:6.1f} txn/s, "
-          f"avg {m['avg_latency_ms']:6.1f} ms, lock span {m['avg_lcs_ms']:6.1f} ms")
+sim = Simulator.from_bank(bank, horizon_s=6.0, warmup_s=1.0)
+grid = Grid.cross(preset=("ssp", "geotp"), jitter_milli=0)
+res = sim.run_grid(grid, bank)  # default RTTs: Beijing/Shanghai/Singapore/London
+for row in res.rows():
+    print(f"{row['preset']:6s}: {row['throughput_tps']:6.1f} txn/s, "
+          f"avg {row['avg_latency_ms']:6.1f} ms, lock span {row['avg_lcs_ms']:6.1f} ms")
 
 # ---- 3. The model substrate: one forward pass of an assigned arch ----------
 from repro.configs import registry

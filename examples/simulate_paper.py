@@ -10,8 +10,8 @@ GeoTP O1 (decentralized prepare) and full GeoTP (O1+O2 stagger).
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import engine, protocol, workloads
-from repro.core.netmodel import make_net_params
+from repro.core import workloads
+from repro.core.engine import Grid, Simulator
 
 
 def bank_one_txn():
@@ -29,18 +29,18 @@ def bank_one_txn():
 
 
 def main():
-    net = make_net_params((10.0, 100.0))
     bank = bank_one_txn()
     print("T1 spans DS1 (10ms RTT) and DS2 (100ms RTT), as in Fig 2 / Fig 4:\n")
-    for name in ("ssp", "geotp-o1", "geotp-o1o2"):
-        cfg = engine.SimConfig(
-            terminals=1, max_ops=2, num_ds=2, bank_txns=8,
-            proto=protocol.PRESETS[name], warmup_us=0, horizon_us=3_000_000,
-        )
-        _, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds)
+    sim = Simulator.from_bank(bank, horizon_s=3.0, warmup_s=0.0)
+    grid = Grid.cross(
+        preset=("ssp", "geotp-o1", "geotp-o1o2"),
+        rtt_ms=(10.0, 100.0),  # one RTT vector shared by every cell
+        jitter_milli=0,
+    )
+    for row in sim.run_grid(grid, bank).rows():
         print(
-            f"{name:11s} txn latency {m['avg_latency_ms']:6.1f} ms   "
-            f"mean lock span {m['avg_lcs_ms']:6.1f} ms"
+            f"{row['preset']:11s} txn latency {row['avg_latency_ms']:6.1f} ms   "
+            f"mean lock span {row['avg_lcs_ms']:6.1f} ms"
         )
     print(
         "\npaper: SSP ~3 WAN rounds (300ms), O1 folds prepare into execution"

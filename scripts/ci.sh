@@ -9,6 +9,11 @@
 # the default `pytest -q` under ~3 minutes; CI runs the slow set explicitly
 # as its own step so coverage is not lost.
 #
+# Before the tests, a layering guard asserts the `repro.core.engine` package
+# imports side-effect-free and never depends on `benchmarks`/`repro.serving`
+# (the benchmark harness is a thin client of Simulator/Grid/RunResult), and
+# `examples/quickstart.py` runs as a public-API smoke.
+#
 # The smoke step runs `benchmarks/run.py --smoke`: a reduced fig5 YCSB grid
 # (presets x seeds) executed once per batching strategy. It asserts that
 # both strategies report events/sec, that the vmap (lockstep, branchless
@@ -30,6 +35,24 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# ---- layering guard: the engine package is a leaf ---------------------------
+# `repro.core.engine` must import side-effect-free and must never depend on
+# the benchmark harness or the serving stack (the benchmarks are thin clients
+# of Simulator/Grid/RunResult, not the other way around).
+if grep -RInE "(^|[^a-zA-Z_.])((import|from) +(benchmarks|repro\.serving)|from +repro +import +[a-zA-Z_, ]*\bserving\b)" \
+        src/repro/core/engine/; then
+    echo "[ci] LAYERING VIOLATION: engine package imports benchmarks/serving"
+    exit 1
+fi
+python -c "
+import sys
+import repro.core.engine
+bad = sorted(m for m in sys.modules
+             if m.startswith('benchmarks') or m.startswith('repro.serving'))
+assert not bad, f'engine import pulled in: {bad}'
+print('[ci] engine package import clean (no benchmarks/serving leakage)')
+"
+
 if [ "${SKIP_TESTS:-0}" != "1" ]; then
     # fast tier-1 (addopts already deselect the slow marks)
     python -m pytest -x -q
@@ -38,6 +61,10 @@ if [ "${SKIP_TESTS:-0}" != "1" ]; then
         python -m pytest -x -q -m slow
     fi
 fi
+
+# Public-API smoke: the quickstart example exercises Simulator/Grid/RunResult
+# end to end (scheduler math + a batched preset grid + a model forward pass).
+python examples/quickstart.py
 
 # Perf smoke + regression guards. The smoke exits non-zero itself on a >30%
 # map events/sec drop or a zero vmap drain hit rate; assert here that both

@@ -1,33 +1,21 @@
-"""Quick manual smoke of the core engine (not a pytest test)."""
-import time
-
-import jax
-
-from repro.core import engine, protocol, workloads
-from repro.core.netmodel import make_net_params
+"""Quick manual smoke of the core engine via the public API (not a pytest
+test): one Simulator (one compile per shape) serves every preset world."""
+from repro.core import workloads
+from repro.core.engine import Simulator, make_world
 
 cfg_w = workloads.YCSBConfig(
     num_ds=4, records_per_node=10_000, ops_per_txn=5, dist_ratio=0.2, theta=0.9
 )
 bank = workloads.make_ycsb_bank(cfg_w, terminals=16, txns_per_terminal=64)
-net = make_net_params((0.0, 27.0, 73.0, 251.0), jitter_frac=0.05)
+RTT = (0.0, 27.0, 73.0, 251.0)
 
+sim = Simulator.from_bank(bank, horizon_s=6.0, warmup_s=1.0)
 for pname in ("ssp", "geotp"):
-    proto = protocol.PRESETS[pname]
-    cfg = engine.SimConfig(
-        terminals=16,
-        max_ops=5,
-        num_ds=4,
-        bank_txns=64,
-        proto=proto,
-        warmup_us=1_000_000,
-        horizon_us=6_000_000,
-    )
-    t0 = time.time()
-    state, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=50)
-    dt = time.time() - t0
+    res = sim.run(make_world(pname, RTT, jitter_milli=50), bank)
+    m = res.metrics[0]
     print(
         f"{pname:10s} tps={m['throughput_tps']:8.1f} avg={m['avg_latency_ms']:8.1f}ms "
         f"p99={m['p99_ms']:8.1f}ms abort={m['abort_rate']:.3f} "
-        f"lcs={m['avg_lcs_ms']:7.1f}ms noops={m['noops']} ev={m['events']} wall={dt:.1f}s"
+        f"lcs={m['avg_lcs_ms']:7.1f}ms noops={m['noops']} ev={m['events']} "
+        f"wall={res.wall_s:.1f}s"
     )

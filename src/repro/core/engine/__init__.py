@@ -1,0 +1,139 @@
+"""Vectorized discrete-event engine for geo-distributed transaction processing.
+
+This is the paper's experimental platform, rebuilt as a deterministic JAX
+state machine and decomposed into a package:
+
+    state.py     shapes + state containers (SimConfig/SimState/WorldSpec/
+                 DynProto) and the shared scalar helpers
+    handlers.py  sequential per-event semantics: lock tables, hotspot,
+                 DM protocol progress, the 12 fused event handlers
+    step.py      seed-reference step (single event, 12-way lax.switch)
+    omni.py      branchless omnibus step (lockstep/vmap single-event path)
+    window.py    windowed conflict-free drain (map + lockstep variants)
+    batch.py     run loop, simulate / simulate_batch sweep entry points
+    metrics.py   host-side summaries, drain telemetry, latency CDFs
+    api.py       the public facade: Simulator + Grid + RunResult
+
+**Public API** — build sweeps with `Grid`, run them with `Simulator`,
+consume `RunResult`:
+
+    sim  = Simulator.from_bank(bank, horizon_s=10.0)
+    grid = Grid.cross(preset=("ssp", "geotp"), seed=(0, 1, 2))
+    res  = sim.run_grid(grid, bank)          # ONE batched device call
+    res.rows(); res.drain; res.save("fig5")  # tabulate / telemetry / record
+
+Engine model (unchanged by the decomposition): DM (middleware) + D data
+sources on an int32 µs clock; a `lax.while_loop` processes the concatenated
+`[T + T*D + T*K]` event-time view (term | sub | op) each iteration with one
+of four bitwise-interchangeable step modes (`_step`, `_drain_step`,
+`_omni_step`, `_omni_window`); 2PL lock tables live at the data sources;
+every §VII baseline is a `ProtocolConfig` preset whose knobs are carried in
+`SimState.dyn` as traced scalars, so one compiled program serves every
+preset. All randomness is hash-derived from event counters —
+bitwise-reproducible runs on every path.
+
+This module re-exports the full legacy `repro.core.engine` surface, so
+pre-package imports (`from repro.core import engine; engine.simulate(...)`)
+keep working unchanged.
+"""
+
+from repro.core.engine.state import (
+    # op states
+    OP_NONE,
+    OP_PENDING,
+    OP_ENROUTE,
+    OP_QUEUED,
+    OP_WAIT,
+    OP_EXEC,
+    OP_HOLD,
+    OP_DONE,
+    # subtxn states
+    SUB_NONE,
+    SUB_SCHED,
+    SUB_RUN,
+    SUB_ROUND_REPLY,
+    SUB_ROUND_AT_DM,
+    SUB_WAIT_ROUND,
+    SUB_CHILLER_WAIT,
+    SUB_PREP_CMD,
+    SUB_PREPARING,
+    SUB_VOTE,
+    SUB_VOTED,
+    SUB_COMMIT_CMD,
+    SUB_ACK,
+    SUB_LOCAL_COMMIT,
+    SUB_DONE,
+    SUB_ABORT_PEER,
+    SUB_ABORT_ACK,
+    SUB_ABORTED,
+    # terminal phases
+    T_IDLE,
+    T_ACTIVE,
+    T_COMMIT_LOG,
+    T_COMMIT_WAIT,
+    T_ABORT_WAIT,
+    # lock modes
+    LK_FREE,
+    LK_SHARED,
+    LK_X,
+    HIST_BINS,
+    INF_US,
+    DynProto,
+    SimConfig,
+    SimState,
+    WorldSpec,
+    dyn_from_proto,
+    init_state,
+    init_state_world,
+    make_world,
+    stack_worlds,
+    _HIST_BASE_US,
+    _SALT_MUL,
+    _delay,
+    _delay_salted,
+    _exec_us,
+    _hist_bin,
+    _measuring,
+    _round_done_transition,
+    _salt,
+    _times_flat,
+    _u01,
+)
+from repro.core.engine.handlers import (
+    _attempt_lock,
+    _release_and_grant,
+    _finish_txn,
+    _dm_progress,
+    _initiate_abort,
+)
+from repro.core.engine.step import _step
+from repro.core.engine.omni import _omni_step
+from repro.core.engine.window import _drain_step, _omni_window, _window_plan
+from repro.core.engine.batch import (
+    run,
+    simulate,
+    simulate_batch,
+    _run_jit,
+    _sim_batch_fresh,
+    _sim_world_fresh,
+)
+from repro.core.engine.metrics import (
+    drain_stats,
+    latency_cdf,
+    summarize,
+    summarize_batch,
+    world_index,
+    _percentiles,
+)
+from repro.core.engine.api import (
+    BENCH_DIR,
+    BENCH_FILE,
+    GRID_AXES,
+    Grid,
+    RunResult,
+    Simulator,
+    load_bench,
+    record_bench,
+    record_smoke,
+    runtime_env,
+)

@@ -1,0 +1,557 @@
+"""Public simulation API: `Simulator` + `Grid` + `RunResult`.
+
+The three documented entry points of the engine package:
+
+* **`Grid`** — a declarative sweep: a validated list of cells (dicts over the
+  engine axes `preset` / `rtt_ms` / `tau_true_us` / `jitter_milli` /
+  `exec_scale_milli` / `seed`, plus free-form labels) with optional per-cell
+  Banks. Build from raw cells (`Grid(cells)`), a cross product
+  (`Grid.cross(...)`) or zipped axes (`Grid.zipped(...)`). Every cell is
+  validated at construction — heterogeneous `num_ds`, unknown presets and
+  mismatched bank shapes raise with the offending cell index instead of
+  silently producing wrong-shaped worlds.
+* **`Simulator`** — the facade over the compiled engine. Constructed from the
+  static shapes/horizon (one `SimConfig`); `.run(world, bank)` executes one
+  world, `.run_grid(grid, bank)` executes a whole grid as one batched device
+  call, `.resume(result)` continues finished states (donating the buffers).
+  Run callables are compile-cached per (shape-key, strategy): `SimConfig`
+  excludes the protocol preset from its hash, so one `Simulator` — indeed one
+  process — compiles the engine once per *shape*, not once per cell, whatever
+  mix of presets/latencies/seeds the grids sweep.
+* **`RunResult`** — the structured output: final states (batched over cells),
+  one metric dict per cell, drain telemetry, wall time. `.rows()` merges cell
+  labels with metrics for tabulation, `.world(i)` slices one cell's final
+  state, `.save(tag)` records the sweep into the benchmark JSON with the
+  exact legacy `sweeps.<tag>` schema (plus the jax runtime environment).
+
+Layering: this package never imports `benchmarks` or `repro.serving` — the
+benchmark harness is a thin client of these three objects.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import pathlib
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.netmodel import PAPER_RTT_MS
+from repro.core.protocol import PRESETS, ProtocolConfig
+
+from repro.core.engine.batch import _run_jit, _sim_world_fresh, simulate_batch
+from repro.core.engine.metrics import drain_stats, summarize, world_index
+from repro.core.engine.state import SimConfig, WorldSpec, make_world, stack_worlds
+
+# engine-owned axes a Grid cell may set; everything else is a free-form label
+GRID_AXES = ("preset", "rtt_ms", "tau_true_us", "jitter_milli", "exec_scale_milli", "seed")
+# axes whose single value is itself a sequence (one entry per data source)
+_VECTOR_AXES = ("rtt_ms", "tau_true_us", "exec_scale_milli")
+
+BENCH_DIR = pathlib.Path("results/bench")
+BENCH_FILE = BENCH_DIR / "BENCH_engine.json"
+
+
+# ---------------------------------------------------------------------------
+# benchmark JSON records (shared writer — benchmarks.common delegates here)
+# ---------------------------------------------------------------------------
+
+
+def runtime_env() -> dict:
+    """The jax runtime this process measured on — recorded in every bench
+    entry so perf trajectories across rigs/versions stay interpretable."""
+    return {
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "jax_device_count": jax.device_count(),
+    }
+
+
+def load_bench(path=None) -> dict:
+    p = pathlib.Path(path) if path is not None else BENCH_FILE
+    if p.exists():
+        with open(p) as f:
+            return json.load(f)
+    return {"sweeps": {}, "smoke": {}}
+
+
+def _write_bench(bench: dict, path) -> None:
+    p = pathlib.Path(path) if path is not None else BENCH_FILE
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+
+
+def record_bench(tag: str, entry: dict, path=None) -> dict:
+    """Merge one sweep's perf record into the bench JSON under sweeps.<tag>."""
+    entry = {**entry, **runtime_env()}
+    bench = load_bench(path)
+    bench.setdefault("sweeps", {})[tag] = entry
+    _write_bench(bench, path)
+    return entry
+
+
+def record_smoke(entry: dict, path=None) -> dict:
+    entry = {**entry, **runtime_env()}
+    bench = load_bench(path)
+    bench["smoke"] = entry
+    _write_bench(bench, path)
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Grid
+# ---------------------------------------------------------------------------
+
+
+def _cell_num_ds(cell: dict, default_rtt_ms) -> int:
+    if cell.get("tau_true_us") is not None:
+        return len(cell["tau_true_us"])
+    rtt = cell.get("rtt_ms")  # an explicit None means "use the default" too
+    return len(rtt if rtt is not None else default_rtt_ms)
+
+
+# axes dropped from tabulated rows (per-DS arrays don't tabulate; rtt_ms is
+# kept — figures label cells by it)
+_NON_LABEL_AXES = ("tau_true_us", "exec_scale_milli")
+
+
+def _row_labels(cell: dict) -> dict:
+    """A cell's tabulation labels — single source for Grid.labels and
+    RunResult.rows."""
+    return {k: v for k, v in cell.items() if k not in _NON_LABEL_AXES}
+
+
+def _bank_shapes(bank) -> tuple:
+    return tuple(
+        (getattr(x, "shape", None), str(getattr(x, "dtype", type(x).__name__)))
+        for x in jax.tree_util.tree_leaves(bank)
+    )
+
+
+class Grid:
+    """A validated evaluation grid: cells × (optional) per-cell Banks.
+
+    `cells` is a list of dicts. Required key: ``preset`` (a name from
+    `protocol.PRESETS` or a `ProtocolConfig`). Optional engine axes:
+    ``rtt_ms``, ``tau_true_us``, ``jitter_milli``, ``exec_scale_milli``,
+    ``seed``. Any other key is a free-form label carried into
+    `RunResult.rows()` (figure axes like ``theta`` or ``level``).
+
+    NOTE: an unset ``jitter_milli`` defaults to **30** (±3% one-way jitter —
+    the historical `run_sweep` cell default, kept for baseline
+    compatibility), whereas bare `make_world` defaults to 0; set it
+    explicitly when porting `make_world` calls that relied on zero jitter.
+
+    Construction validates EVERY cell — `run_sweep`'s old behavior of
+    inferring shapes from ``cells[0]`` silently produced wrong-shaped worlds
+    for heterogeneous grids; a bad cell now raises with its index.
+    """
+
+    def __init__(self, cells, *, banks=None, default_rtt_ms=None):
+        if default_rtt_ms is None:
+            default_rtt_ms = PAPER_RTT_MS
+        cells = [dict(c) for c in cells]
+        if not cells:
+            raise ValueError("Grid needs at least one cell")
+        self.default_rtt_ms = tuple(default_rtt_ms)
+        self.cells = cells
+        self.banks = list(banks) if banks is not None else None
+        self.num_ds = _cell_num_ds(cells[0], default_rtt_ms)
+        for i, c in enumerate(cells):
+            preset = c.get("preset")
+            if preset is None:
+                raise ValueError(f"Grid cell {i}: missing required key 'preset'")
+            if isinstance(preset, str):
+                if preset not in PRESETS:
+                    raise ValueError(
+                        f"Grid cell {i}: unknown preset {preset!r} "
+                        f"(known: {sorted(PRESETS)})"
+                    )
+            elif not isinstance(preset, ProtocolConfig):
+                raise ValueError(
+                    f"Grid cell {i}: preset must be a PRESETS name or a "
+                    f"ProtocolConfig, got {type(preset).__name__}"
+                )
+            nd = _cell_num_ds(c, default_rtt_ms)
+            if nd != self.num_ds:
+                raise ValueError(
+                    f"Grid cell {i}: num_ds={nd} (from "
+                    f"{'tau_true_us' if c.get('tau_true_us') is not None else 'rtt_ms'})"
+                    f" differs from cell 0's num_ds={self.num_ds} — "
+                    "heterogeneous grids must be split into separate sweeps"
+                )
+        if self.banks is not None:
+            if len(self.banks) != len(cells):
+                raise ValueError(
+                    f"Grid: {len(self.banks)} banks for {len(cells)} cells "
+                    "(need exactly one bank per cell)"
+                )
+            ref = _bank_shapes(self.banks[0])
+            for i, b in enumerate(self.banks):
+                if _bank_shapes(b) != ref:
+                    raise ValueError(
+                        f"Grid bank {i}: leaf shapes/dtypes differ from bank 0 "
+                        "(all per-cell banks must share one shape so they "
+                        "stack into a single batched sweep)"
+                    )
+
+    # ---- builders ---------------------------------------------------------
+
+    @staticmethod
+    def _axis_values(key: str, val) -> list:
+        """One axis -> list of per-cell values. Strings and scalars are a
+        single value; for the vector axes (rtt_ms, ...) a flat sequence of
+        numbers is ONE value, a sequence of sequences is a swept axis."""
+        if val is None:
+            return [None]
+        if isinstance(val, (str, ProtocolConfig)):
+            return [val]
+        if not isinstance(val, (list, tuple)):
+            return [val]  # scalar
+        if key in _VECTOR_AXES:
+            if len(val) > 0 and isinstance(val[0], (list, tuple)):
+                return list(val)
+            return [tuple(val)]
+        return list(val)
+
+    @classmethod
+    def cross(cls, *, banks=None, default_rtt_ms=None, **axes) -> "Grid":
+        """Cross product of every axis, in the given key order (later axes
+        vary fastest): ``Grid.cross(preset=("ssp", "geotp"), seed=(0, 1))``
+        yields ssp/0, ssp/1, geotp/0, geotp/1."""
+        keys = list(axes)
+        lists = [cls._axis_values(k, axes[k]) for k in keys]
+        cells = [
+            {k: v for k, v in zip(keys, combo) if v is not None}
+            for combo in itertools.product(*lists)
+        ]
+        return cls(cells, banks=banks, default_rtt_ms=default_rtt_ms)
+
+    @classmethod
+    def zipped(cls, *, banks=None, default_rtt_ms=None, **axes) -> "Grid":
+        """Zip axes elementwise (all the same length): cell i takes value i
+        of every axis. Scalars broadcast to every cell."""
+        keys = list(axes)
+        lists = [cls._axis_values(k, axes[k]) for k in keys]
+        n = max((len(v) for v in lists), default=0)
+        for k, v in zip(keys, lists):
+            if len(v) not in (1, n):
+                raise ValueError(
+                    f"Grid.zipped: axis {k!r} has {len(v)} values, expected "
+                    f"1 or {n}"
+                )
+        lists = [v * n if len(v) == 1 else v for v in lists]
+        cells = [
+            {k: v[i] for k, v in zip(keys, lists) if v[i] is not None}
+            for i in range(n)
+        ]
+        return cls(cells, banks=banks, default_rtt_ms=default_rtt_ms)
+
+    def with_banks(self, banks) -> "Grid":
+        return Grid(self.cells, banks=banks, default_rtt_ms=self.default_rtt_ms)
+
+    # ---- views ------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    def __iter__(self):
+        return iter(self.cells)
+
+    def world(self, i: int) -> WorldSpec:
+        c = self.cells[i]
+        rtt = c.get("rtt_ms")
+        return make_world(
+            c["preset"],
+            rtt if rtt is not None else self.default_rtt_ms,
+            tau_true_us=c.get("tau_true_us"),
+            jitter_milli=c.get("jitter_milli", 30),
+            exec_scale_milli=c.get("exec_scale_milli"),
+            seed=c.get("seed", 0),
+        )
+
+    def worlds(self) -> WorldSpec:
+        """All cells stacked into one WorldSpec with a leading [B] axis."""
+        return stack_worlds([self.world(i) for i in range(len(self.cells))])
+
+    def bank_stack(self):
+        """Per-cell banks stacked along a leading [B] axis (banks required)."""
+        if self.banks is None:
+            raise ValueError("Grid has no per-cell banks")
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *self.banks)
+
+    def labels(self, i: int) -> dict:
+        """Cell i's row labels: every non-vector cell key (preset included)."""
+        return _row_labels(self.cells[i])
+
+
+# ---------------------------------------------------------------------------
+# RunResult
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Structured output of `Simulator.run` / `Simulator.run_grid`.
+
+    `states` carries the full final engine state (batched over cells for grid
+    runs) — everything needed to resume, slice histograms or extract custom
+    telemetry; `metrics` is one `summarize` dict per cell.
+    """
+
+    cfg: SimConfig
+    states: Any  # SimState, leaves [B, ...] when batched
+    metrics: list
+    cells: list  # one label dict per cell ([] -> [{}] for single runs)
+    strategy: str  # as requested ("auto" preserved — recorded in .save)
+    wall_s: float  # device-call wall time (includes compile on cold cache)
+    bank: Any = None
+    bank_batched: bool = False
+    batched: bool = True
+
+    # ---- accessors --------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.metrics)
+
+    @property
+    def events(self) -> int:
+        return sum(m["events"] for m in self.metrics)
+
+    @property
+    def drain(self) -> dict:
+        """Windowed-drain telemetry aggregated over every cell."""
+        return drain_stats(self.states)
+
+    def world(self, i: int):
+        """Final SimState of cell i."""
+        if not self.batched:
+            if i != 0:
+                raise IndexError(f"single-world result has no cell {i}")
+            return self.states
+        return world_index(self.states, i)
+
+    def rows(self) -> list:
+        """One dict per cell: the cell's labels merged with its metrics
+        (vector-valued axes dropped — they don't tabulate)."""
+        return [
+            {**_row_labels(cell), **m}
+            for cell, m in zip(self.cells, self.metrics)
+        ]
+
+    def with_states(self, states) -> "RunResult":
+        """Copy with substituted states (e.g. after editing `tau_true` for an
+        online-reconfiguration segment, before `Simulator.resume`)."""
+        return dataclasses.replace(self, states=states)
+
+    def save(self, tag: str, path=None) -> dict:
+        """Record this run under ``sweeps.<tag>`` in the bench JSON.
+
+        Writes the exact legacy schema (worlds/terminals/events/wall_s/
+        events_per_sec/strategy/horizon_s + drain telemetry) so stored
+        baselines and the smoke-guard comparisons keep working, plus the jax
+        runtime environment keys.
+        """
+        d = self.drain
+        entry = {
+            "worlds": len(self.metrics),
+            "terminals": self.cfg.terminals,
+            "events": self.events,
+            "wall_s": round(self.wall_s, 2),
+            "events_per_sec": round(self.events / max(self.wall_s, 1e-9), 1),
+            "strategy": self.strategy,
+            "horizon_s": self.cfg.horizon_us / 1e6,
+            "drain_hit_rate": d["drain_hit_rate"],
+            "mean_window_len": d["mean_window_len"],
+            "loop_iters": d["loop_iters"],
+        }
+        return record_bench(tag, entry, path)
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+
+class Simulator:
+    """Facade over the compiled engine, fixed to one set of static shapes.
+
+    Shapes + horizon live in `self.cfg` (the jit compile key, protocol
+    excluded); per-run dynamics (preset knobs, latency matrices, jitter,
+    seeds) arrive as `WorldSpec`s / `Grid`s. The run callables
+    (`batch._sim_world_fresh` / `_sim_batch_fresh` / `_run_batch` / `_run_jit`)
+    are jitted with `cfg` and the strategy as static arguments, so every call
+    is compile-cached per (shape-key, strategy) process-wide: two Simulators
+    with equal shapes share one compilation, and a preset×latency×seed grid
+    compiles once per shape, not once per cell.
+    """
+
+    def __init__(
+        self,
+        terminals: int,
+        max_ops: int,
+        num_ds: int,
+        bank_txns: int,
+        *,
+        proto="geotp",
+        horizon_s: float = 10.0,
+        warmup_s: float = 2.0,
+        drain: bool = True,
+        track_slots: bool = False,
+        hot_capacity: int = 1024,
+    ):
+        if isinstance(proto, str):
+            proto = PRESETS[proto]
+        self.cfg = SimConfig(
+            terminals=terminals,
+            max_ops=max_ops,
+            num_ds=num_ds,
+            bank_txns=bank_txns,
+            proto=proto,
+            hot_capacity=hot_capacity,
+            warmup_us=int(warmup_s * 1e6),
+            horizon_us=int(horizon_s * 1e6),
+            drain=drain,
+            track_slots=track_slots,
+        )
+
+    @classmethod
+    def from_bank(cls, bank, terminals: int | None = None, **kw) -> "Simulator":
+        """Infer shapes from a Bank: key is [T, N, K], num_ds from the Bank."""
+        T, N, K = bank.key.shape
+        return cls(terminals or T, K, bank.num_ds, N, **kw)
+
+    # ---- internals --------------------------------------------------------
+
+    def _check_bank(self, bank, batched: bool) -> None:
+        shape = bank.key.shape[1:] if batched else bank.key.shape
+        want = (self.cfg.terminals, self.cfg.bank_txns, self.cfg.max_ops)
+        if tuple(shape) != want:
+            raise ValueError(
+                f"bank.key shape {tuple(shape)} != (terminals, bank_txns, "
+                f"max_ops) = {want} of this Simulator"
+            )
+        # num_ds is a python int on a plain Bank but a stacked [B] array on a
+        # per-cell bank batch — compare elementwise either way
+        nd = jnp.asarray(bank.num_ds)
+        if not bool(jnp.all(nd == self.cfg.num_ds)):
+            raise ValueError(
+                f"bank.num_ds={bank.num_ds} != Simulator num_ds={self.cfg.num_ds}"
+            )
+
+    # ---- entry points -----------------------------------------------------
+
+    def run(self, world: WorldSpec, bank, *, labels: dict | None = None) -> RunResult:
+        """Run ONE world (fused init+run, the scalar map-style path)."""
+        self._check_bank(bank, batched=False)
+        t0 = time.time()
+        states = _sim_world_fresh(self.cfg, bank, world)
+        states = jax.block_until_ready(states)
+        wall = time.time() - t0
+        m = summarize(self.cfg, states)
+        assert m["noops"] == 0, ("noop event fired", m["noops"])
+        return RunResult(
+            cfg=self.cfg,
+            states=states,
+            metrics=[m],
+            cells=[dict(labels or {})],
+            strategy="map",
+            wall_s=wall,
+            bank=bank,
+            bank_batched=False,
+            batched=False,
+        )
+
+    def run_grid(self, grid: Grid, bank=None, *, strategy: str = "auto") -> RunResult:
+        """Run every cell of a Grid as ONE batched device call.
+
+        `bank` is shared by every cell unless the Grid carries per-cell banks.
+        Bitwise-identical to per-cell `run` for both strategies (asserted in
+        tests/core/test_api.py).
+        """
+        if grid.num_ds != self.cfg.num_ds:
+            raise ValueError(
+                f"grid num_ds={grid.num_ds} != Simulator num_ds={self.cfg.num_ds}"
+            )
+        if grid.banks is not None:
+            bank = grid.bank_stack()
+            bank_batched = True
+        elif bank is None:
+            raise ValueError("run_grid needs a shared bank or a Grid with banks")
+        else:
+            bank_batched = False
+        self._check_bank(bank, batched=bank_batched)
+        worlds = grid.worlds()
+        t0 = time.time()
+        states, metrics = simulate_batch(
+            self.cfg, bank, worlds, bank_batched=bank_batched, strategy=strategy
+        )
+        wall = time.time() - t0
+        for i, m in enumerate(metrics):
+            assert m["noops"] == 0, (f"grid cell {i}", grid.cells[i], m["noops"])
+        return RunResult(
+            cfg=self.cfg,
+            states=states,
+            metrics=metrics,
+            cells=[dict(c) for c in grid.cells],
+            strategy=strategy,
+            wall_s=wall,
+            bank=bank,
+            bank_batched=bank_batched,
+            batched=True,
+        )
+
+    def resume(
+        self,
+        result: RunResult,
+        *,
+        horizon_s: float | None = None,
+        warmup_s: float | None = None,
+        strategy: str | None = None,
+    ) -> RunResult:
+        """Continue a finished run's states (batched continuations donate the
+        state buffers — `result.states` must not be reused afterwards).
+
+        `horizon_s` extends the absolute horizon (a continuation with the old
+        horizon is a no-op: every pending event already lies beyond it);
+        `warmup_s` re-gates the metric warmup for the continued span.
+        """
+        cfg = result.cfg
+        # round, don't truncate: horizon_s often arrives as now/1e6 + delta,
+        # and float error would otherwise clip the boundary microsecond
+        if horizon_s is not None:
+            cfg = dataclasses.replace(cfg, horizon_us=round(horizon_s * 1e6))
+        if warmup_s is not None:
+            cfg = dataclasses.replace(cfg, warmup_us=round(warmup_s * 1e6))
+        strategy = strategy if strategy is not None else result.strategy
+        t0 = time.time()
+        if result.batched:
+            states, metrics = simulate_batch(
+                cfg,
+                result.bank,
+                None,  # worlds unused on the continuation path
+                bank_batched=result.bank_batched,
+                states=result.states,
+                strategy=strategy,
+            )
+        else:
+            states = _run_jit(cfg, result.bank, result.states)
+            states = jax.block_until_ready(states)
+            metrics = [summarize(cfg, states)]
+        wall = time.time() - t0
+        return RunResult(
+            cfg=cfg,
+            states=states,
+            metrics=metrics,
+            cells=result.cells,
+            strategy=strategy,
+            wall_s=wall,
+            bank=result.bank,
+            bank_batched=result.bank_batched,
+            batched=result.batched,
+        )

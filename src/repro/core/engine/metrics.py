@@ -1,0 +1,93 @@
+"""Host-side metric extraction: summaries, drain telemetry, CDFs."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.engine.state import HIST_BINS, _HIST_BASE_US, SimConfig, SimState
+
+def world_index(states: SimState, i: int) -> SimState:
+    """Slice world i out of a batched final state."""
+    return jax.tree_util.tree_map(lambda x: x[i], states)
+
+
+def summarize_batch(cfg: SimConfig, states: SimState) -> list:
+    """Host-side metric extraction for a batched final state."""
+    B = int(states.now.shape[0])
+    host = jax.tree_util.tree_map(np.asarray, states)
+    return [summarize(cfg, world_index(host, i)) for i in range(B)]
+
+
+def summarize(cfg: SimConfig, s: SimState) -> dict:
+    """Host-side metric extraction."""
+    span_s = max((cfg.horizon_us - cfg.warmup_us) / 1e6, 1e-9)
+    commits = int(s.commits)
+    aborts = int(s.aborts)
+    hist = np.asarray(s.hist_all)
+    lat_p = _percentiles(hist, (0.5, 0.99, 0.999))
+    cen = _percentiles(np.asarray(s.hist_cen), (0.5, 0.99))
+    dst = _percentiles(np.asarray(s.hist_dist), (0.5, 0.99))
+    return {
+        "throughput_tps": commits / span_s,
+        "commits": commits,
+        "aborts": aborts,
+        "abort_rate": aborts / max(commits + aborts, 1),
+        "avg_latency_ms": int(s.lat_sum) / max(commits, 1),
+        "avg_latency_dist_ms": int(s.lat_sum_dist) / max(int(s.commits_dist), 1),
+        "p50_ms": lat_p[0],
+        "p99_ms": lat_p[1],
+        "p999_ms": lat_p[2],
+        "p50_centralized_ms": cen[0],
+        "p99_centralized_ms": cen[1],
+        "p50_distributed_ms": dst[0],
+        "p99_distributed_ms": dst[1],
+        "avg_lcs_ms": int(s.lcs_sum) / max(int(s.lcs_cnt), 1),
+        "noops": int(s.noops),
+        "events": int(s.iters),
+        "sim_end_s": float(s.now) / 1e6,
+    }
+
+
+def drain_stats(state: SimState) -> dict:
+    """Windowed-drain telemetry for a final state (single or batched).
+
+    Deliberately NOT part of `summarize`: the metric dicts there are part of
+    the bitwise drain-vs-sequential contract, while the hit rate by
+    construction differs between the two paths.
+
+    `loop_iters` is the actual `lax.while_loop` trip count: sequential events
+    take one iteration each, a whole window takes one iteration.
+    """
+    events = int(np.sum(np.asarray(state.iters)))
+    drained = int(np.sum(np.asarray(state.drained)))
+    windows = int(np.sum(np.asarray(state.windows)))
+    return {
+        "events": events,
+        "drained_events": drained,
+        "seq_events": events - drained,
+        "drain_hit_rate": round(drained / max(events, 1), 4),
+        "windows": windows,
+        "mean_window_len": round(drained / max(windows, 1), 2),
+        "loop_iters": (events - drained) + windows,
+    }
+
+
+def _percentiles(hist: np.ndarray, qs) -> list:
+    total = hist.sum()
+    out = []
+    if total == 0:
+        return [float("nan")] * len(qs)
+    cum = np.cumsum(hist)
+    for q in qs:
+        b = int(np.searchsorted(cum, q * total))
+        b = min(b, HIST_BINS - 1)
+        out.append(_HIST_BASE_US * (2.0 ** ((b + 0.5) / 8.0)) / 1000.0)  # ms
+    return out
+
+
+def latency_cdf(hist: np.ndarray):
+    """Returns (latency_ms[bins], cdf[bins]) for CDF plots (Fig 8)."""
+    edges = _HIST_BASE_US * (2.0 ** ((np.arange(HIST_BINS) + 1) / 8.0)) / 1000.0
+    total = max(hist.sum(), 1)
+    return edges, np.cumsum(hist) / total

@@ -1,0 +1,429 @@
+"""Static shapes, state containers and shared scalar helpers.
+
+The data layer of the engine package: event/op/subtxn/terminal state
+constants, the dynamic protocol knobs (`DynProto`), the per-cell sweep input
+(`WorldSpec`), the static compile key (`SimConfig`), the full carried state
+(`SimState`) and its initializers, plus the small pure helpers (delays,
+salts, histogram bins, the concatenated event-time view) every step mode
+shares. Nothing here dispatches events — see `handlers`/`step`/`omni`/
+`window` for the step modes and `batch` for the run/sweep entry points.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hotspot as hs_mod
+from repro.core.netmodel import (
+    INF_US,
+    PAPER_RTT_MS,
+    _hash_u32,
+    derive_tau_ds_us,
+    make_net_params,
+)
+from repro.core.protocol import PRESETS, PREPARE_DECENTRAL, ProtocolConfig
+
+# ---- op states -------------------------------------------------------------
+OP_NONE, OP_PENDING, OP_ENROUTE, OP_QUEUED, OP_WAIT, OP_EXEC, OP_HOLD, OP_DONE = range(8)
+
+# ---- subtxn states ---------------------------------------------------------
+(
+    SUB_NONE,
+    SUB_SCHED,
+    SUB_RUN,
+    SUB_ROUND_REPLY,
+    SUB_ROUND_AT_DM,
+    SUB_WAIT_ROUND,
+    SUB_CHILLER_WAIT,
+    SUB_PREP_CMD,
+    SUB_PREPARING,
+    SUB_VOTE,
+    SUB_VOTED,
+    SUB_COMMIT_CMD,
+    SUB_ACK,
+    SUB_LOCAL_COMMIT,
+    SUB_DONE,
+    SUB_ABORT_PEER,
+    SUB_ABORT_ACK,
+    SUB_ABORTED,
+) = range(18)
+
+# ---- terminal phases -------------------------------------------------------
+T_IDLE, T_ACTIVE, T_COMMIT_LOG, T_COMMIT_WAIT, T_ABORT_WAIT = range(5)
+
+# ---- lock modes ------------------------------------------------------------
+LK_FREE, LK_SHARED, LK_X = 0, 1, 2
+
+HIST_BINS = 128
+_HIST_BASE_US = 100.0  # bin 0 at 100 µs, 8 bins per octave
+
+_SALT_MUL = jnp.int32(2654435761 % (2**31))
+
+
+class DynProto(NamedTuple):
+    """Dynamic (traced) protocol knobs.
+
+    Every `ProtocolConfig` field the event handlers consult lives here as a
+    scalar array rather than being baked into the compiled program: one
+    compiled engine serves all presets, and a leading batch axis turns the
+    engine into a multi-protocol sweep under `jax.vmap`.
+    """
+
+    prepare: jax.Array  # i32: PREPARE_COORD / PREPARE_DECENTRAL / PREPARE_NONE
+    stagger: jax.Array  # i32: STAGGER_NONE / STAGGER_NET / STAGGER_NET_LEL
+    admission: jax.Array  # bool (O3)
+    early_abort: jax.Array  # bool (O1 geo-agent peer abort)
+    chiller_two_stage: jax.Array  # bool
+    middleware_cc: jax.Array  # bool (ScalarDB-style per-op WAN RTT)
+    async_local_commit: jax.Array  # bool (YUGA)
+    max_blocked: jax.Array  # i32
+    admission_backoff_us: jax.Array  # i32
+    block_prob_cap: jax.Array  # f32
+    lock_timeout_us: jax.Array  # i32
+    exec_us: jax.Array  # i32
+    log_flush_us: jax.Array  # i32
+    lan_rtt_us: jax.Array  # i32
+    retry_backoff_us: jax.Array  # i32
+    max_retries: jax.Array  # i32
+
+
+def dyn_from_proto(p: ProtocolConfig) -> DynProto:
+    i32 = jnp.int32
+    return DynProto(
+        prepare=i32(p.prepare),
+        stagger=i32(p.stagger),
+        admission=jnp.asarray(p.admission),
+        early_abort=jnp.asarray(p.early_abort),
+        chiller_two_stage=jnp.asarray(p.chiller_two_stage),
+        middleware_cc=jnp.asarray(p.middleware_cc),
+        async_local_commit=jnp.asarray(p.async_local_commit),
+        max_blocked=i32(p.max_blocked),
+        admission_backoff_us=i32(p.admission_backoff_us),
+        block_prob_cap=jnp.float32(p.block_prob_cap),
+        lock_timeout_us=i32(p.lock_timeout_us),
+        exec_us=i32(p.exec_us),
+        log_flush_us=i32(p.log_flush_us),
+        lan_rtt_us=i32(p.lan_rtt_us),
+        retry_backoff_us=i32(p.retry_backoff_us),
+        max_retries=i32(p.max_retries),
+    )
+
+
+class WorldSpec(NamedTuple):
+    """One cell of an evaluation grid: every per-run dynamic input.
+
+    Unbatched leaves describe a single world; `stack_worlds` adds a leading
+    batch axis for `simulate_batch`. `seed` is an informational tag carried
+    through sweeps (the engine itself is deterministic; workload randomness
+    lives in the Bank, whose leaves may also be batched).
+    """
+
+    tau_true: jax.Array  # [D] DM<->DS RTT µs
+    tau_ds: jax.Array  # [D,D] geo-agent mesh RTT µs
+    jitter_milli: jax.Array  # scalar
+    exec_scale_milli: jax.Array  # [D] heterogeneous engine profile
+    lel_scale_milli: jax.Array  # scalar (§IV-C forecast scaling)
+    dyn: DynProto
+    seed: jax.Array  # scalar tag
+
+
+def make_world(
+    proto,
+    rtt_ms=None,
+    *,
+    tau_true_us=None,
+    tau_ds_us=None,
+    jitter_milli: int = 0,
+    exec_scale_milli=None,
+    seed: int = 0,
+) -> WorldSpec:
+    """Build a WorldSpec from a preset name / ProtocolConfig + RTT vector."""
+    if isinstance(proto, str):
+        proto = PRESETS[proto]
+    if tau_true_us is None:
+        net = make_net_params(rtt_ms if rtt_ms is not None else PAPER_RTT_MS)
+        tau_true_us = net.tau_dm
+    tau_true = jnp.asarray(tau_true_us, jnp.int32)
+    if tau_ds_us is None:
+        # geo-agent mesh always derived from tau_true itself, so
+        # caller-supplied tau_true_us stays consistent with the mesh
+        tau_ds_us = derive_tau_ds_us(tau_true)
+    if exec_scale_milli is None:
+        exec_scale_milli = jnp.full(tau_true.shape, 1000, jnp.int32)
+    return WorldSpec(
+        tau_true=tau_true,
+        tau_ds=jnp.asarray(tau_ds_us, jnp.int32),
+        jitter_milli=jnp.int32(jitter_milli),
+        exec_scale_milli=jnp.asarray(exec_scale_milli, jnp.int32),
+        lel_scale_milli=jnp.int32(proto.lel_scale_milli),
+        dyn=dyn_from_proto(proto),
+        seed=jnp.int32(seed),
+    )
+
+
+def stack_worlds(worlds) -> WorldSpec:
+    """[W_1..W_B] -> WorldSpec with a leading batch axis on every leaf."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *worlds)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static engine configuration (shapes + defaults).
+
+    `proto` is excluded from the jit compile key (`compare=False`): the
+    handlers read every protocol knob dynamically from `SimState.dyn`, so two
+    configs differing only in `proto` share one compiled program. `proto` is
+    only consulted host-side by `init_state` to populate the default knobs.
+    """
+
+    terminals: int
+    max_ops: int
+    num_ds: int
+    bank_txns: int
+    proto: ProtocolConfig = dataclasses.field(compare=False)
+    # hot-record table slots (paper: bounded AVL+LRU cache). Sized to the hot
+    # set, not the keyspace: preset throughputs are unchanged vs 8x this, and
+    # the table is the largest leaf in the lockstep while-carry (vmapped
+    # while_loops select the full state every iteration) — 8192 slots made
+    # the vmap strategy 3x slower for no forecast-quality gain.
+    hot_capacity: int = 1024
+    warmup_us: int = 2_000_000
+    horizon_us: int = 12_000_000
+    max_events: int = 4_000_000
+    alpha_milli: int = 800  # Eq.(4) EWMA α
+    beta_milli: int = 875  # network-latency EWMA (the paper's monitor)
+    drain: bool = True  # windowed conflict-free draining (False = seed path)
+    # branchless omnibus step (lockstep lanes): every handler is a masked
+    # delta in ONE straight-line pass — no lax.switch/cond, which under vmap
+    # execute every branch and pay a full-state select per branch. Combined
+    # with `drain` the lockstep path runs `_omni_window` (branchless windowed
+    # drain). Bitwise-identical to the other step modes either way.
+    lockstep: bool = False
+    # per-bank-slot commit/abort/latency telemetry ([T, N] x3). Nothing in
+    # summarize/figures reads it, and it would dominate the lockstep
+    # while-carry — opt-in (tests use it to widen the bitwise fingerprint).
+    track_slots: bool = False
+
+
+class SimState(NamedTuple):
+    now: jax.Array
+    iters: jax.Array
+    # terminal
+    phase: jax.Array  # [T] i8
+    cur: jax.Array  # [T] i32 bank slot
+    txn_ctr: jax.Array  # [T] i32
+    retries: jax.Array  # [T] i32
+    blocked: jax.Array  # [T] i32
+    retry_same: jax.Array  # [T] bool
+    term_time: jax.Array  # [T] i32
+    arrive: jax.Array  # [T] i32
+    is_dist: jax.Array  # [T] bool
+    cur_round: jax.Array  # [T] i8
+    # ops
+    op_state: jax.Array  # [T,K] i8
+    op_key: jax.Array  # [T,K] i32
+    op_write: jax.Array  # [T,K] bool
+    op_ds: jax.Array  # [T,K] i8
+    op_round: jax.Array  # [T,K] i8
+    op_time: jax.Array  # [T,K] i32
+    op_enq: jax.Array  # [T,K] i32
+    # subtxns
+    inv: jax.Array  # [T,D] bool
+    sub_state: jax.Array  # [T,D] i8
+    sub_time: jax.Array  # [T,D] i32
+    sub_arrive: jax.Array  # [T,D] i32
+    sub_lel: jax.Array  # [T,D] i32
+    first_lock: jax.Array  # [T,D] i32
+    rd_done: jax.Array  # [T,D] bool
+    # hot-record footprint: fixed-capacity hash table [C+1] (+1 = scratch row).
+    # (2PL lock state needs no table: it is derived exactly from the op arrays,
+    #  since every held/waited lock belongs to exactly one in-flight op.)
+    hs: hs_mod.HashHotspot
+    # network (dynamic)
+    tau_true: jax.Array  # [D] i32
+    tau_est: jax.Array  # [D] i32
+    tau_ds: jax.Array  # [D,D] i32
+    jitter_milli: jax.Array  # i32
+    exec_scale_milli: jax.Array  # [D] i32 heterogeneous engine profile
+    lel_scale_milli: jax.Array  # i32 (§IV-C forecast scaling)
+    # metrics
+    commits: jax.Array
+    aborts: jax.Array
+    commits_dist: jax.Array
+    aborts_dist: jax.Array
+    lat_sum: jax.Array  # i32, milliseconds
+    lat_sum_dist: jax.Array
+    hist_all: jax.Array  # [HIST_BINS] i32
+    hist_cen: jax.Array
+    hist_dist: jax.Array
+    lcs_sum: jax.Array  # i32, milliseconds
+    lcs_cnt: jax.Array
+    noops: jax.Array  # i32 — must stay 0 (state-machine invariant)
+    drained: jax.Array  # i32 — events applied via the windowed masked pass
+    windows: jax.Array  # i32 — masked window applications (mean len = drained/windows)
+    slot_commits: jax.Array  # [T,N] i32
+    slot_aborts: jax.Array  # [T,N] i32
+    slot_lat: jax.Array  # [T,N] i32 (sum of commit latencies, ms)
+    # dynamic protocol knobs (traced; see DynProto)
+    dyn: DynProto
+
+
+def init_state(
+    cfg: SimConfig,
+    tau_true_us,
+    tau_ds_us,
+    jitter_milli=0,
+    exec_scale_milli=None,
+    dyn: DynProto | None = None,
+    lel_scale_milli=None,
+) -> SimState:
+    T, K, D, N = (cfg.terminals, cfg.max_ops, cfg.num_ds, cfg.bank_txns)
+    i32 = jnp.int32
+    if exec_scale_milli is None:
+        exec_scale_milli = jnp.full((D,), 1000, i32)
+    if dyn is None:
+        dyn = dyn_from_proto(cfg.proto)
+    if lel_scale_milli is None:
+        lel_scale_milli = cfg.proto.lel_scale_milli
+    # ramp terminals in over 2ms to avoid a synchronized start
+    start = (jnp.arange(T, dtype=i32) * 2000) // max(T, 1)
+    return SimState(
+        now=i32(0),
+        iters=i32(0),
+        phase=jnp.zeros((T,), jnp.int8),
+        cur=jnp.zeros((T,), i32),
+        txn_ctr=jnp.zeros((T,), i32),
+        retries=jnp.zeros((T,), i32),
+        blocked=jnp.zeros((T,), i32),
+        retry_same=jnp.zeros((T,), bool),
+        term_time=start,
+        arrive=jnp.zeros((T,), i32),
+        is_dist=jnp.zeros((T,), bool),
+        cur_round=jnp.zeros((T,), jnp.int8),
+        op_state=jnp.zeros((T, K), jnp.int8),
+        op_key=jnp.zeros((T, K), i32),
+        op_write=jnp.zeros((T, K), bool),
+        op_ds=jnp.zeros((T, K), jnp.int8),
+        op_round=jnp.zeros((T, K), jnp.int8),
+        op_time=jnp.full((T, K), INF_US, i32),
+        op_enq=jnp.zeros((T, K), i32),
+        inv=jnp.zeros((T, D), bool),
+        sub_state=jnp.zeros((T, D), jnp.int8),
+        sub_time=jnp.full((T, D), INF_US, i32),
+        sub_arrive=jnp.zeros((T, D), i32),
+        sub_lel=jnp.zeros((T, D), i32),
+        first_lock=jnp.full((T, D), INF_US, i32),
+        rd_done=jnp.zeros((T, D), bool),
+        hs=hs_mod.hash_init(cfg.hot_capacity + 1),
+        tau_true=jnp.asarray(tau_true_us, i32),
+        tau_est=jnp.asarray(tau_true_us, i32),
+        tau_ds=jnp.asarray(tau_ds_us, i32),
+        jitter_milli=jnp.asarray(jitter_milli, i32),
+        exec_scale_milli=jnp.asarray(exec_scale_milli, i32),
+        lel_scale_milli=jnp.asarray(lel_scale_milli, i32),
+        commits=i32(0),
+        aborts=i32(0),
+        commits_dist=i32(0),
+        aborts_dist=i32(0),
+        lat_sum=i32(0),
+        lat_sum_dist=i32(0),
+        hist_all=jnp.zeros((HIST_BINS,), i32),
+        hist_cen=jnp.zeros((HIST_BINS,), i32),
+        hist_dist=jnp.zeros((HIST_BINS,), i32),
+        lcs_sum=i32(0),
+        lcs_cnt=i32(0),
+        noops=i32(0),
+        drained=i32(0),
+        windows=i32(0),
+        # untracked: a 1-slot stub (size-0 axes reject traced indices at
+        # trace time); mode="drop" discards every slot>0 write either way
+        slot_commits=jnp.zeros((T, N if cfg.track_slots else 1), i32),
+        slot_aborts=jnp.zeros((T, N if cfg.track_slots else 1), i32),
+        slot_lat=jnp.zeros((T, N if cfg.track_slots else 1), i32),
+        dyn=dyn,
+    )
+
+
+def init_state_world(cfg: SimConfig, world: WorldSpec) -> SimState:
+    """Initialize from a WorldSpec (vmap-compatible over a batch axis)."""
+    return init_state(
+        cfg,
+        world.tau_true,
+        world.tau_ds,
+        world.jitter_milli,
+        world.exec_scale_milli,
+        dyn=world.dyn,
+        lel_scale_milli=world.lel_scale_milli,
+    )
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+
+def _delay_salted(jitter_milli: jax.Array, rtt: jax.Array, salt: jax.Array) -> jax.Array:
+    """One-way delay = rtt/2 with deterministic ±jitter (elementwise over any
+    broadcastable rtt/salt shapes — shared by the sequential handlers and the
+    drain step so both paths use one formula)."""
+    half = rtt // 2
+    u = (_hash_u32(salt) % jnp.uint32(2001)).astype(jnp.int32) - 1000
+    return half + (half * jitter_milli // 1000) * u // 1000
+
+
+def _delay(s: SimState, rtt: jax.Array, salt: jax.Array) -> jax.Array:
+    return _delay_salted(s.jitter_milli, rtt, salt)
+
+
+def _salt(s: SimState, a: int) -> jax.Array:
+    return s.iters * _SALT_MUL + jnp.int32(a)
+
+
+def _exec_us(cfg: SimConfig, s: SimState, d: jax.Array) -> jax.Array:
+    """Per-op execution time at data source d (scalar or any index array);
+    ScalarDB-style middleware CC pays an extra DM round trip per statement."""
+    base = s.dyn.exec_us * s.exec_scale_milli[d] // 1000
+    return base + jnp.where(s.dyn.middleware_cc, s.tau_true[d], 0)
+
+
+def _round_done_transition(
+    dyn: DynProto, is_final, centralized, reply_t, prep_t, local_t
+):
+    """Subtxn state/time after its round's last statement finishes.
+
+    Elementwise over any broadcastable shapes — the sequential round_done
+    (scalars) and the drain step ([T,D]) share this selection, so the
+    drained path cannot drift from the single-event semantics.
+    """
+    dec = dyn.prepare == PREPARE_DECENTRAL
+    go_local = dec & dyn.async_local_commit & is_final & centralized
+    go_prep = dec & is_final & ~centralized
+    new_state = jnp.where(
+        go_local, SUB_LOCAL_COMMIT, jnp.where(go_prep, SUB_PREPARING, SUB_ROUND_REPLY)
+    )
+    new_time = jnp.where(go_local, local_t, jnp.where(go_prep, prep_t, reply_t))
+    return new_state, new_time
+
+
+def _u01(salt: jax.Array) -> jax.Array:
+    return _hash_u32(salt).astype(jnp.float32) / jnp.float32(2**32)
+
+
+def _hist_bin(lat_us: jax.Array) -> jax.Array:
+    l2 = jnp.log2(jnp.maximum(lat_us.astype(jnp.float32), 1.0) / _HIST_BASE_US)
+    return jnp.clip((l2 * 8.0).astype(jnp.int32), 0, HIST_BINS - 1)
+
+
+def _measuring(cfg: SimConfig, s: SimState) -> jax.Array:
+    return s.now >= jnp.int32(cfg.warmup_us)
+
+
+def _times_flat(s: SimState) -> jax.Array:
+    """Concatenated [T + T*D + T*K] event-time view (term | sub | op)."""
+    return jnp.concatenate(
+        [s.term_time, s.sub_time.reshape(-1), s.op_time.reshape(-1)]
+    )

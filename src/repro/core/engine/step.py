@@ -1,0 +1,69 @@
+"""Seed-reference step mode: single earliest event through a 12-way switch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.workloads import Bank
+
+from repro.core.engine.handlers import (
+    _SUB_HANDLER,
+    _OP_HANDLER,
+    _TERM_HANDLER,
+    _h_start_txn,
+    _h_send_commits,
+    _h_op_arrive,
+    _h_op_timeout,
+    _h_op_exec_done,
+    _h_sub_dispatch,
+    _h_dm_round_in,
+    _h_ds_prep_cmd,
+    _h_ds_prepared,
+    _h_ds_finish,
+    _h_dm_fin,
+    _h_noop,
+)
+from repro.core.engine.state import SimConfig, SimState, _times_flat
+
+def _step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
+    """Process the single earliest event (one fused argmin over all queues).
+
+    The concatenated view orders terminal < subtxn < op events, and flat
+    argmin picks the first occurrence — the exact tie-break order of the
+    original three-scan picker, at a third of the reduction cost.
+    """
+    T, D, K = cfg.terminals, cfg.num_ds, cfg.max_ops
+    flat = _times_flat(s)
+    i = jnp.argmin(flat).astype(jnp.int32)
+    t_now = flat[i]
+    is_term = i < T
+    is_sub = ~is_term & (i < T + T * D)
+    j_sub = i - T
+    j_op = i - T - T * D
+    t = jnp.where(is_term, i, jnp.where(is_sub, j_sub // D, j_op // K))
+    idx = jnp.where(is_sub, j_sub % D, jnp.where(is_term, 0, j_op % K))
+
+    sub_h = jnp.asarray(_SUB_HANDLER)[s.sub_state[t, jnp.minimum(idx, D - 1)]]
+    op_h = jnp.asarray(_OP_HANDLER)[s.op_state[t, jnp.minimum(idx, K - 1)]]
+    term_h = jnp.asarray(_TERM_HANDLER)[jnp.minimum(s.phase[t], 4)]
+    hid = jnp.where(is_term, term_h, jnp.where(is_sub, sub_h, op_h))
+
+    s = s._replace(now=t_now, iters=s.iters + 1)
+
+    handlers = [
+        _h_start_txn,
+        _h_send_commits,
+        _h_op_arrive,
+        _h_op_timeout,
+        _h_op_exec_done,
+        _h_sub_dispatch,
+        _h_dm_round_in,
+        _h_ds_prep_cmd,
+        _h_ds_prepared,
+        _h_ds_finish,
+        _h_dm_fin,
+        _h_noop,
+    ]
+    branches = [lambda ss, tt, ii, h=h: h(cfg, bank, ss, tt, ii) for h in handlers]
+    return jax.lax.switch(hid, branches, s, t, idx)

@@ -1,0 +1,626 @@
+"""Windowed conflict-free drain: batch the maximal prefix of the event order.
+
+`_window_plan` ranks the concatenated event-time view into the exact
+sequential processing order and finds the longest conflict-free prefix;
+`_drain_step` (map lanes, cond-gated) and `_omni_window` (lockstep lanes,
+branchless select against `omni._omni_step`) apply it in one masked pass,
+bitwise-identical to single-event stepping.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hotspot as hs_mod
+from repro.core import scheduler as sched
+from repro.core.netmodel import INF_US, ewma_update_where
+from repro.core.protocol import (
+    PREPARE_COORD,
+    PREPARE_DECENTRAL,
+    PREPARE_NONE,
+)
+from repro.core.workloads import Bank
+
+from repro.core.engine.state import (
+    OP_NONE,
+    OP_PENDING,
+    OP_ENROUTE,
+    OP_QUEUED,
+    OP_WAIT,
+    OP_EXEC,
+    OP_HOLD,
+    OP_DONE,
+    SUB_NONE,
+    SUB_SCHED,
+    SUB_RUN,
+    SUB_ROUND_REPLY,
+    SUB_ROUND_AT_DM,
+    SUB_WAIT_ROUND,
+    SUB_CHILLER_WAIT,
+    SUB_PREP_CMD,
+    SUB_PREPARING,
+    SUB_VOTE,
+    SUB_VOTED,
+    SUB_COMMIT_CMD,
+    SUB_ACK,
+    SUB_LOCAL_COMMIT,
+    SUB_DONE,
+    SUB_ABORT_PEER,
+    SUB_ABORT_ACK,
+    SUB_ABORTED,
+    T_ABORT_WAIT,
+    T_COMMIT_LOG,
+    T_COMMIT_WAIT,
+    _SALT_MUL,
+    SimConfig,
+    SimState,
+    _delay_salted,
+    _exec_us,
+    _round_done_transition,
+    _times_flat,
+)
+from repro.core.engine.omni import _omni_step
+from repro.core.engine.step import _step
+
+def _window_plan(cfg: SimConfig, bank: Bank, s: SimState):
+    """Plan the maximal conflict-free *prefix* (window) of the global event
+    order — the generalization of the tie-only drain to events at distinct
+    timestamps.
+
+    Per-event timestamps are the event queues themselves; ranking the
+    concatenated [T + T*D + T*K] time view with one stable sort reproduces the
+    sequential processing order exactly (time, then flat-index tie-break).
+    A prefix scan then finds the longest prefix such that
+
+      * every event belongs to a drainable category — txn starts, lock-wait
+        timeouts, round advances, chiller stage-2 re-dispatches, releases with
+        queued waiters and txn-completing acks stop the window (their
+        earliest-scheduled-time is pinned to 0);
+      * no event schedules a new event at or before the window's last
+        timestamp (running min of per-event earliest-scheduled-times must stay
+        strictly above the sorted times);
+      * no two window events interact — order-aware pairwise conflicts mark
+        the *later* event of each conflicting pair, so the window stops
+        exactly at the first conflicting event: duplicate lock keys across
+        arrivals / chain targets / released footprints, a second DM fan-in on
+        one terminal or one data source (EWMA updates once per DS), a DM
+        fan-in or commit-log flush sharing its terminal with any other event,
+        a release sharing its (terminal, DS) with an op event.
+
+    Every windowed event keeps the iteration number (hash salt) and timestamp
+    it would have had sequentially, so applying the whole window in one
+    masked pass is bitwise-identical to single-event stepping.
+
+    Returns ``(use, apply)``: `use` is "the window holds >= 2 events" and
+    `apply(s)` materializes the post-window state.
+    """
+    T, D, K = cfg.terminals, cfg.num_ds, cfg.max_ops
+    M = T + T * D + T * K
+    i32 = jnp.int32
+    BIG = jnp.int32(M)
+    st = s.op_state
+    sst = s.sub_state
+    inv = s.inv
+    evt_term = s.term_time
+    evt_sub = s.sub_time
+    evt_op = s.op_time
+    flat = _times_flat(s)
+
+    # ---- sequential ranks of the flat time view ----------------------------
+    # pos[e] = #events lexicographically before e by (time, flat index) — the
+    # exact sequential processing order. Two bitwise-identical routes: the
+    # scalar (map) path uses one stable argsort; the lockstep path counts with
+    # an M x M comparison matrix, because batched sorts under vmap lower to
+    # pathologically slow per-lane comparator loops on CPU while the matrix
+    # is pure elementwise work shared across lanes.
+    if cfg.lockstep:
+        idx_m = jnp.arange(M, dtype=i32)
+        lex_lt = (flat[None, :] < flat[:, None]) | (
+            (flat[None, :] == flat[:, None]) & (idx_m[None, :] < idx_m[:, None])
+        )  # [M,M]: lex_lt[e, e'] <=> e' processed before e
+        pos = jnp.sum(lex_lt, axis=1, dtype=i32)
+    else:
+        order = jnp.argsort(flat, stable=True)
+        pos = jnp.zeros((M,), i32).at[order].set(jnp.arange(M, dtype=i32))
+    pos_term = pos[:T]
+    pos_sub = pos[T : T + T * D].reshape(T, D)
+    pos_op = pos[T + T * D :].reshape(T, K)
+    iters_term = s.iters + 1 + pos_term
+    iters_sub = s.iters + 1 + pos_sub
+    iters_op = s.iters + 1 + pos_op
+
+    # ---- per-slot event categories (what each slot would fire as) ---------
+    cat_log = s.phase == T_COMMIT_LOG
+    cat_sched = sst == SUB_SCHED
+    cat_reply = sst == SUB_ROUND_REPLY
+    cat_vote = sst == SUB_VOTE
+    cat_prog = cat_reply | cat_vote
+    cat_prep = sst == SUB_PREP_CMD
+    cat_preparing = sst == SUB_PREPARING
+    cat_commit = (sst == SUB_COMMIT_CMD) | (sst == SUB_LOCAL_COMMIT)
+    cat_abort_peer = sst == SUB_ABORT_PEER
+    cat_ack = sst == SUB_ACK
+    cat_abort_ack = sst == SUB_ABORT_ACK
+    dm_cat = cat_prog | cat_ack | cat_abort_ack
+    f_cat = cat_commit | cat_abort_peer
+    cat_arr = st == OP_ENROUTE
+    cat_exec = st == OP_EXEC
+
+    d_of = s.op_ds.astype(i32)
+    oh_d = jax.nn.one_hot(d_of, D, dtype=bool)  # [T,K,D]
+    opn = st != OP_NONE
+    tau_row = s.tau_true[None, :]  # [1,D]
+    d_ids = jnp.arange(D, dtype=i32)
+    kk = jnp.arange(K, dtype=i32)
+
+    # ---- op events: batched lock decisions (pre-state views are exact: the
+    # window never batches two events touching one key, and an EXEC->HOLD
+    # transition keeps holder status) ---------------------------------------
+    fk = s.op_key.reshape(-1)
+    fw = s.op_write.reshape(-1)
+    fst = st.reshape(-1)
+    holder = (fst == OP_EXEC) | (fst == OP_HOLD)
+    waiting = fst == OP_WAIT
+    eq_key = fk[:, None] == fk[None, :]  # [T*K, T*K]
+    x_held = jnp.any(eq_key & (holder & fw)[None, :], axis=1).reshape(T, K)
+    s_held = jnp.any(eq_key & (holder & ~fw)[None, :], axis=1).reshape(T, K)
+    waiter = jnp.any(eq_key & waiting[None, :], axis=1).reshape(T, K)
+    ok = jnp.where(s.op_write, ~x_held & ~s_held, ~x_held) & ~waiter  # [T,K]
+
+    exec_t = evt_op + _exec_us(cfg, s, d_of)  # [T,K] per-event time basis
+    to_t = evt_op + s.dyn.lock_timeout_us
+    arr_state = jnp.where(ok, OP_EXEC, OP_WAIT)
+    arr_time = jnp.where(ok, exec_t, to_t)
+
+    # chain targets of exec completions (first QUEUED op, same DS/round); the
+    # chained lock attempt happens at the *source* completion time
+    row_q = st == OP_QUEUED
+    same_round = s.op_round == s.cur_round[:, None]
+    eq_ds = s.op_ds[:, :, None] == s.op_ds[:, None, :]
+    chain_mask = (
+        cat_exec[:, :, None] & row_q[:, None, :] & eq_ds & same_round[:, None, :]
+    )
+    has_next = jnp.any(chain_mask, axis=2)
+    nxt = jnp.argmax(chain_mask, axis=2).astype(i32)  # [T,K]
+    do_chain_cat = cat_exec & has_next
+    rd_cat = cat_exec & ~has_next  # round completes at (t, d_of)
+    ok_chain = jnp.take_along_axis(ok, nxt, axis=1)
+    chain_state = jnp.where(ok_chain, OP_EXEC, OP_WAIT)  # at source slots
+    chain_time = jnp.where(ok_chain, exec_t, to_t)  # source time + same-DS exec
+
+    # round completions, per (t, d) — at most one in-flight op per (t, d)
+    rd3 = oh_d & rd_cat[:, :, None]  # [T,K,D]
+    time_rd = jnp.max(jnp.where(rd3, evt_op[:, :, None], 0), axis=1)
+    iters_rd = jnp.max(jnp.where(rd3, iters_op[:, :, None], 0), axis=1)
+    salt_td = iters_rd * _SALT_MUL + jnp.int32(37)
+    reply_t = time_rd + _delay_salted(s.jitter_milli, tau_row, salt_td)
+    rmax_td = jnp.max(
+        jnp.where(opn[:, :, None] & oh_d, s.op_round[:, :, None].astype(i32), -1),
+        axis=1,
+    )
+    is_final_td = s.cur_round[:, None].astype(i32) >= rmax_td
+    n_inv = jnp.sum(inv.astype(i32), axis=1)
+    centr_t = n_inv == 1
+    aborting_td = sst == SUB_ABORT_PEER
+    prep_round_t = time_rd + s.dyn.lan_rtt_us + s.dyn.log_flush_us
+    local_round_t = time_rd + s.dyn.log_flush_us
+    new_sub_state, new_sub_time = _round_done_transition(
+        s.dyn, is_final_td, centr_t[:, None], reply_t, prep_round_t, local_round_t
+    )
+
+    # ---- sub dispatch (DM -> DS statements) -------------------------------
+    arr_salt = iters_sub * _SALT_MUL + jnp.int32(41)
+    arrival_td = evt_sub + _delay_salted(s.jitter_milli, tau_row, arr_salt)
+    sched_at_op = jnp.take_along_axis(cat_sched, d_of, axis=1)  # [T,K]
+    c_ops = sched_at_op & (st == OP_PENDING) & same_round
+    cand3 = c_ops[:, :, None] & oh_d
+    has_c = jnp.any(cand3, axis=1)  # [T,D]
+    first_c = jnp.argmax(cand3, axis=1).astype(i32)
+    arr_at_op = jnp.take_along_axis(arrival_td, d_of, axis=1)  # [T,K]
+
+    # ---- DS-side prepare command / WAL-flushed vote -----------------------
+    prep_time = evt_sub + s.dyn.log_flush_us
+    vote_salt = iters_sub * _SALT_MUL + jnp.int32(43)
+    vote_t = evt_sub + _delay_salted(s.jitter_milli, tau_row, vote_salt)
+
+    # ---- DM-side fan-ins: only the *first* (in sequential order) fan-in of
+    # each terminal may enter a window, so its `_dm_progress` view — the
+    # pre-state plus its own self-update — is exact ------------------------
+    dm_rank = jnp.where(dm_cat, pos_sub, BIG)
+    dm_first = jax.nn.one_hot(jnp.argmin(dm_rank, axis=1), D, dtype=bool) & dm_cat
+    dm_self = jnp.where(
+        cat_reply,
+        SUB_ROUND_AT_DM,
+        jnp.where(cat_vote, SUB_VOTED, jnp.where(cat_ack, SUB_DONE, SUB_ABORTED)),
+    )
+    sta = jnp.where(dm_first, dm_self, sst.astype(i32))
+    rd_done_first = s.rd_done | (dm_first & cat_prog)
+    prog_first = jnp.any(dm_first & cat_prog, axis=1)  # [T]
+    waiting_c = inv & (sta == SUB_CHILLER_WAIT)
+    active_c = inv & ~waiting_c
+    ready_chiller = (
+        jnp.all(~active_c | (sta == SUB_VOTED), axis=1)
+        & jnp.any(waiting_c, axis=1)
+        & s.dyn.chiller_two_stage
+    )
+    inv_rd = jnp.any(oh_d & (opn & same_round)[:, :, None], axis=1)
+    all_rd = jnp.all(~inv_rd | rd_done_first, axis=1)
+    rmax_t = jnp.max(jnp.where(opn, s.op_round.astype(i32), -1), axis=1)
+    final_t = s.cur_round.astype(i32) >= rmax_t
+    aborting_t = s.phase == T_ABORT_WAIT
+    act = prog_first & all_rd & ~aborting_t
+    advance_t = act & ~final_t  # round advance re-dispatches at its own time
+    all_at_dm = jnp.all(~inv | (sta == SUB_ROUND_AT_DM), axis=1)
+    all_voted = jnp.all(~inv | (sta == SUB_VOTED), axis=1)
+    dec_c, dec_p, dec_l = sched.commit_decision(
+        s.dyn.prepare,
+        all_at_dm,
+        all_voted,
+        centr_t,
+        PREPARE_NONE,
+        PREPARE_COORD,
+        PREPARE_DECENTRAL,
+    )
+    gate = act & final_t
+    send_c = gate & dec_c
+    send_p = gate & dec_p & ~dec_c
+    log_t = gate & dec_l & ~dec_c & ~dec_p
+    done_ack_t = jnp.any(dm_first & cat_ack, axis=1) & jnp.all(
+        ~inv | (sta == SUB_DONE), axis=1
+    )
+    done_abk_t = jnp.any(dm_first & cat_abort_ack, axis=1) & jnp.all(
+        ~inv | (sta == SUB_ABORTED), axis=1
+    )
+    time_dm = jnp.sum(jnp.where(dm_first, evt_sub, 0), axis=1)  # [T]
+    iter_dm = jnp.sum(jnp.where(dm_first, iters_sub, 0), axis=1)
+    salt_dmc = iter_dm[:, None] * _SALT_MUL + jnp.int32(11) + d_ids[None, :]
+    dt_commit = time_dm[:, None] + _delay_salted(s.jitter_milli, tau_row, salt_dmc)
+    salt_dmp = iter_dm[:, None] * _SALT_MUL + jnp.int32(13) + d_ids[None, :]
+    dt_prepare = time_dm[:, None] + _delay_salted(s.jitter_milli, tau_row, salt_dmp)
+    log_term_t = time_dm + s.dyn.log_flush_us
+
+    # ---- terminal commit-log flush (broadcast) ----------------------------
+    salt_e = iters_term[:, None] * _SALT_MUL + jnp.int32(31) + d_ids[None, :]
+    dt_log = evt_term[:, None] + _delay_salted(s.jitter_milli, tau_row, salt_e)
+
+    # ---- DS-side commit apply / peer-abort release ------------------------
+    f_at_op = jnp.take_along_axis(f_cat, d_of, axis=1)  # [T,K]
+    cancel_cat = opn & f_at_op  # ops cancelled (this IS the release)
+    rel_held_cat = cancel_cat & ((st == OP_EXEC) | (st == OP_HOLD))
+    ack_salt = iters_sub * _SALT_MUL + jnp.where(cat_commit, 47, 53)
+    ack_t = evt_sub + _delay_salted(s.jitter_milli, tau_row, ack_salt)
+    # FIFO grant order matters only if someone queues on a released key —
+    # such a release is not drainable (the grants would need exact ordering)
+    rel_waiter_td = jnp.any(oh_d & (rel_held_cat & waiter)[:, :, None], axis=1)
+
+    # ---- earliest-scheduled-time n(e) per event slot: INF_US = schedules
+    # nothing, 0 = not drainable (stops the window at this event) -----------
+    n_prog = jnp.where(
+        ready_chiller | advance_t,
+        0,
+        jnp.where(
+            send_c,
+            jnp.min(jnp.where(inv, dt_commit, INF_US), axis=1),
+            jnp.where(
+                send_p,
+                jnp.min(jnp.where(inv, dt_prepare, INF_US), axis=1),
+                jnp.where(log_t, log_term_t, INF_US),
+            ),
+        ),
+    )
+    n_ack = jnp.where(done_ack_t | done_abk_t, 0, INF_US)
+    n_term = jnp.where(cat_log, jnp.min(jnp.where(inv, dt_log, INF_US), axis=1), 0)
+    n_sub = jnp.zeros((T, D), i32)
+    n_sub = jnp.where(cat_sched, jnp.where(has_c, arrival_td, INF_US), n_sub)
+    n_sub = jnp.where(cat_prep, prep_time, n_sub)
+    n_sub = jnp.where(cat_preparing, vote_t, n_sub)
+    n_sub = jnp.where(f_cat, jnp.where(rel_waiter_td, 0, ack_t), n_sub)
+    n_sub = jnp.where(dm_first & cat_prog, n_prog[:, None], n_sub)
+    n_sub = jnp.where(dm_first & (cat_ack | cat_abort_ack), n_ack[:, None], n_sub)
+    rd_sched_t = jnp.where(
+        jnp.take_along_axis(aborting_td, d_of, axis=1),
+        INF_US,
+        jnp.take_along_axis(new_sub_time, d_of, axis=1),
+    )
+    n_op = jnp.zeros((T, K), i32)
+    n_op = jnp.where(cat_arr, arr_time, n_op)
+    n_op = jnp.where(do_chain_cat, chain_time, n_op)
+    n_op = jnp.where(rd_cat, rd_sched_t, n_op)
+
+    # ---- order-aware pairwise conflicts: mark the LATER event of each pair
+    # so the prefix stops exactly at the first conflicting event ------------
+    # (a) duplicate lock keys among arrivals, chain targets, released
+    #     footprints. Each touch lives at an op slot (the chain touch at its
+    #     target slot, stamped with the source event's rank); reusing the
+    #     eq_key matrix, key_min[j] is the earliest rank at which slot j's key
+    #     is touched, and any strictly later touch of the same key conflicts.
+    #     A single event touching one key twice (a release footprint with a
+    #     duplicated record) shares one rank and stays drainable — one event
+    #     batches with itself trivially.
+    pos_f_at_op = jnp.take_along_axis(jnp.where(f_cat, pos_sub, BIG), d_of, axis=1)
+    # reverse chain map: tgt3[t,k,j] <=> source op k chains to target op j
+    # (gather-based — a scatter here would lower to a per-lane loop under vmap)
+    tgt3 = do_chain_cat[:, :, None] & (kk[None, None, :] == nxt[:, :, None])
+    pos_chain_touch = jnp.min(jnp.where(tgt3, pos_op[:, :, None], BIG), axis=1)
+    touch_min = jnp.minimum(
+        jnp.where(cat_arr, pos_op, BIG),
+        jnp.minimum(pos_chain_touch, jnp.where(cancel_cat, pos_f_at_op, BIG)),
+    ).reshape(-1)
+    key_min = jnp.min(jnp.where(eq_key, touch_min[None, :], BIG), axis=1).reshape(T, K)
+    dup_arr = cat_arr & (pos_op > key_min)
+    dup_chain = do_chain_cat & (pos_op > jnp.take_along_axis(key_min, nxt, axis=1))
+    dup_cancel = cancel_cat & (pos_f_at_op > key_min)
+    rel_dup_td = jnp.any(oh_d & dup_cancel[:, :, None], axis=1)
+
+    # (b) row-exclusive events (DM fan-ins read/write whole terminal rows;
+    #     commit-log flushes broadcast) vs any other event of the terminal
+    pos_any = jnp.minimum(
+        pos_term, jnp.minimum(jnp.min(pos_sub, axis=1), jnp.min(pos_op, axis=1))
+    )
+    pos_excl = jnp.minimum(
+        jnp.where(cat_log, pos_term, BIG),
+        jnp.min(jnp.where(dm_cat, pos_sub, BIG), axis=1),
+    )
+    conflict_term = (pos_excl < pos_term) | (cat_log & (pos_any < pos_term))
+    conflict_sub = (pos_excl[:, None] < pos_sub) | (
+        dm_cat & (pos_any[:, None] < pos_sub)
+    )
+    conflict_op = pos_excl[:, None] < pos_op
+
+    # (c) at most one DM fan-in per data source (the latency monitor applies
+    #     one EWMA update per DS per window)
+    dm_col_min = jnp.min(jnp.where(dm_cat, pos_sub, BIG), axis=0)
+    conflict_sub = conflict_sub | (dm_cat & (dm_col_min[None, :] < pos_sub))
+
+    # (d) a release and an op event at the same (terminal, DS), or a release
+    #     whose footprint duplicates an earlier-touched key
+    pos_op_td = jnp.min(jnp.where(oh_d, pos_op[:, :, None], BIG), axis=1)
+    conflict_sub = conflict_sub | (f_cat & ((pos_op_td < pos_sub) | rel_dup_td))
+    conflict_op = conflict_op | (pos_f_at_op < pos_op) | dup_arr | dup_chain
+
+    # ---- maximal prefix over the sorted event order -----------------------
+    # The window ends at the first (by rank) "stopper": a conflicted event, an
+    # event at/after the horizon, or the first event whose time some
+    # earlier-or-equal-rank event schedules at or before (running min of n(e)
+    # in rank order must stay strictly above the event times).
+    n_flat = jnp.concatenate([n_term, n_sub.reshape(-1), n_op.reshape(-1)])
+    conflict = jnp.concatenate(
+        [conflict_term, conflict_sub.reshape(-1), conflict_op.reshape(-1)]
+    )
+    horizon_i = jnp.int32(cfg.horizon_us)
+    if cfg.lockstep:
+        # unsorted-space equivalent of the cummin prefix: no scatters, no
+        # scans — vmapped scatters/sorts lower to per-lane loops on CPU,
+        # while one more M x M pass is shared elementwise work
+        sched_stop = (n_flat <= flat) | jnp.any(
+            lex_lt & (n_flat[None, :] <= flat[:, None]), axis=1
+        )
+        stop = sched_stop | conflict | (flat >= horizon_i)
+        n_win = jnp.min(jnp.where(stop, pos, BIG))
+        t_last = jnp.max(jnp.where(pos < n_win, flat, 0))
+    else:
+        time_sorted = flat[order]
+        cmin = jax.lax.cummin(n_flat[order])
+        good = (cmin > time_sorted) & (time_sorted < horizon_i) & ~conflict[order]
+        n_win = jnp.where(jnp.all(good), BIG, jnp.argmax(~good).astype(i32))
+        t_last = time_sorted[jnp.maximum(n_win - 1, 0)]
+    win_term = pos_term < n_win
+    win_sub = pos_sub < n_win
+    win_op = pos_op < n_win
+    use = n_win >= 2
+
+    # ---- windowed masks ---------------------------------------------------
+    due_log = win_term & cat_log
+    due_sched = win_sub & cat_sched
+    due_prep = win_sub & cat_prep
+    due_preparing = win_sub & cat_preparing
+    dm_mask = win_sub & dm_cat  # all are their terminal's first fan-in
+    due_commit = win_sub & cat_commit
+    f_mask = win_sub & f_cat
+    due_arr = win_op & cat_arr
+    due_exec = win_op & cat_exec
+    do_chain = due_exec & has_next
+    rd = due_exec & ~has_next
+    rd_td = jnp.any(oh_d & rd[:, :, None], axis=1)
+    sub_upd = rd_td & ~aborting_td
+    prog_w = jnp.any(dm_mask & cat_prog, axis=1)
+    send_c_w = send_c & prog_w
+    send_p_w = send_p & prog_w
+    log_w = log_t & prog_w
+    cancel = opn & jnp.take_along_axis(f_mask, d_of, axis=1)
+
+    def apply(s_: SimState) -> SimState:
+        # ---- op arrays: arrivals/execs, chained statements, dispatch marks,
+        # commit/abort cancellations (masks pairwise disjoint) --------------
+        op_state = jnp.where(
+            due_arr, arr_state, jnp.where(due_exec, OP_HOLD, st.astype(i32))
+        )
+        op_time = jnp.where(due_arr, arr_time, jnp.where(due_exec, INF_US, s_.op_time))
+        op_enq = jnp.where(due_arr, evt_op, s_.op_enq)
+        tgt3_w = tgt3 & do_chain[:, :, None]
+        chain_tgt = jnp.any(tgt3_w, axis=1)  # [T,K] chain-target slots
+        pick = lambda v: jnp.max(jnp.where(tgt3_w, v[:, :, None], 0), axis=1)
+        op_state = jnp.where(chain_tgt, pick(chain_state), op_state)
+        op_time = jnp.where(chain_tgt, pick(chain_time), op_time)
+        op_enq = jnp.where(chain_tgt, pick(evt_op), op_enq)
+        sched_w = jnp.take_along_axis(due_sched, d_of, axis=1)
+        c_ops_w = sched_w & (st == OP_PENDING) & same_round
+        is_first_w = (
+            c_ops_w
+            & (jnp.take_along_axis(first_c, d_of, axis=1) == kk[None, :])
+            & jnp.take_along_axis(has_c, d_of, axis=1)
+        )
+        op_state = jnp.where(
+            c_ops_w, jnp.where(is_first_w, OP_ENROUTE, OP_QUEUED), op_state
+        )
+        op_time = jnp.where(is_first_w, arr_at_op, op_time)
+        op_state = jnp.where(cancel, OP_DONE, op_state).astype(jnp.int8)
+        op_time = jnp.where(cancel, INF_US, op_time)
+
+        got = (due_arr & ok) | (do_chain & ok_chain)
+        got_t = jnp.min(
+            jnp.where(oh_d & got[:, :, None], evt_op[:, :, None], INF_US), axis=1
+        )
+        first_lock = jnp.minimum(s_.first_lock, got_t)
+
+        # ---- sub arrays: self-updates first, then whole-row broadcasts ----
+        sub_state = jnp.where(sub_upd, new_sub_state, sst.astype(i32))
+        sub_time = jnp.where(sub_upd, new_sub_time, s_.sub_time)
+        sub_state = jnp.where(due_prep, SUB_PREPARING, sub_state)
+        sub_time = jnp.where(due_prep, prep_time, sub_time)
+        sub_state = jnp.where(due_preparing, SUB_VOTE, sub_state)
+        sub_time = jnp.where(due_preparing, vote_t, sub_time)
+        sub_state = jnp.where(due_sched, SUB_RUN, sub_state)
+        sub_time = jnp.where(due_sched, INF_US, sub_time)
+        sub_arrive = jnp.where(due_sched, arrival_td, s_.sub_arrive)
+        sub_state = jnp.where(dm_mask, dm_self, sub_state)
+        sub_time = jnp.where(dm_mask, INF_US, sub_time)
+        row_c = send_c_w[:, None] & inv
+        sub_state = jnp.where(row_c, SUB_COMMIT_CMD, sub_state)
+        sub_time = jnp.where(row_c, dt_commit, sub_time)
+        row_p = send_p_w[:, None] & inv
+        sub_state = jnp.where(row_p, SUB_PREP_CMD, sub_state)
+        sub_time = jnp.where(row_p, dt_prepare, sub_time)
+        row_e = due_log[:, None] & inv
+        sub_state = jnp.where(row_e, SUB_COMMIT_CMD, sub_state)
+        sub_time = jnp.where(row_e, dt_log, sub_time)
+        sub_state = jnp.where(due_commit, SUB_ACK, sub_state)
+        sub_state = jnp.where(f_mask & ~due_commit, SUB_ABORT_ACK, sub_state)
+        sub_time = jnp.where(f_mask, ack_t, sub_time)
+        sub_lel = s_.sub_lel + jnp.where(
+            rd_td, jnp.maximum(time_rd - s_.sub_arrive, 0), 0
+        )
+        rd_done = s_.rd_done | (dm_mask & cat_prog)
+
+        # ---- terminal phase/timer (window events own their terminals) -----
+        phase = jnp.where(send_c_w, T_COMMIT_WAIT, s_.phase.astype(i32))
+        phase = jnp.where(log_w, T_COMMIT_LOG, phase)
+        phase = jnp.where(due_log, T_COMMIT_WAIT, phase).astype(jnp.int8)
+        term_time = jnp.where(send_c_w | due_log, INF_US, s_.term_time)
+        term_time = jnp.where(log_w, log_term_t, term_time)
+
+        # ---- hotspot table: one slot write per released footprint key -----
+        # the probe-loop lookup runs on [T,K] (each released op belongs to
+        # exactly one (t, d_of) release); the [T,D,K] view below only groups
+        # the Eq.(4) shares per release and is pure elementwise work
+        slot_k, found_k = hs_mod.lookup_slots(
+            s_.hs.slot_key,
+            jnp.where(cancel, s_.op_key, -1).reshape(-1),
+            cancel.reshape(-1),
+        )
+        slot_k = slot_k.reshape(T, K)
+        found_k = found_k.reshape(T, K)
+        mask_f3 = cancel[:, None, :] & (d_of[:, None, :] == d_ids[:, None])
+        slot_f = jnp.where(mask_f3, slot_k[:, None, :], cfg.hot_capacity)
+        found_f = mask_f3 & found_k[:, None, :]
+        lel_f = s_.sub_lel[:, :, None].astype(jnp.float32)
+        new_w = hs_mod.eq4_masked_w(
+            s_.hs.w_lat, slot_f, found_f, lel_f, cfg.alpha_milli
+        )
+        upd_f = found_f.astype(i32)
+        committed_f = due_commit[:, :, None] & mask_f3
+        hs = s_.hs
+        slot_fl = slot_f.reshape(-1)
+        found_fl = found_f.reshape(-1)
+        upd_fl = upd_f.reshape(-1)
+        hs = hs._replace(
+            w_lat=hs.w_lat.at[slot_fl].set(
+                jnp.where(found_fl, new_w.reshape(-1), hs.w_lat[slot_fl])
+            ),
+            a_cnt=jnp.maximum(hs.a_cnt.at[slot_fl].add(-upd_fl), 0),
+            t_cnt=hs.t_cnt.at[slot_fl].add(upd_fl),
+            c_cnt=hs.c_cnt.at[slot_fl].add(
+                upd_fl * committed_f.reshape(-1).astype(i32)
+            ),
+        )
+
+        # lock-contention-span metric (commit events, per-event warmup gate)
+        lcs_have = due_commit & (s_.first_lock < INF_US) & (
+            evt_sub >= jnp.int32(cfg.warmup_us)
+        )
+        lcs_span = jnp.where(lcs_have, (evt_sub - s_.first_lock + 500) // 1000, 0)
+
+        d_has_dm = jnp.any(dm_mask, axis=0)  # [D] latency-monitor targets
+        return s_._replace(
+            now=t_last,
+            iters=s_.iters + n_win,
+            drained=s_.drained + n_win,
+            windows=s_.windows + 1,
+            op_state=op_state,
+            op_time=op_time,
+            op_enq=op_enq,
+            first_lock=first_lock,
+            sub_state=sub_state.astype(jnp.int8),
+            sub_time=sub_time,
+            sub_arrive=sub_arrive,
+            sub_lel=sub_lel,
+            rd_done=rd_done,
+            tau_est=ewma_update_where(
+                s_.tau_est, s_.tau_true, jnp.int32(cfg.beta_milli), d_has_dm
+            ),
+            phase=phase,
+            term_time=term_time,
+            hs=hs,
+            lcs_sum=s_.lcs_sum + jnp.sum(lcs_span),
+            lcs_cnt=s_.lcs_cnt + jnp.sum(lcs_have.astype(i32)),
+        )
+
+    return use, apply
+
+
+def _drain_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
+    """One drain iteration: apply the maximal conflict-free window of events.
+
+    Cheap pre-checks route to the windowed masked pass only when every event
+    due at the minimum timestamp belongs to a drainable category; txn starts
+    (admission + hot-table claims), lock-wait timeouts (abort fan-out through
+    the grant machinery) and unexpected states always take the sequential
+    single-event step, as does any window the prefix scan cuts below two
+    events.
+    """
+    t_now = jnp.min(_times_flat(s))
+    due_term = s.term_time == t_now
+    due_sub = s.sub_time == t_now
+    due_op = s.op_time == t_now
+    sst = s.sub_state
+    sub_drainable = (
+        (sst == SUB_SCHED)
+        | (sst == SUB_ROUND_REPLY)
+        | (sst == SUB_PREP_CMD)
+        | (sst == SUB_PREPARING)
+        | (sst == SUB_VOTE)
+        | (sst == SUB_COMMIT_CMD)
+        | (sst == SUB_LOCAL_COMMIT)
+        | (sst == SUB_ACK)
+        | (sst == SUB_ABORT_PEER)
+        | (sst == SUB_ABORT_ACK)
+    )
+    op_drainable = (s.op_state == OP_ENROUTE) | (s.op_state == OP_EXEC)
+    clean = (
+        ~jnp.any(due_term & (s.phase != T_COMMIT_LOG))
+        & ~jnp.any(due_sub & ~sub_drainable)
+        & ~jnp.any(due_op & ~op_drainable)
+    )
+
+    def windowed(s_: SimState) -> SimState:
+        use, apply = _window_plan(cfg, bank, s_)
+        return jax.lax.cond(use, apply, lambda s2: _step(cfg, bank, s2), s_)
+
+    return jax.lax.cond(clean, windowed, lambda s_: _step(cfg, bank, s_), s)
+
+
+def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
+    """Branchless windowed drain — the lockstep (vmap) hot path.
+
+    Computes the window plan and the branchless single-event `_omni_step`
+    unconditionally and selects per-leaf with one masked `where` — no
+    `lax.switch`/`lax.cond`, whose branches all execute under vmap anyway and
+    pay a full-state select per branch. Lanes whose window is degenerate
+    (< 2 events) fall back to `_omni_step` without diverging, so vmap lanes
+    drain real windows instead of being silently downgraded to `drain=False`.
+    """
+    use, apply = _window_plan(cfg, bank, s)
+    s_win = apply(s)
+    s_one = _omni_step(cfg, bank, s)
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(use, a, b), s_win, s_one)
