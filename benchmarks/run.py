@@ -138,14 +138,21 @@ def smoke() -> int:
     """Reduced fig5 YCSB grid, both batching strategies + perf guards.
 
     Runs the grid once per strategy — "map" (sequential lanes, cond-gated
-    windowed drain) and "vmap" (lockstep lanes, branchless windowed drain) —
-    records events/sec plus per-strategy drain telemetry, and fails if the
-    vmap path reports a zero drain hit rate (lockstep lanes silently running
-    with draining disabled) or batched map throughput regresses against the
-    stored baseline. There is no vmap/map perf floor on CPU: the lockstep
-    window plan trades per-iteration work for a ~30% while-loop trip cut,
-    which pays on accelerators (where `strategy="auto"` picks vmap) but not
-    on CPU (where auto picks map).
+    windowed drain) and "vmap" (lockstep lanes, fused plan+omnibus windowed
+    drain) — records events/sec plus per-strategy drain telemetry (hit rate,
+    mean window length, per-stopper window-termination counts, loop iters,
+    whether the fused plan ran), and fails if:
+
+    * the vmap path reports a zero drain hit rate (lockstep lanes silently
+      running with draining disabled — the PR-2 telemetry bug), or
+    * batched map throughput regresses >30% below the stored baseline (with
+      the speedup-vs-seed escape hatch for slower hosts), or
+    * the mean window length regresses below the stored baseline — the
+      slot-accurate stoppers must not silently coarsen back.
+
+    There is no vmap/map events/sec floor on CPU: even fused, the lockstep
+    window plan trades per-iteration matrix work for a while-loop trip cut,
+    which pays on accelerators (where `strategy="auto"` picks vmap).
     """
     import jax
 
@@ -202,6 +209,12 @@ def smoke() -> int:
         f"(drain hit rate map: {drain_hit:.1%}, "
         f"vmap: {drain['vmap']['drain_hit_rate']:.1%})"
     )
+    stops = sorted(drain["map"]["window_stops"].items(), key=lambda kv: -kv[1])
+    print(
+        "[smoke] window stops (map): "
+        + ", ".join(f"{k}={c}" for k, c in stops)
+        + f"; vmap plan fused: {drain['vmap']['plan_fused']}"
+    )
     eps_batched = eps["map"]
 
     # seed-engine comparator: single-event stepping, fresh compile — the cost
@@ -233,6 +246,7 @@ def smoke() -> int:
 
     bench = common.load_bench()
     prior = bench.get("smoke", {}).get("events_per_sec_batched")
+    prior_mwl = bench.get("smoke", {}).get("mean_window_len")
     entry = {
         "worlds": len(cells),
         "terminals": SMOKE_T,
@@ -246,12 +260,28 @@ def smoke() -> int:
         "drain_hit_rate": drain_hit,
         "drain_hit_rate_vmap": drain["vmap"]["drain_hit_rate"],
         "mean_window_len": drain["map"]["mean_window_len"],
+        "window_stops": drain["map"]["window_stops"],
+        "plan_fused_vmap": drain["vmap"]["plan_fused"],
         "loop_iters_map": drain["map"]["loop_iters"],
         "loop_iters_vmap": drain["vmap"]["loop_iters"],
         "events_per_sec_seed": round(eps_seed, 1),
         "speedup_vs_seed": round(speedup, 2),
         "total_wall_s": round(time.time() - t_all, 2),
     }
+    if prior_mwl is not None and entry["mean_window_len"] < prior_mwl - 1e-9:
+        # window-length ratchet: the grid and stoppers are deterministic, so
+        # a shorter mean window means the stoppers got coarser, not host
+        # drift. Keep the stored (longer) baseline and fail.
+        print(
+            f"[smoke] WINDOW REGRESSION: mean window length "
+            f"{entry['mean_window_len']:.2f} < stored baseline {prior_mwl:.2f} "
+            f"— the drain stoppers got more conservative"
+        )
+        entry["mean_window_len"] = prior_mwl
+        if prior is not None:
+            entry["events_per_sec_batched"] = prior
+        common.record_smoke(entry)
+        return 1
     if drain["vmap"]["drain_hit_rate"] <= 0.0:
         print(
             "[smoke] LOCKSTEP DRAIN REGRESSION: vmap drain hit rate is 0 — "

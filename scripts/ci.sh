@@ -16,11 +16,13 @@
 #
 # The smoke step runs `benchmarks/run.py --smoke`: a reduced fig5 YCSB grid
 # (presets x seeds) executed once per batching strategy. It asserts that
-# both strategies report events/sec, that the vmap (lockstep, branchless
-# windowed drain) path reports a real (> 0) drain hit rate — lockstep lanes
-# must never silently run with draining disabled again — and that map
-# throughput has not dropped >30% below the baseline stored in
-# results/bench/BENCH_engine.json.
+# both strategies report events/sec, that the vmap (lockstep, fused
+# plan+omnibus windowed drain) path reports a real (> 0) drain hit rate —
+# lockstep lanes must never silently run with draining disabled again —
+# that map throughput has not dropped >30% below the baseline stored in
+# results/bench/BENCH_engine.json, and that the mean window length has not
+# regressed below its stored baseline (the slot-accurate stoppers must not
+# silently coarsen back). Guard semantics: docs/benchmarks.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -56,6 +58,9 @@ print('[ci] engine package import clean (no benchmarks/serving leakage)')
 if [ "${SKIP_TESTS:-0}" != "1" ]; then
     # fast tier-1 (addopts already deselect the slow marks)
     python -m pytest -x -q
+    # public-API doctests: the documented Grid/Simulator/RunResult snippets
+    # (README + docs/ mirror them) must stay runnable
+    python -m pytest --doctest-modules src/repro/core/engine/api.py -q
     if [ "${SKIP_SLOW:-0}" != "1" ]; then
         # the long-horizon engine sweeps + heavyweight model tests
         python -m pytest -x -q -m slow

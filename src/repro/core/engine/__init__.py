@@ -9,7 +9,9 @@ state machine and decomposed into a package:
                  DM protocol progress, the 12 fused event handlers
     step.py      seed-reference step (single event, 12-way lax.switch)
     omni.py      branchless omnibus step (lockstep/vmap single-event path)
-    window.py    windowed conflict-free drain (map + lockstep variants)
+    window.py    windowed-drain planner (candidate ranks, stoppers, prefix)
+    apply.py     masked window application + the map-lane drain step
+    fused.py     fused plan+omnibus windowed drain (lockstep/vmap hot path)
     batch.py     run loop, simulate / simulate_batch sweep entry points
     metrics.py   host-side summaries, drain telemetry, latency CDFs
     api.py       the public facade: Simulator + Grid + RunResult
@@ -108,7 +110,9 @@ from repro.core.engine.handlers import (
 )
 from repro.core.engine.step import _step
 from repro.core.engine.omni import _omni_step
-from repro.core.engine.window import _drain_step, _omni_window, _window_plan
+from repro.core.engine.apply import _apply_window, _drain_step
+from repro.core.engine.fused import _omni_window
+from repro.core.engine.window import _window_plan
 from repro.core.engine.batch import (
     run,
     simulate,

@@ -150,6 +150,24 @@ class Grid:
     Construction validates EVERY cell — `run_sweep`'s old behavior of
     inferring shapes from ``cells[0]`` silently produced wrong-shaped worlds
     for heterogeneous grids; a bad cell now raises with its index.
+
+    >>> g = Grid.cross(preset=("ssp", "geotp"), seed=(0, 1))
+    >>> len(g), g.cells[0], g.cells[3]  # later axes vary fastest
+    (4, {'preset': 'ssp', 'seed': 0}, {'preset': 'geotp', 'seed': 1})
+
+    A flat sequence on a vector axis (``rtt_ms``/``tau_true_us``/
+    ``exec_scale_milli``) is ONE value; a sequence of sequences sweeps it:
+
+    >>> g2 = Grid.zipped(preset="geotp", rtt_ms=((0.0, 30.0), (0.0, 90.0)))
+    >>> len(g2), g2.cells[1]["rtt_ms"]
+    (2, (0.0, 90.0))
+
+    Bad cells raise with their index at construction, not at run time:
+
+    >>> Grid([{"preset": "ssp"}, {"preset": "nope"}])
+    Traceback (most recent call last):
+        ...
+    ValueError: Grid cell 1: unknown preset 'nope' (known: ['chiller', 'geotp', 'geotp-o1', 'geotp-o1o2', 'quro', 'scalardb', 'ssp', 'ssp-local', 'yugabyte-like'])
     """
 
     def __init__(self, cells, *, banks=None, default_rtt_ms=None):
@@ -302,6 +320,26 @@ class RunResult:
     `states` carries the full final engine state (batched over cells for grid
     runs) — everything needed to resume, slice histograms or extract custom
     telemetry; `metrics` is one `summarize` dict per cell.
+
+    Consume a grid result by rows (labels merged with metrics), per-cell
+    final states, or the aggregated windowed-drain telemetry:
+
+    >>> from repro.core import workloads
+    >>> bank = workloads.make_ycsb_bank(
+    ...     workloads.YCSBConfig(num_ds=2, records_per_node=64, ops_per_txn=2),
+    ...     terminals=2, txns_per_terminal=8)
+    >>> sim = Simulator.from_bank(bank, horizon_s=0.2, warmup_s=0.0)
+    >>> res = sim.run_grid(
+    ...     Grid.cross(preset=("ssp", "geotp"), rtt_ms=(0.0, 10.0)), bank)
+    >>> [r["preset"] for r in res.rows()]
+    ['ssp', 'geotp']
+    >>> sorted(res.rows()[0])[:3]
+    ['abort_rate', 'aborts', 'avg_latency_dist_ms']
+    >>> res.world(1).now.ndim  # one cell's final SimState
+    0
+    >>> sorted(res.drain)  # doctest: +NORMALIZE_WHITESPACE
+    ['drain_hit_rate', 'drained_events', 'events', 'loop_iters',
+     'mean_window_len', 'plan_fused', 'seq_events', 'window_stops', 'windows']
     """
 
     cfg: SimConfig
@@ -355,7 +393,8 @@ class RunResult:
         Writes the exact legacy schema (worlds/terminals/events/wall_s/
         events_per_sec/strategy/horizon_s + drain telemetry) so stored
         baselines and the smoke-guard comparisons keep working, plus the jax
-        runtime environment keys.
+        runtime environment keys, the per-stopper window-termination counts
+        and whether the fused lockstep plan ran (see docs/benchmarks.md).
         """
         d = self.drain
         entry = {
@@ -369,6 +408,8 @@ class RunResult:
             "drain_hit_rate": d["drain_hit_rate"],
             "mean_window_len": d["mean_window_len"],
             "loop_iters": d["loop_iters"],
+            "window_stops": d["window_stops"],
+            "plan_fused": d["plan_fused"],
         }
         return record_bench(tag, entry, path)
 
@@ -389,6 +430,26 @@ class Simulator:
     is compile-cached per (shape-key, strategy) process-wide: two Simulators
     with equal shapes share one compilation, and a preset×latency×seed grid
     compiles once per shape, not once per cell.
+
+    The quickstart (shapes inferred from the Bank, default paper RTTs):
+
+    >>> from repro.core import workloads
+    >>> bank = workloads.make_ycsb_bank(
+    ...     workloads.YCSBConfig(num_ds=2, records_per_node=64, ops_per_txn=2),
+    ...     terminals=2, txns_per_terminal=8)
+    >>> sim = Simulator.from_bank(bank, horizon_s=0.2, warmup_s=0.0)
+    >>> grid = Grid.cross(preset=("ssp", "geotp"), rtt_ms=(0.0, 10.0))
+    >>> res = sim.run_grid(grid, bank)  # ONE batched device call
+    >>> len(res), res.metrics[0]["noops"]
+    (2, 0)
+    >>> res.metrics[0]["commits"] > 0
+    True
+
+    Continue the same cells to a longer horizon (donates the state buffers):
+
+    >>> res2 = sim.resume(res, horizon_s=0.4)
+    >>> res2.metrics[0]["events"] >= res.metrics[0]["events"]
+    True
     """
 
     def __init__(

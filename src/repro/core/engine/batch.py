@@ -26,8 +26,9 @@ from repro.core.engine.state import (
     init_state_world,
     _times_flat,
 )
+from repro.core.engine.apply import _drain_step
+from repro.core.engine.fused import _omni_window
 from repro.core.engine.step import _step
-from repro.core.engine.window import _drain_step, _omni_window
 
 def run(cfg: SimConfig, bank: Bank, state: SimState) -> SimState:
     """Run until the horizon (or the event budget) is exhausted.

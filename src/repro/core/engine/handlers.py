@@ -106,6 +106,39 @@ def _attempt_lock(cfg: SimConfig, s: SimState, t, k) -> SimState:
     return s
 
 
+def _grant_decision(held, rel_keys, flat_state, flat_key, flat_write, flat_enq):
+    """FIFO-compatible grant set for a release's keys: [T*K] `granted` mask.
+
+    held/rel_keys: [K] the releasing row's held mask + keys (non-held = -2);
+    flat_*: the [T*K] post-cancel op views. Grant rules: all shared waiters
+    enqueued before the earliest exclusive waiter (unless an exclusive holder
+    remains), else the earliest exclusive waiter (if no holder of either mode
+    remains). Single source for the sequential handler, the branchless
+    omnibus step and the fused windowed pass — the four step modes must agree
+    bitwise on grant fairness.
+    """
+    holderf = (flat_state == OP_EXEC) | (flat_state == OP_HOLD)
+    waitf = flat_state == OP_WAIT
+    eq = flat_key[None, :] == rel_keys[:, None]  # [K, T*K]
+    rem_x = jnp.any(eq & holderf[None, :] & flat_write[None, :], axis=1)
+    rem_s = jnp.any(eq & holderf[None, :] & ~flat_write[None, :], axis=1)
+    M = held[:, None] & eq & waitf[None, :]
+    exq = jnp.where(M & flat_write[None, :], flat_enq[None, :], INF_US)
+    ex_min = jnp.min(exq, axis=1)  # [K]
+    enq = jnp.where(M, flat_enq[None, :], INF_US)
+    grant_s = M & ~flat_write[None, :] & (enq < ex_min[:, None]) & ~rem_x[:, None]
+    any_s = jnp.any(grant_s, axis=1)
+    x_row = jnp.argmin(exq, axis=1)
+    grant_x_ok = (ex_min < INF_US) & ~any_s & ~rem_x & ~rem_s
+    grant_x = (
+        jax.nn.one_hot(x_row, M.shape[1], dtype=bool)
+        & grant_x_ok[:, None]
+        & M
+        & flat_write[None, :]
+    )
+    return jnp.any(grant_s | grant_x, axis=0)  # [T*K]
+
+
 def _release_and_grant(cfg: SimConfig, s: SimState, t, d) -> SimState:
     """Release every lock txn t holds at data source d, cancel its remaining
     ops there, and grant waiting requests FIFO-compatibly."""
@@ -130,28 +163,9 @@ def _release_and_grant(cfg: SimConfig, s: SimState, t, d) -> SimState:
     flat_write = s.op_write.reshape(-1)
     flat_enq = s.op_enq.reshape(-1)
     flat_ds = s.op_ds.reshape(-1)
-    holderf = (flat_state == OP_EXEC) | (flat_state == OP_HOLD)
-    waitf = flat_state == OP_WAIT
-
-    eq = flat_key[None, :] == rel_keys[:, None]  # [K, T*K]
-    rem_x = jnp.any(eq & holderf[None, :] & flat_write[None, :], axis=1)
-    rem_s = jnp.any(eq & holderf[None, :] & ~flat_write[None, :], axis=1)
-    M = held[:, None] & eq & waitf[None, :]
-    exq = jnp.where(M & flat_write[None, :], flat_enq[None, :], INF_US)
-    ex_min = jnp.min(exq, axis=1)  # [K]
-    enq = jnp.where(M, flat_enq[None, :], INF_US)
-
-    grant_s = M & ~flat_write[None, :] & (enq < ex_min[:, None]) & ~rem_x[:, None]
-    any_s = jnp.any(grant_s, axis=1)
-    x_row = jnp.argmin(exq, axis=1)
-    grant_x_ok = (ex_min < INF_US) & ~any_s & ~rem_x & ~rem_s
-    grant_x = (
-        jax.nn.one_hot(x_row, M.shape[1], dtype=bool)
-        & grant_x_ok[:, None]
-        & M
-        & flat_write[None, :]
+    granted = _grant_decision(
+        held, rel_keys, flat_state, flat_key, flat_write, flat_enq
     )
-    granted = jnp.any(grant_s | grant_x, axis=0)  # [T*K]
 
     exec_t = s.now + _exec_us(cfg, s, flat_ds.astype(jnp.int32))
     new_fstate = jnp.where(granted, OP_EXEC, flat_state).astype(jnp.int8)

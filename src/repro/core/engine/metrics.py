@@ -5,7 +5,13 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core.engine.state import HIST_BINS, _HIST_BASE_US, SimConfig, SimState
+from repro.core.engine.state import (
+    HIST_BINS,
+    STOP_REASONS,
+    _HIST_BASE_US,
+    SimConfig,
+    SimState,
+)
 
 def world_index(states: SimState, i: int) -> SimState:
     """Slice world i out of a batched final state."""
@@ -58,10 +64,14 @@ def drain_stats(state: SimState) -> dict:
 
     `loop_iters` is the actual `lax.while_loop` trip count: sequential events
     take one iteration each, a whole window takes one iteration.
+    `window_stops` counts, per stop reason, why each applied window ended
+    (see `state.STOP_REASONS`); `plan_fused` reports whether any lane ran the
+    fused plan+omnibus lockstep pass (`fused._omni_window`).
     """
     events = int(np.sum(np.asarray(state.iters)))
     drained = int(np.sum(np.asarray(state.drained)))
     windows = int(np.sum(np.asarray(state.windows)))
+    stops = np.asarray(state.win_stops).reshape(-1, len(STOP_REASONS)).sum(axis=0)
     return {
         "events": events,
         "drained_events": drained,
@@ -70,6 +80,8 @@ def drain_stats(state: SimState) -> dict:
         "windows": windows,
         "mean_window_len": round(drained / max(windows, 1), 2),
         "loop_iters": (events - drained) + windows,
+        "window_stops": {r: int(c) for r, c in zip(STOP_REASONS, stops)},
+        "plan_fused": bool(np.sum(np.asarray(state.fused)) > 0),
     }
 
 

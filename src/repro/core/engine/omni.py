@@ -65,11 +65,13 @@ from repro.core.engine.state import (
     _times_flat,
     _u01,
 )
-from repro.core.engine.handlers import _stagger
+from repro.core.engine.handlers import _grant_decision, _stagger
 
 def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     """Branchless all-category dispatch: process the single earliest event as
-    ONE straight-line masked pass — no `lax.switch`, no `lax.cond`.
+    ONE straight-line masked pass — no `lax.switch`, no `lax.cond`. Selected
+    by ``SimConfig(lockstep=True, drain=False)`` — the lockstep (vmap)
+    reference path; lockstep lanes with draining run `fused._omni_window`.
 
     Under lockstep (vmap) lanes the switch executes every branch per
     iteration anyway and pays a full-state `select_n` merge per branch;
@@ -485,26 +487,9 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     flat_write = s.op_write.reshape(-1)
     flat_enq = s.op_enq.reshape(-1)
     flat_ds = s.op_ds.reshape(-1).astype(i32)
-    holderf = (flat_state == OP_EXEC) | (flat_state == OP_HOLD)
-    waitf = flat_state == OP_WAIT
-    eq = flat_key[None, :] == rel_keys[:, None]  # [K, T*K]
-    rem_x = jnp.any(eq & holderf[None, :] & flat_write[None, :], axis=1)
-    rem_s = jnp.any(eq & holderf[None, :] & ~flat_write[None, :], axis=1)
-    M = held[:, None] & eq & waitf[None, :]
-    exq = w(M & flat_write[None, :], flat_enq[None, :], INF_US)
-    ex_min = jnp.min(exq, axis=1)
-    enq = w(M, flat_enq[None, :], INF_US)
-    grant_s = M & ~flat_write[None, :] & (enq < ex_min[:, None]) & ~rem_x[:, None]
-    any_s = jnp.any(grant_s, axis=1)
-    x_row = jnp.argmin(exq, axis=1)
-    grant_x_ok = (ex_min < INF_US) & ~any_s & ~rem_x & ~rem_s
-    grant_x = (
-        jax.nn.one_hot(x_row, M.shape[1], dtype=bool)
-        & grant_x_ok[:, None]
-        & M
-        & flat_write[None, :]
+    granted = _grant_decision(
+        held, rel_keys, flat_state, flat_key, flat_write, flat_enq
     )
-    granted = jnp.any(grant_s | grant_x, axis=0)
     exec_tg = s.now + _exec_us(cfg, s, flat_ds)
     op_state = w(granted, OP_EXEC, flat_state).astype(jnp.int8).reshape(T, K)
     op_time = w(granted, exec_tg, s.op_time.reshape(-1)).reshape(T, K)

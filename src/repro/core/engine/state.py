@@ -63,6 +63,39 @@ _HIST_BASE_US = 100.0  # bin 0 at 100 µs, 8 bins per octave
 
 _SALT_MUL = jnp.int32(2654435761 % (2**31))
 
+# ---- windowed-drain stop reasons --------------------------------------------
+# Why each applied window ended, indexing `SimState.win_stops` (see
+# window.py for the stopper mechanics and docs/architecture.md for the table):
+#   horizon       first excluded event lies at/after the horizon (or nothing
+#                 is left to stop on — every pending event drained)
+#   nondrainable  a non-drainable event: txn start, lock-wait timeout, round
+#                 advance, chiller stage-2 re-dispatch, txn-completing ack,
+#                 release with a queued waiter
+#   scheduled     an in-window event schedules new work at or before the
+#                 window's timestamps (running-min rule)
+#   lock_key      second touch of one lock key (arrival / chain target /
+#                 released footprint)
+#   dm_row        slot-accurate DM row rule: a fan-in preceded by a non-fan-in
+#                 event of its terminal, or any event behind a *triggering*
+#                 fan-in / commit-log flush (row-writers stay forward-exclusive)
+#   dm_col        more than K_EWMA fan-ins on one data source (the latency
+#                 monitor's unrolled EWMA chain caps out)
+#   rel_op        a release sharing its (terminal, DS) with an earlier op event
+#   cap           the window filled the planner's candidate budget
+#                 (window.PLAN_CAP events) — longer windows split, bitwise-
+#                 identically, across iterations
+STOP_REASONS = (
+    "horizon",
+    "nondrainable",
+    "scheduled",
+    "lock_key",
+    "dm_row",
+    "dm_col",
+    "rel_op",
+    "cap",
+)
+N_STOP_REASONS = len(STOP_REASONS)
+
 
 class DynProto(NamedTuple):
     """Dynamic (traced) protocol knobs.
@@ -265,6 +298,8 @@ class SimState(NamedTuple):
     noops: jax.Array  # i32 — must stay 0 (state-machine invariant)
     drained: jax.Array  # i32 — events applied via the windowed masked pass
     windows: jax.Array  # i32 — masked window applications (mean len = drained/windows)
+    win_stops: jax.Array  # [N_STOP_REASONS] i32 — why each applied window ended
+    fused: jax.Array  # i32 — fused plan+step lockstep iterations (`_omni_window`)
     slot_commits: jax.Array  # [T,N] i32
     slot_aborts: jax.Array  # [T,N] i32
     slot_lat: jax.Array  # [T,N] i32 (sum of commit latencies, ms)
@@ -339,6 +374,8 @@ def init_state(
         noops=i32(0),
         drained=i32(0),
         windows=i32(0),
+        win_stops=jnp.zeros((N_STOP_REASONS,), i32),
+        fused=i32(0),
         # untracked: a 1-slot stub (size-0 axes reject traced indices at
         # trace time); mode="drop" discards every slot>0 write either way
         slot_commits=jnp.zeros((T, N if cfg.track_slots else 1), i32),

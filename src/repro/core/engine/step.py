@@ -29,9 +29,11 @@ from repro.core.engine.state import SimConfig, SimState, _times_flat
 def _step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     """Process the single earliest event (one fused argmin over all queues).
 
-    The concatenated view orders terminal < subtxn < op events, and flat
-    argmin picks the first occurrence — the exact tie-break order of the
-    original three-scan picker, at a third of the reduction cost.
+    The seed-reference step mode, selected by ``SimConfig(drain=False,
+    lockstep=False)``: every other mode must stay bitwise-identical to this
+    one. The concatenated view orders terminal < subtxn < op events, and
+    flat argmin picks the first occurrence — the exact tie-break order of
+    the original three-scan picker, at a third of the reduction cost.
     """
     T, D, K = cfg.terminals, cfg.num_ds, cfg.max_ops
     flat = _times_flat(s)

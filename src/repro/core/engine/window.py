@@ -2,19 +2,49 @@
 
 `_window_plan` ranks the concatenated event-time view into the exact
 sequential processing order and finds the longest conflict-free prefix;
-`_drain_step` (map lanes, cond-gated) and `_omni_window` (lockstep lanes,
-branchless select against `omni._omni_step`) apply it in one masked pass,
-bitwise-identical to single-event stepping.
+`_apply_window` materializes the whole window in ONE masked pass,
+bitwise-identical to single-event stepping. `_drain_step` is the map-lane
+entry (cond-gated behind a cheap drainability pre-check); the lockstep
+(vmap) lanes run the fused plan+omnibus pass in `fused._omni_window`, which
+shares `_window_plan`/`_apply_window` so both strategies form — and count —
+exactly the same windows.
+
+Window stoppers (slot-accurate read/write sets — see docs/architecture.md):
+
+* non-drainable categories (txn start, lock-wait timeout, round advance,
+  chiller stage-2 re-dispatch, txn-completing ack, release with a queued
+  waiter) pin their earliest-scheduled-time to 0;
+* an event scheduling work at/before the window's timestamps (running-min
+  rule over earliest-scheduled-times);
+* the second touch of one lock key (arrival / chain target / released
+  footprint), via per-key first-touch ranks on the eq_key matrix;
+* the slot-accurate DM rules: a *triggering* fan-in (one that fires a
+  commit/prepare/log broadcast, a round advance, a chiller re-dispatch or a
+  terminal finish) writes its whole row and stays forward-exclusive, and a
+  fan-in's row read is only exact when every earlier in-window event of its
+  terminal is itself a non-triggering fan-in — but *non-triggering* fan-ins
+  write only their own (terminal, DS) slot, so any number of them coexist
+  per terminal and per window (the pre-PR-5 rules stopped at the second
+  fan-in per terminal and per DS);
+* at most `K_EWMA` fan-ins per data source (the latency monitor composes
+  that many exact EWMA applications per window);
+* a release sharing its (terminal, DS) with an earlier op event.
+
+Every windowed event keeps the iteration number (hash salt) and timestamp it
+would have had sequentially, so drained runs stay bitwise-identical to
+`drain=False` (asserted across presets, jitters, zero-RTT tie storms and
+abort-heavy workloads for all four step modes).
 """
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import hotspot as hs_mod
 from repro.core import scheduler as sched
-from repro.core.netmodel import INF_US, ewma_update_where
+from repro.core.netmodel import INF_US
 from repro.core.protocol import (
     PREPARE_COORD,
     PREPARE_DECENTRAL,
@@ -23,6 +53,7 @@ from repro.core.protocol import (
 from repro.core.workloads import Bank
 
 from repro.core.engine.state import (
+    N_STOP_REASONS,
     OP_NONE,
     OP_PENDING,
     OP_ENROUTE,
@@ -30,13 +61,9 @@ from repro.core.engine.state import (
     OP_WAIT,
     OP_EXEC,
     OP_HOLD,
-    OP_DONE,
-    SUB_NONE,
     SUB_SCHED,
-    SUB_RUN,
     SUB_ROUND_REPLY,
     SUB_ROUND_AT_DM,
-    SUB_WAIT_ROUND,
     SUB_CHILLER_WAIT,
     SUB_PREP_CMD,
     SUB_PREPARING,
@@ -51,7 +78,6 @@ from repro.core.engine.state import (
     SUB_ABORTED,
     T_ABORT_WAIT,
     T_COMMIT_LOG,
-    T_COMMIT_WAIT,
     _SALT_MUL,
     SimConfig,
     SimState,
@@ -60,40 +86,139 @@ from repro.core.engine.state import (
     _round_done_transition,
     _times_flat,
 )
-from repro.core.engine.omni import _omni_step
-from repro.core.engine.step import _step
 
-def _window_plan(cfg: SimConfig, bank: Bank, s: SimState):
+# Max DM fan-ins per data source per window: the latency monitor applies one
+# EWMA update per fan-in, composed exactly by unrolling this many masked
+# applications in `_apply_window`; the (K_EWMA+1)-th same-column fan-in stops
+# the window (stop reason `dm_col`).
+K_EWMA = 4
+
+# Window candidate budget: only the PLAN_CAP lex-smallest events can join one
+# window (longer windows split bitwise-identically across iterations — mean
+# windows run ~3 events, so the cap is headroom, not a constraint). Keeping
+# the candidate set small is what makes the lockstep plan cheap: ranks and
+# the running-min prefix cost O(PLAN_CAP * M) / O(PLAN_CAP^2) elementwise
+# work instead of the O(M^2) comparison matrices the pre-PR-5 plan paid per
+# iteration. Both rank routes cap identically so the drain telemetry stays
+# strategy-independent.
+PLAN_CAP = 8
+
+# stop-reason codes — indices into SimState.win_stops / state.STOP_REASONS
+(
+    STOP_HORIZON,
+    STOP_NONDRAINABLE,
+    STOP_SCHEDULED,
+    STOP_LOCK_KEY,
+    STOP_DM_ROW,
+    STOP_DM_COL,
+    STOP_REL_OP,
+    STOP_CAP,
+) = range(N_STOP_REASONS)
+
+
+class _PlanVals(NamedTuple):
+    """Everything the masked window pass (and the fused lockstep pass) needs:
+    per-event ranks/salts, pre-state categories, the per-event values each
+    drainable handler would compute sequentially, the per-fan-in decision
+    tensors, and the prefix outcome."""
+
+    # window candidates: the W lex-smallest events, rank order. The decoded
+    # coordinates are carried here so the applier's release pass reads the
+    # same decode the planner's waiter probe used (single source of truth).
+    cand_i: jax.Array  # [W] flat event indices
+    cand_is_sub: jax.Array  # [W] candidate is a subtxn slot
+    cand_t_sub: jax.Array  # [W] its terminal (0 when not a sub slot)
+    cand_d_sub: jax.Array  # [W] its DS column (0 when not a sub slot)
+    # ranks of the flat (time, index) order + per-event iteration numbers
+    pos_term: jax.Array  # [T]
+    pos_sub: jax.Array  # [T,D]
+    pos_op: jax.Array  # [T,K]
+    iters_term: jax.Array
+    iters_sub: jax.Array
+    iters_op: jax.Array
+    # pre-state event categories
+    cat_log: jax.Array
+    cat_sched: jax.Array
+    cat_prep: jax.Array
+    cat_preparing: jax.Array
+    cat_commit: jax.Array
+    cat_ack: jax.Array
+    cat_prog: jax.Array
+    dm_cat: jax.Array
+    f_cat: jax.Array
+    cat_arr: jax.Array
+    cat_exec: jax.Array
+    # op events: lock decisions + chained statements
+    ok: jax.Array  # [T,K] lock grant for an arrival at this slot
+    arr_state: jax.Array
+    arr_time: jax.Array
+    has_next: jax.Array
+    tgt3: jax.Array  # [T,K,K] source op chains to target op
+    ok_chain: jax.Array
+    chain_state: jax.Array
+    chain_time: jax.Array
+    # exec round completions
+    time_rd: jax.Array  # [T,D]
+    new_sub_state: jax.Array
+    new_sub_time: jax.Array
+    aborting_td: jax.Array
+    # DM dispatch + DS-side 2PC legs
+    arrival_td: jax.Array
+    has_c: jax.Array
+    first_c: jax.Array
+    prep_time: jax.Array
+    vote_t: jax.Array
+    # DM fan-ins, slot-accurate: per-fan-in decision tensors on the
+    # cumulative row view (pre-state + earlier in-window self-updates)
+    dm_self: jax.Array  # [T,D] the fan-in's own-slot state write
+    ready_chiller_j: jax.Array  # [T,D] (j = the fan-in's sub column)
+    advance_j: jax.Array
+    send_c_j: jax.Array
+    send_p_j: jax.Array
+    log_t_j: jax.Array
+    done_ack_j: jax.Array
+    done_abk_j: jax.Array
+    dt_commit3: jax.Array  # [T,D,D] (fan-in j commits to every DS d)
+    dt_prepare3: jax.Array
+    log_term_j: jax.Array  # [T,D]
+    # terminal commit-log flush broadcast times
+    dt_log: jax.Array  # [T,D]
+    # DS finish (commit apply / peer-abort release)
+    ack_t: jax.Array
+    rel_waiter_td: jax.Array
+    # prefix outcome
+    pinned_term: jax.Array
+    pinned_sub: jax.Array
+    pinned_op: jax.Array
+    win_term: jax.Array  # [T] window membership
+    win_sub: jax.Array  # [T,D]
+    win_op: jax.Array  # [T,K]
+    n_win: jax.Array  # scalar: events in the maximal window
+    use: jax.Array  # scalar: window holds >= 2 events
+    t_last: jax.Array  # scalar: timestamp of the window's last event
+    stop_code: jax.Array  # scalar: STOP_* reason of the event that ended it
+
+
+def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     """Plan the maximal conflict-free *prefix* (window) of the global event
     order — the generalization of the tie-only drain to events at distinct
     timestamps.
 
     Per-event timestamps are the event queues themselves; ranking the
-    concatenated [T + T*D + T*K] time view with one stable sort reproduces the
-    sequential processing order exactly (time, then flat-index tie-break).
-    A prefix scan then finds the longest prefix such that
+    concatenated [T + T*D + T*K] time view with one stable sort reproduces
+    the sequential processing order exactly (time, then flat-index
+    tie-break). A prefix scan then finds the longest prefix such that every
+    event is drainable, nothing is scheduled into the window's time range,
+    and no two window events interact under the slot-accurate read/write-set
+    rules listed in the module docstring. Order-aware pairwise conflicts mark
+    the *later* event of each conflicting pair, so the window stops exactly
+    at the first conflicting event — whose stop reason is recorded.
 
-      * every event belongs to a drainable category — txn starts, lock-wait
-        timeouts, round advances, chiller stage-2 re-dispatches, releases with
-        queued waiters and txn-completing acks stop the window (their
-        earliest-scheduled-time is pinned to 0);
-      * no event schedules a new event at or before the window's last
-        timestamp (running min of per-event earliest-scheduled-times must stay
-        strictly above the sorted times);
-      * no two window events interact — order-aware pairwise conflicts mark
-        the *later* event of each conflicting pair, so the window stops
-        exactly at the first conflicting event: duplicate lock keys across
-        arrivals / chain targets / released footprints, a second DM fan-in on
-        one terminal or one data source (EWMA updates once per DS), a DM
-        fan-in or commit-log flush sharing its terminal with any other event,
-        a release sharing its (terminal, DS) with an op event.
-
-    Every windowed event keeps the iteration number (hash salt) and timestamp
-    it would have had sequentially, so applying the whole window in one
-    masked pass is bitwise-identical to single-event stepping.
-
-    Returns ``(use, apply)``: `use` is "the window holds >= 2 events" and
-    `apply(s)` materializes the post-window state.
+    Two bitwise-identical rank/prefix routes: the scalar (map) path uses one
+    stable argsort + cummin; the lockstep path counts with M x M comparison
+    matrices, because batched sorts/scans under vmap lower to pathologically
+    slow per-lane loops on CPU while the matrices are pure elementwise work
+    shared across lanes.
     """
     T, D, K = cfg.terminals, cfg.num_ds, cfg.max_ops
     M = T + T * D + T * K
@@ -109,20 +234,45 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState):
 
     # ---- sequential ranks of the flat time view ----------------------------
     # pos[e] = #events lexicographically before e by (time, flat index) — the
-    # exact sequential processing order. Two bitwise-identical routes: the
-    # scalar (map) path uses one stable argsort; the lockstep path counts with
-    # an M x M comparison matrix, because batched sorts under vmap lower to
-    # pathologically slow per-lane comparator loops on CPU while the matrix
-    # is pure elementwise work shared across lanes.
+    # exact sequential processing order. Only the W = PLAN_CAP lex-smallest
+    # events (the window candidates) need exact ranks; everything else
+    # saturates at W, which no window comparison can reach. The lockstep
+    # route extracts the candidates with W masked argmins ([M] reductions —
+    # batched sorts/scatters under vmap lower to per-lane loops on CPU) and
+    # ranks every slot against them with one [W, M] comparison; the scalar
+    # (map) route keeps the stable argsort. Ranks below W agree bitwise
+    # between the two routes, and every window decision only consults those.
+    W = min(PLAN_CAP, M)
     if cfg.lockstep:
         idx_m = jnp.arange(M, dtype=i32)
-        lex_lt = (flat[None, :] < flat[:, None]) | (
-            (flat[None, :] == flat[:, None]) & (idx_m[None, :] < idx_m[:, None])
-        )  # [M,M]: lex_lt[e, e'] <=> e' processed before e
-        pos = jnp.sum(lex_lt, axis=1, dtype=i32)
+        mflat = flat
+        cand_is, cand_ts = [], []
+        for _ in range(W):
+            j = jnp.argmin(mflat).astype(i32)
+            cand_is.append(j)
+            cand_ts.append(flat[j])
+            mflat = jnp.where(idx_m == j, jnp.int32(2**31 - 1), mflat)
+        cand_i = jnp.stack(cand_is)  # [W] flat indices, rank order
+        cand_t = jnp.stack(cand_ts)
+        lex_before = (cand_t[:, None] < flat[None, :]) | (
+            (cand_t[:, None] == flat[None, :]) & (cand_i[:, None] < idx_m[None, :])
+        )  # [W, M]: candidate i processed before slot e
+        pos = jnp.sum(lex_before, axis=0, dtype=i32)
     else:
         order = jnp.argsort(flat, stable=True)
         pos = jnp.zeros((M,), i32).at[order].set(jnp.arange(M, dtype=i32))
+        cand_i = order[:W].astype(i32)
+        cand_t = flat[cand_i]
+    # candidate coordinates (rank order). Every window decision — masks,
+    # conflicts, n(e) consultation, the fused singleton — only ever reads
+    # candidate slots, so per-slot tensors below may be garbage elsewhere.
+    w_rank = jnp.arange(W, dtype=i32)
+    is_sub_c = (cand_i >= T) & (cand_i < T + T * D)
+    is_op_c = cand_i >= T + T * D
+    sub_flat_c = jnp.clip(cand_i - T, 0, T * D - 1)
+    t_sub_c = jnp.where(is_sub_c, sub_flat_c // D, 0)
+    d_sub_c = jnp.where(is_sub_c, sub_flat_c % D, 0)
+    op_flat_c = jnp.clip(cand_i - T - T * D, 0, T * K - 1)
     pos_term = pos[:T]
     pos_sub = pos[T : T + T * D].reshape(T, D)
     pos_op = pos[T + T * D :].reshape(T, K)
@@ -154,24 +304,18 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState):
     d_ids = jnp.arange(D, dtype=i32)
     kk = jnp.arange(K, dtype=i32)
 
-    # ---- op events: batched lock decisions (pre-state views are exact: the
-    # window never batches two events touching one key, and an EXEC->HOLD
-    # transition keeps holder status) ---------------------------------------
+    # ---- op events: candidate-query lock decisions ------------------------
+    # (pre-state views are exact: the window never batches two events
+    # touching one key, and an EXEC->HOLD transition keeps holder status).
+    # Lock checks are only ever consulted at candidate arrivals and at the
+    # chain targets of candidate exec completions, so they run as [2W, T*K]
+    # key queries instead of the [T*K, T*K] comparison matrix the pre-PR-5
+    # plan built per iteration.
     fk = s.op_key.reshape(-1)
     fw = s.op_write.reshape(-1)
     fst = st.reshape(-1)
     holder = (fst == OP_EXEC) | (fst == OP_HOLD)
     waiting = fst == OP_WAIT
-    eq_key = fk[:, None] == fk[None, :]  # [T*K, T*K]
-    x_held = jnp.any(eq_key & (holder & fw)[None, :], axis=1).reshape(T, K)
-    s_held = jnp.any(eq_key & (holder & ~fw)[None, :], axis=1).reshape(T, K)
-    waiter = jnp.any(eq_key & waiting[None, :], axis=1).reshape(T, K)
-    ok = jnp.where(s.op_write, ~x_held & ~s_held, ~x_held) & ~waiter  # [T,K]
-
-    exec_t = evt_op + _exec_us(cfg, s, d_of)  # [T,K] per-event time basis
-    to_t = evt_op + s.dyn.lock_timeout_us
-    arr_state = jnp.where(ok, OP_EXEC, OP_WAIT)
-    arr_time = jnp.where(ok, exec_t, to_t)
 
     # chain targets of exec completions (first QUEUED op, same DS/round); the
     # chained lock attempt happens at the *source* completion time
@@ -185,7 +329,31 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState):
     nxt = jnp.argmax(chain_mask, axis=2).astype(i32)  # [T,K]
     do_chain_cat = cat_exec & has_next
     rd_cat = cat_exec & ~has_next  # round completes at (t, d_of)
-    ok_chain = jnp.take_along_axis(ok, nxt, axis=1)
+
+    TK = T * K
+    ids_tk = jnp.arange(TK, dtype=i32)
+    t_op_c = op_flat_c // K
+    q_self = jnp.where(is_op_c, op_flat_c, TK)  # sentinel -> padded row
+    q_tgt = jnp.where(is_op_c, t_op_c * K + nxt.reshape(-1)[op_flat_c], TK)
+    fk_pad = jnp.concatenate([fk, jnp.full((1,), -3, fk.dtype)])
+    fw_pad = jnp.concatenate([fw, jnp.zeros((1,), bool)])
+    qs = jnp.concatenate([q_self, q_tgt])  # [2W] queried op slots
+    keys_q = fk_pad[qs]
+    m_q = keys_q[:, None] == fk[None, :]  # [2W, T*K]
+    x_held_q = jnp.any(m_q & (holder & fw)[None, :], axis=1)
+    s_held_q = jnp.any(m_q & (holder & ~fw)[None, :], axis=1)
+    wait_q = jnp.any(m_q & waiting[None, :], axis=1)
+    ok_q = jnp.where(fw_pad[qs], ~x_held_q & ~s_held_q, ~x_held_q) & ~wait_q
+    # broadcast the candidate-correct grants back to slot shape (False
+    # elsewhere — nothing beyond the candidates ever reads them)
+    hit_op = q_self[:, None] == ids_tk[None, :]  # [W, T*K]
+    ok = jnp.any(hit_op & ok_q[:W, None], axis=0).reshape(T, K)
+    ok_chain = jnp.any(hit_op & ok_q[W:, None], axis=0).reshape(T, K)
+
+    exec_t = evt_op + _exec_us(cfg, s, d_of)  # [T,K] per-event time basis
+    to_t = evt_op + s.dyn.lock_timeout_us
+    arr_state = jnp.where(ok, OP_EXEC, OP_WAIT)
+    arr_time = jnp.where(ok, exec_t, to_t)
     chain_state = jnp.where(ok_chain, OP_EXEC, OP_WAIT)  # at source slots
     chain_time = jnp.where(ok_chain, exec_t, to_t)  # source time + same-DS exec
 
@@ -217,68 +385,69 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState):
     cand3 = c_ops[:, :, None] & oh_d
     has_c = jnp.any(cand3, axis=1)  # [T,D]
     first_c = jnp.argmax(cand3, axis=1).astype(i32)
-    arr_at_op = jnp.take_along_axis(arrival_td, d_of, axis=1)  # [T,K]
 
     # ---- DS-side prepare command / WAL-flushed vote -----------------------
     prep_time = evt_sub + s.dyn.log_flush_us
     vote_salt = iters_sub * _SALT_MUL + jnp.int32(43)
     vote_t = evt_sub + _delay_salted(s.jitter_milli, tau_row, vote_salt)
 
-    # ---- DM-side fan-ins: only the *first* (in sequential order) fan-in of
-    # each terminal may enter a window, so its `_dm_progress` view — the
-    # pre-state plus its own self-update — is exact ------------------------
-    dm_rank = jnp.where(dm_cat, pos_sub, BIG)
-    dm_first = jax.nn.one_hot(jnp.argmin(dm_rank, axis=1), D, dtype=bool) & dm_cat
+    # ---- DM-side fan-ins: slot-accurate read/write sets -------------------
+    # A fan-in at (t, j) writes only its own slot (+ rd_done[t, j] and the
+    # DS-j EWMA) unless it *triggers* a row action. Its row read is exact iff
+    # every earlier in-window event of terminal t is itself a non-triggering
+    # fan-in — whose self-update the cumulative [T, j, d] view applies, via
+    # the same first-touch-rank machinery the lock keys use: slot (t, d)'s
+    # update is visible to fan-in (t, j) iff rank(t,d) <= rank(t,j).
     dm_self = jnp.where(
         cat_reply,
         SUB_ROUND_AT_DM,
         jnp.where(cat_vote, SUB_VOTED, jnp.where(cat_ack, SUB_DONE, SUB_ABORTED)),
     )
-    sta = jnp.where(dm_first, dm_self, sst.astype(i32))
-    rd_done_first = s.rd_done | (dm_first & cat_prog)
-    prog_first = jnp.any(dm_first & cat_prog, axis=1)  # [T]
-    waiting_c = inv & (sta == SUB_CHILLER_WAIT)
-    active_c = inv & ~waiting_c
-    ready_chiller = (
-        jnp.all(~active_c | (sta == SUB_VOTED), axis=1)
-        & jnp.any(waiting_c, axis=1)
+    le3 = dm_cat[:, None, :] & (pos_sub[:, None, :] <= pos_sub[:, :, None])
+    sta3 = jnp.where(le3, dm_self[:, None, :], sst[:, None, :].astype(i32))
+    rd_done3 = s.rd_done[:, None, :] | (le3 & cat_prog[:, None, :])
+    inv3 = inv[:, None, :]
+    waiting_c3 = inv3 & (sta3 == SUB_CHILLER_WAIT)
+    active_c3 = inv3 & ~waiting_c3
+    ready_chiller_j = (
+        cat_prog
+        & jnp.all(~active_c3 | (sta3 == SUB_VOTED), axis=2)
+        & jnp.any(waiting_c3, axis=2)
         & s.dyn.chiller_two_stage
     )
     inv_rd = jnp.any(oh_d & (opn & same_round)[:, :, None], axis=1)
-    all_rd = jnp.all(~inv_rd | rd_done_first, axis=1)
+    all_rd_j = jnp.all(~inv_rd[:, None, :] | rd_done3, axis=2)
     rmax_t = jnp.max(jnp.where(opn, s.op_round.astype(i32), -1), axis=1)
     final_t = s.cur_round.astype(i32) >= rmax_t
     aborting_t = s.phase == T_ABORT_WAIT
-    act = prog_first & all_rd & ~aborting_t
-    advance_t = act & ~final_t  # round advance re-dispatches at its own time
-    all_at_dm = jnp.all(~inv | (sta == SUB_ROUND_AT_DM), axis=1)
-    all_voted = jnp.all(~inv | (sta == SUB_VOTED), axis=1)
-    dec_c, dec_p, dec_l = sched.commit_decision(
+    act_j = cat_prog & all_rd_j & ~aborting_t[:, None]
+    advance_j = act_j & ~final_t[:, None]  # round advance: non-drainable
+    all_at_dm_j = jnp.all(~inv3 | (sta3 == SUB_ROUND_AT_DM), axis=2)
+    all_voted_j = jnp.all(~inv3 | (sta3 == SUB_VOTED), axis=2)
+    dec_c_j, dec_p_j, dec_l_j = sched.commit_decision(
         s.dyn.prepare,
-        all_at_dm,
-        all_voted,
-        centr_t,
+        all_at_dm_j,
+        all_voted_j,
+        centr_t[:, None],
         PREPARE_NONE,
         PREPARE_COORD,
         PREPARE_DECENTRAL,
     )
-    gate = act & final_t
-    send_c = gate & dec_c
-    send_p = gate & dec_p & ~dec_c
-    log_t = gate & dec_l & ~dec_c & ~dec_p
-    done_ack_t = jnp.any(dm_first & cat_ack, axis=1) & jnp.all(
-        ~inv | (sta == SUB_DONE), axis=1
+    gate_j = act_j & final_t[:, None]
+    send_c_j = gate_j & dec_c_j
+    send_p_j = gate_j & dec_p_j & ~dec_c_j
+    log_t_j = gate_j & dec_l_j & ~dec_c_j & ~dec_p_j
+    done_ack_j = cat_ack & jnp.all(~inv3 | (sta3 == SUB_DONE), axis=2)
+    done_abk_j = cat_abort_ack & jnp.all(~inv3 | (sta3 == SUB_ABORTED), axis=2)
+    salt_dmc3 = iters_sub[:, :, None] * _SALT_MUL + jnp.int32(11) + d_ids[None, None, :]
+    dt_commit3 = evt_sub[:, :, None] + _delay_salted(
+        s.jitter_milli, tau_row[None], salt_dmc3
     )
-    done_abk_t = jnp.any(dm_first & cat_abort_ack, axis=1) & jnp.all(
-        ~inv | (sta == SUB_ABORTED), axis=1
+    salt_dmp3 = iters_sub[:, :, None] * _SALT_MUL + jnp.int32(13) + d_ids[None, None, :]
+    dt_prepare3 = evt_sub[:, :, None] + _delay_salted(
+        s.jitter_milli, tau_row[None], salt_dmp3
     )
-    time_dm = jnp.sum(jnp.where(dm_first, evt_sub, 0), axis=1)  # [T]
-    iter_dm = jnp.sum(jnp.where(dm_first, iters_sub, 0), axis=1)
-    salt_dmc = iter_dm[:, None] * _SALT_MUL + jnp.int32(11) + d_ids[None, :]
-    dt_commit = time_dm[:, None] + _delay_salted(s.jitter_milli, tau_row, salt_dmc)
-    salt_dmp = iter_dm[:, None] * _SALT_MUL + jnp.int32(13) + d_ids[None, :]
-    dt_prepare = time_dm[:, None] + _delay_salted(s.jitter_milli, tau_row, salt_dmp)
-    log_term_t = time_dm + s.dyn.log_flush_us
+    log_term_j = evt_sub + s.dyn.log_flush_us
 
     # ---- terminal commit-log flush (broadcast) ----------------------------
     salt_e = iters_term[:, None] * _SALT_MUL + jnp.int32(31) + d_ids[None, :]
@@ -287,340 +456,292 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState):
     # ---- DS-side commit apply / peer-abort release ------------------------
     f_at_op = jnp.take_along_axis(f_cat, d_of, axis=1)  # [T,K]
     cancel_cat = opn & f_at_op  # ops cancelled (this IS the release)
-    rel_held_cat = cancel_cat & ((st == OP_EXEC) | (st == OP_HOLD))
     ack_salt = iters_sub * _SALT_MUL + jnp.where(cat_commit, 47, 53)
     ack_t = evt_sub + _delay_salted(s.jitter_milli, tau_row, ack_salt)
     # FIFO grant order matters only if someone queues on a released key —
-    # such a release is not drainable (the grants would need exact ordering)
-    rel_waiter_td = jnp.any(oh_d & (rel_held_cat & waiter)[:, :, None], axis=1)
+    # such a release is not drainable (the grants would need exact ordering).
+    # Releases live at sub candidates, so the waiter probe runs on compact
+    # [W, K] footprint rows gathered per candidate.
+    t_rel = jnp.where(is_sub_c, t_sub_c, 0)
+    rel_c = is_sub_c & f_cat[t_rel, d_sub_c]
+    key_rel = s.op_key[t_rel]  # [W,K]
+    st_rel = s.op_state[t_rel].astype(i32)
+    ds_rel_row = s.op_ds[t_rel].astype(i32)
+    cancel_rel = (
+        rel_c[:, None] & (st_rel != OP_NONE) & (ds_rel_row == d_sub_c[:, None])
+    )
+    held_rel = cancel_rel & ((st_rel == OP_EXEC) | (st_rel == OP_HOLD))
+    m_rel = (
+        jnp.where(held_rel, key_rel, -3)[:, :, None] == fk[None, None, :]
+    )  # [W,K,T*K]
+    waiter_rel = jnp.any(
+        jnp.any(m_rel & waiting[None, None, :], axis=2), axis=1
+    )  # [W]
+    sub_ids = jnp.arange(T * D, dtype=i32)
+    hit_sub_rel = (
+        jnp.where(rel_c, sub_flat_c, T * D)[:, None] == sub_ids[None, :]
+    )  # [W, T*D]
+    rel_waiter_td = jnp.any(hit_sub_rel & waiter_rel[:, None], axis=0).reshape(T, D)
 
-    # ---- earliest-scheduled-time n(e) per event slot: INF_US = schedules
-    # nothing, 0 = not drainable (stops the window at this event) -----------
-    n_prog = jnp.where(
-        ready_chiller | advance_t,
-        0,
+    # ---- earliest-scheduled-time n(e) per event slot (INF_US = schedules
+    # nothing) and the non-drainable pins ------------------------------------
+    n_fan = jnp.where(
+        send_c_j,
+        jnp.min(jnp.where(inv3, dt_commit3, INF_US), axis=2),
         jnp.where(
-            send_c,
-            jnp.min(jnp.where(inv, dt_commit, INF_US), axis=1),
-            jnp.where(
-                send_p,
-                jnp.min(jnp.where(inv, dt_prepare, INF_US), axis=1),
-                jnp.where(log_t, log_term_t, INF_US),
-            ),
+            send_p_j,
+            jnp.min(jnp.where(inv3, dt_prepare3, INF_US), axis=2),
+            jnp.where(log_t_j, log_term_j, INF_US),
         ),
     )
-    n_ack = jnp.where(done_ack_t | done_abk_t, 0, INF_US)
-    n_term = jnp.where(cat_log, jnp.min(jnp.where(inv, dt_log, INF_US), axis=1), 0)
-    n_sub = jnp.zeros((T, D), i32)
+    pinned_term = ~cat_log  # txn starts (and unexpected terminal states)
+    n_term = jnp.where(
+        cat_log, jnp.min(jnp.where(inv, dt_log, INF_US), axis=1), 0
+    )
+    sub_drain_cat = cat_sched | cat_prep | cat_preparing | f_cat | dm_cat
+    pinned_sub = (
+        ~sub_drain_cat
+        | (f_cat & rel_waiter_td)
+        | (dm_cat & (ready_chiller_j | advance_j | done_ack_j | done_abk_j))
+    )
+    n_sub = jnp.full((T, D), INF_US, i32)
     n_sub = jnp.where(cat_sched, jnp.where(has_c, arrival_td, INF_US), n_sub)
     n_sub = jnp.where(cat_prep, prep_time, n_sub)
     n_sub = jnp.where(cat_preparing, vote_t, n_sub)
-    n_sub = jnp.where(f_cat, jnp.where(rel_waiter_td, 0, ack_t), n_sub)
-    n_sub = jnp.where(dm_first & cat_prog, n_prog[:, None], n_sub)
-    n_sub = jnp.where(dm_first & (cat_ack | cat_abort_ack), n_ack[:, None], n_sub)
+    n_sub = jnp.where(f_cat, ack_t, n_sub)
+    n_sub = jnp.where(dm_cat, n_fan, n_sub)
+    n_sub = jnp.where(pinned_sub, 0, n_sub)
     rd_sched_t = jnp.where(
         jnp.take_along_axis(aborting_td, d_of, axis=1),
         INF_US,
         jnp.take_along_axis(new_sub_time, d_of, axis=1),
     )
-    n_op = jnp.zeros((T, K), i32)
-    n_op = jnp.where(cat_arr, arr_time, n_op)
-    n_op = jnp.where(do_chain_cat, chain_time, n_op)
-    n_op = jnp.where(rd_cat, rd_sched_t, n_op)
+    pinned_op = ~(cat_arr | cat_exec)  # lock-wait timeouts / unexpected
+    n_op = jnp.where(
+        cat_arr,
+        arr_time,
+        jnp.where(do_chain_cat, chain_time, jnp.where(rd_cat, rd_sched_t, INF_US)),
+    )
+    n_op = jnp.where(pinned_op, 0, n_op)
 
     # ---- order-aware pairwise conflicts: mark the LATER event of each pair
-    # so the prefix stops exactly at the first conflicting event ------------
+    # so the prefix stops exactly at the first conflicting event, keeping the
+    # conflict families separate for stop-reason attribution ----------------
     # (a) duplicate lock keys among arrivals, chain targets, released
-    #     footprints. Each touch lives at an op slot (the chain touch at its
-    #     target slot, stamped with the source event's rank); reusing the
-    #     eq_key matrix, key_min[j] is the earliest rank at which slot j's key
-    #     is touched, and any strictly later touch of the same key conflicts.
-    #     A single event touching one key twice (a release footprint with a
-    #     duplicated record) shares one rank and stays drainable — one event
-    #     batches with itself trivially.
+    #     footprints. Every touch belongs to a candidate event (a chain touch
+    #     at its target key, stamped with the source candidate's rank; a
+    #     footprint touch per cancelled op of a release candidate), and a
+    #     non-candidate touch can never out-rank a candidate — so the
+    #     first-touch comparison runs on the compact candidate touch list
+    #     instead of the [T*K, T*K] eq_key matrix. A single event touching
+    #     one key twice (a release footprint with a duplicated record) shares
+    #     one rank and stays drainable — one event batches with itself
+    #     trivially.
     pos_f_at_op = jnp.take_along_axis(jnp.where(f_cat, pos_sub, BIG), d_of, axis=1)
     # reverse chain map: tgt3[t,k,j] <=> source op k chains to target op j
     # (gather-based — a scatter here would lower to a per-lane loop under vmap)
     tgt3 = do_chain_cat[:, :, None] & (kk[None, None, :] == nxt[:, :, None])
-    pos_chain_touch = jnp.min(jnp.where(tgt3, pos_op[:, :, None], BIG), axis=1)
-    touch_min = jnp.minimum(
-        jnp.where(cat_arr, pos_op, BIG),
-        jnp.minimum(pos_chain_touch, jnp.where(cancel_cat, pos_f_at_op, BIG)),
-    ).reshape(-1)
-    key_min = jnp.min(jnp.where(eq_key, touch_min[None, :], BIG), axis=1).reshape(T, K)
-    dup_arr = cat_arr & (pos_op > key_min)
-    dup_chain = do_chain_cat & (pos_op > jnp.take_along_axis(key_min, nxt, axis=1))
-    dup_cancel = cancel_cat & (pos_f_at_op > key_min)
-    rel_dup_td = jnp.any(oh_d & dup_cancel[:, :, None], axis=1)
+    arr_c = is_op_c & cat_arr.reshape(-1)[op_flat_c]
+    chn_c = is_op_c & do_chain_cat.reshape(-1)[op_flat_c]
+    tkeys = jnp.concatenate(
+        [fk_pad[q_self], fk_pad[q_tgt], key_rel.reshape(-1)]
+    )  # [2W + W*K]
+    tvalid = jnp.concatenate([arr_c, chn_c, cancel_rel.reshape(-1)])
+    tw = jnp.concatenate(
+        [w_rank, w_rank, jnp.broadcast_to(w_rank[:, None], (W, K)).reshape(-1)]
+    )
+    eq_t = (tkeys[:, None] == tkeys[None, :]) & tvalid[:, None] & tvalid[None, :]
+    dup_t = jnp.any(eq_t & (tw[None, :] < tw[:, None]), axis=1)
+    dup_arr_c = dup_t[:W] & arr_c
+    dup_chn_c = dup_t[W : 2 * W] & chn_c
+    dup_rel_c = jnp.any(dup_t[2 * W :].reshape(W, K) & cancel_rel, axis=1)
+    dup_arr = jnp.any(hit_op & dup_arr_c[:, None], axis=0).reshape(T, K)
+    dup_chain = jnp.any(hit_op & dup_chn_c[:, None], axis=0).reshape(T, K)
+    conf_key_sub = jnp.any(hit_sub_rel & dup_rel_c[:, None], axis=0).reshape(T, D)
+    conf_key_op = dup_arr | dup_chain
 
-    # (b) row-exclusive events (DM fan-ins read/write whole terminal rows;
-    #     commit-log flushes broadcast) vs any other event of the terminal
-    pos_any = jnp.minimum(
-        pos_term, jnp.minimum(jnp.min(pos_sub, axis=1), jnp.min(pos_op, axis=1))
+    # (b) slot-accurate DM row rules. Row-writers (commit-log flushes and
+    #     *triggering* fan-ins) stay forward-exclusive; a fan-in additionally
+    #     conflicts when any non-fan-in event of its terminal precedes it
+    #     (its cumulative row view would miss that event's writes).
+    trig_j = dm_cat & (
+        ready_chiller_j
+        | advance_j
+        | send_c_j
+        | send_p_j
+        | log_t_j
+        | done_ack_j
+        | done_abk_j
     )
     pos_excl = jnp.minimum(
         jnp.where(cat_log, pos_term, BIG),
-        jnp.min(jnp.where(dm_cat, pos_sub, BIG), axis=1),
+        jnp.min(jnp.where(trig_j, pos_sub, BIG), axis=1),
     )
-    conflict_term = (pos_excl < pos_term) | (cat_log & (pos_any < pos_term))
-    conflict_sub = (pos_excl[:, None] < pos_sub) | (
-        dm_cat & (pos_any[:, None] < pos_sub)
+    pos_nonfan = jnp.minimum(
+        pos_term,
+        jnp.minimum(
+            jnp.min(jnp.where(~dm_cat, pos_sub, BIG), axis=1),
+            jnp.min(pos_op, axis=1),
+        ),
     )
-    conflict_op = pos_excl[:, None] < pos_op
+    conf_row_term = pos_excl < pos_term
+    conf_row_sub = (pos_excl[:, None] < pos_sub) | (
+        dm_cat & (pos_nonfan[:, None] < pos_sub)
+    )
+    conf_row_op = pos_excl[:, None] < pos_op
 
-    # (c) at most one DM fan-in per data source (the latency monitor applies
-    #     one EWMA update per DS per window)
-    dm_col_min = jnp.min(jnp.where(dm_cat, pos_sub, BIG), axis=0)
-    conflict_sub = conflict_sub | (dm_cat & (dm_col_min[None, :] < pos_sub))
+    # (c) at most K_EWMA fan-ins per data source per window (the monitor
+    #     composes one exact EWMA application per fan-in, unrolled K_EWMA
+    #     deep) — per-(DS-column) first-touch counts, any terminal
+    col_lt = dm_cat[None, :, :] & (pos_sub[None, :, :] < pos_sub[:, None, :])
+    col_before = jnp.sum(col_lt, axis=1, dtype=i32)  # [T,D]
+    conf_col_sub = dm_cat & (col_before >= K_EWMA)
 
-    # (d) a release and an op event at the same (terminal, DS), or a release
-    #     whose footprint duplicates an earlier-touched key
+    # (d) a release and an earlier op event at the same (terminal, DS)
     pos_op_td = jnp.min(jnp.where(oh_d, pos_op[:, :, None], BIG), axis=1)
-    conflict_sub = conflict_sub | (f_cat & ((pos_op_td < pos_sub) | rel_dup_td))
-    conflict_op = conflict_op | (pos_f_at_op < pos_op) | dup_arr | dup_chain
+    conf_rel_sub = f_cat & (pos_op_td < pos_sub)
+    conf_rel_op = pos_f_at_op < pos_op
 
     # ---- maximal prefix over the sorted event order -----------------------
-    # The window ends at the first (by rank) "stopper": a conflicted event, an
-    # event at/after the horizon, or the first event whose time some
-    # earlier-or-equal-rank event schedules at or before (running min of n(e)
-    # in rank order must stay strictly above the event times).
-    n_flat = jnp.concatenate([n_term, n_sub.reshape(-1), n_op.reshape(-1)])
-    conflict = jnp.concatenate(
-        [conflict_term, conflict_sub.reshape(-1), conflict_op.reshape(-1)]
+    # The window ends at the first (by rank) "stopper": a conflicted event,
+    # an event at/after the horizon, a pinned (non-drainable) event, or the
+    # first event whose time some earlier-or-equal-rank event schedules at or
+    # before (running min of n(e) in rank order must stay strictly above the
+    # event times — pinned events carry n=0, stopping the window at
+    # themselves).
+    zt = jnp.zeros((T,), bool)
+    conf_key = jnp.concatenate([zt, conf_key_sub.reshape(-1), conf_key_op.reshape(-1)])
+    conf_row = jnp.concatenate(
+        [conf_row_term, conf_row_sub.reshape(-1), conf_row_op.reshape(-1)]
     )
+    conf_col = jnp.concatenate(
+        [zt, conf_col_sub.reshape(-1), jnp.zeros((T * K,), bool)]
+    )
+    conf_rel = jnp.concatenate(
+        [zt, conf_rel_sub.reshape(-1), conf_rel_op.reshape(-1)]
+    )
+    conflict = conf_key | conf_row | conf_col | conf_rel
+    pinned_flat = jnp.concatenate(
+        [pinned_term, pinned_sub.reshape(-1), pinned_op.reshape(-1)]
+    )
+    n_flat = jnp.concatenate([n_term, n_sub.reshape(-1), n_op.reshape(-1)])
     horizon_i = jnp.int32(cfg.horizon_us)
+    code = jnp.where(
+        flat >= horizon_i,
+        STOP_HORIZON,
+        jnp.where(
+            pinned_flat,
+            STOP_NONDRAINABLE,
+            jnp.where(
+                conf_key,
+                STOP_LOCK_KEY,
+                jnp.where(
+                    conf_row,
+                    STOP_DM_ROW,
+                    jnp.where(
+                        conf_col,
+                        STOP_DM_COL,
+                        jnp.where(conf_rel, STOP_REL_OP, STOP_SCHEDULED),
+                    ),
+                ),
+            ),
+        ),
+    ).astype(i32)
     if cfg.lockstep:
-        # unsorted-space equivalent of the cummin prefix: no scatters, no
-        # scans — vmapped scatters/sorts lower to per-lane loops on CPU,
-        # while one more M x M pass is shared elementwise work
-        sched_stop = (n_flat <= flat) | jnp.any(
-            lex_lt & (n_flat[None, :] <= flat[:, None]), axis=1
+        # candidate-space equivalent of the cummin prefix: W-element gathers
+        # plus a [W, W] triangular running min — no scatters, no scans
+        n_cand = n_flat[cand_i]
+        conf_cand = conflict[cand_i]
+        code_cand = code[cand_i]
+        ii = jnp.arange(W, dtype=i32)
+        tri = ii[:, None] >= ii[None, :]
+        cmin = jnp.min(
+            jnp.where(tri, n_cand[None, :], jnp.int32(2**31 - 1)), axis=1
         )
-        stop = sched_stop | conflict | (flat >= horizon_i)
-        n_win = jnp.min(jnp.where(stop, pos, BIG))
-        t_last = jnp.max(jnp.where(pos < n_win, flat, 0))
+        good = (cmin > cand_t) & (cand_t < horizon_i) & ~conf_cand
+        n_win = jnp.min(jnp.where(~good, ii, jnp.int32(W)))
+        t_last = jnp.max(jnp.where(ii < n_win, cand_t, 0))
+        stop_code = jnp.where(
+            n_win >= W,
+            jnp.int32(STOP_CAP),
+            jnp.sum(jnp.where(ii == n_win, code_cand, 0)),
+        ).astype(i32)
     else:
         time_sorted = flat[order]
         cmin = jax.lax.cummin(n_flat[order])
         good = (cmin > time_sorted) & (time_sorted < horizon_i) & ~conflict[order]
-        n_win = jnp.where(jnp.all(good), BIG, jnp.argmax(~good).astype(i32))
+        n_raw = jnp.where(jnp.all(good), BIG, jnp.argmax(~good).astype(i32))
+        n_win = jnp.minimum(n_raw, jnp.int32(W))
         t_last = time_sorted[jnp.maximum(n_win - 1, 0)]
+        stop_code = jnp.where(
+            n_raw >= W, STOP_CAP, code[order][jnp.minimum(n_raw, BIG - 1)]
+        ).astype(i32)
     win_term = pos_term < n_win
     win_sub = pos_sub < n_win
     win_op = pos_op < n_win
     use = n_win >= 2
 
-    # ---- windowed masks ---------------------------------------------------
-    due_log = win_term & cat_log
-    due_sched = win_sub & cat_sched
-    due_prep = win_sub & cat_prep
-    due_preparing = win_sub & cat_preparing
-    dm_mask = win_sub & dm_cat  # all are their terminal's first fan-in
-    due_commit = win_sub & cat_commit
-    f_mask = win_sub & f_cat
-    due_arr = win_op & cat_arr
-    due_exec = win_op & cat_exec
-    do_chain = due_exec & has_next
-    rd = due_exec & ~has_next
-    rd_td = jnp.any(oh_d & rd[:, :, None], axis=1)
-    sub_upd = rd_td & ~aborting_td
-    prog_w = jnp.any(dm_mask & cat_prog, axis=1)
-    send_c_w = send_c & prog_w
-    send_p_w = send_p & prog_w
-    log_w = log_t & prog_w
-    cancel = opn & jnp.take_along_axis(f_mask, d_of, axis=1)
-
-    def apply(s_: SimState) -> SimState:
-        # ---- op arrays: arrivals/execs, chained statements, dispatch marks,
-        # commit/abort cancellations (masks pairwise disjoint) --------------
-        op_state = jnp.where(
-            due_arr, arr_state, jnp.where(due_exec, OP_HOLD, st.astype(i32))
-        )
-        op_time = jnp.where(due_arr, arr_time, jnp.where(due_exec, INF_US, s_.op_time))
-        op_enq = jnp.where(due_arr, evt_op, s_.op_enq)
-        tgt3_w = tgt3 & do_chain[:, :, None]
-        chain_tgt = jnp.any(tgt3_w, axis=1)  # [T,K] chain-target slots
-        pick = lambda v: jnp.max(jnp.where(tgt3_w, v[:, :, None], 0), axis=1)
-        op_state = jnp.where(chain_tgt, pick(chain_state), op_state)
-        op_time = jnp.where(chain_tgt, pick(chain_time), op_time)
-        op_enq = jnp.where(chain_tgt, pick(evt_op), op_enq)
-        sched_w = jnp.take_along_axis(due_sched, d_of, axis=1)
-        c_ops_w = sched_w & (st == OP_PENDING) & same_round
-        is_first_w = (
-            c_ops_w
-            & (jnp.take_along_axis(first_c, d_of, axis=1) == kk[None, :])
-            & jnp.take_along_axis(has_c, d_of, axis=1)
-        )
-        op_state = jnp.where(
-            c_ops_w, jnp.where(is_first_w, OP_ENROUTE, OP_QUEUED), op_state
-        )
-        op_time = jnp.where(is_first_w, arr_at_op, op_time)
-        op_state = jnp.where(cancel, OP_DONE, op_state).astype(jnp.int8)
-        op_time = jnp.where(cancel, INF_US, op_time)
-
-        got = (due_arr & ok) | (do_chain & ok_chain)
-        got_t = jnp.min(
-            jnp.where(oh_d & got[:, :, None], evt_op[:, :, None], INF_US), axis=1
-        )
-        first_lock = jnp.minimum(s_.first_lock, got_t)
-
-        # ---- sub arrays: self-updates first, then whole-row broadcasts ----
-        sub_state = jnp.where(sub_upd, new_sub_state, sst.astype(i32))
-        sub_time = jnp.where(sub_upd, new_sub_time, s_.sub_time)
-        sub_state = jnp.where(due_prep, SUB_PREPARING, sub_state)
-        sub_time = jnp.where(due_prep, prep_time, sub_time)
-        sub_state = jnp.where(due_preparing, SUB_VOTE, sub_state)
-        sub_time = jnp.where(due_preparing, vote_t, sub_time)
-        sub_state = jnp.where(due_sched, SUB_RUN, sub_state)
-        sub_time = jnp.where(due_sched, INF_US, sub_time)
-        sub_arrive = jnp.where(due_sched, arrival_td, s_.sub_arrive)
-        sub_state = jnp.where(dm_mask, dm_self, sub_state)
-        sub_time = jnp.where(dm_mask, INF_US, sub_time)
-        row_c = send_c_w[:, None] & inv
-        sub_state = jnp.where(row_c, SUB_COMMIT_CMD, sub_state)
-        sub_time = jnp.where(row_c, dt_commit, sub_time)
-        row_p = send_p_w[:, None] & inv
-        sub_state = jnp.where(row_p, SUB_PREP_CMD, sub_state)
-        sub_time = jnp.where(row_p, dt_prepare, sub_time)
-        row_e = due_log[:, None] & inv
-        sub_state = jnp.where(row_e, SUB_COMMIT_CMD, sub_state)
-        sub_time = jnp.where(row_e, dt_log, sub_time)
-        sub_state = jnp.where(due_commit, SUB_ACK, sub_state)
-        sub_state = jnp.where(f_mask & ~due_commit, SUB_ABORT_ACK, sub_state)
-        sub_time = jnp.where(f_mask, ack_t, sub_time)
-        sub_lel = s_.sub_lel + jnp.where(
-            rd_td, jnp.maximum(time_rd - s_.sub_arrive, 0), 0
-        )
-        rd_done = s_.rd_done | (dm_mask & cat_prog)
-
-        # ---- terminal phase/timer (window events own their terminals) -----
-        phase = jnp.where(send_c_w, T_COMMIT_WAIT, s_.phase.astype(i32))
-        phase = jnp.where(log_w, T_COMMIT_LOG, phase)
-        phase = jnp.where(due_log, T_COMMIT_WAIT, phase).astype(jnp.int8)
-        term_time = jnp.where(send_c_w | due_log, INF_US, s_.term_time)
-        term_time = jnp.where(log_w, log_term_t, term_time)
-
-        # ---- hotspot table: one slot write per released footprint key -----
-        # the probe-loop lookup runs on [T,K] (each released op belongs to
-        # exactly one (t, d_of) release); the [T,D,K] view below only groups
-        # the Eq.(4) shares per release and is pure elementwise work
-        slot_k, found_k = hs_mod.lookup_slots(
-            s_.hs.slot_key,
-            jnp.where(cancel, s_.op_key, -1).reshape(-1),
-            cancel.reshape(-1),
-        )
-        slot_k = slot_k.reshape(T, K)
-        found_k = found_k.reshape(T, K)
-        mask_f3 = cancel[:, None, :] & (d_of[:, None, :] == d_ids[:, None])
-        slot_f = jnp.where(mask_f3, slot_k[:, None, :], cfg.hot_capacity)
-        found_f = mask_f3 & found_k[:, None, :]
-        lel_f = s_.sub_lel[:, :, None].astype(jnp.float32)
-        new_w = hs_mod.eq4_masked_w(
-            s_.hs.w_lat, slot_f, found_f, lel_f, cfg.alpha_milli
-        )
-        upd_f = found_f.astype(i32)
-        committed_f = due_commit[:, :, None] & mask_f3
-        hs = s_.hs
-        slot_fl = slot_f.reshape(-1)
-        found_fl = found_f.reshape(-1)
-        upd_fl = upd_f.reshape(-1)
-        hs = hs._replace(
-            w_lat=hs.w_lat.at[slot_fl].set(
-                jnp.where(found_fl, new_w.reshape(-1), hs.w_lat[slot_fl])
-            ),
-            a_cnt=jnp.maximum(hs.a_cnt.at[slot_fl].add(-upd_fl), 0),
-            t_cnt=hs.t_cnt.at[slot_fl].add(upd_fl),
-            c_cnt=hs.c_cnt.at[slot_fl].add(
-                upd_fl * committed_f.reshape(-1).astype(i32)
-            ),
-        )
-
-        # lock-contention-span metric (commit events, per-event warmup gate)
-        lcs_have = due_commit & (s_.first_lock < INF_US) & (
-            evt_sub >= jnp.int32(cfg.warmup_us)
-        )
-        lcs_span = jnp.where(lcs_have, (evt_sub - s_.first_lock + 500) // 1000, 0)
-
-        d_has_dm = jnp.any(dm_mask, axis=0)  # [D] latency-monitor targets
-        return s_._replace(
-            now=t_last,
-            iters=s_.iters + n_win,
-            drained=s_.drained + n_win,
-            windows=s_.windows + 1,
-            op_state=op_state,
-            op_time=op_time,
-            op_enq=op_enq,
-            first_lock=first_lock,
-            sub_state=sub_state.astype(jnp.int8),
-            sub_time=sub_time,
-            sub_arrive=sub_arrive,
-            sub_lel=sub_lel,
-            rd_done=rd_done,
-            tau_est=ewma_update_where(
-                s_.tau_est, s_.tau_true, jnp.int32(cfg.beta_milli), d_has_dm
-            ),
-            phase=phase,
-            term_time=term_time,
-            hs=hs,
-            lcs_sum=s_.lcs_sum + jnp.sum(lcs_span),
-            lcs_cnt=s_.lcs_cnt + jnp.sum(lcs_have.astype(i32)),
-        )
-
-    return use, apply
-
-
-def _drain_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
-    """One drain iteration: apply the maximal conflict-free window of events.
-
-    Cheap pre-checks route to the windowed masked pass only when every event
-    due at the minimum timestamp belongs to a drainable category; txn starts
-    (admission + hot-table claims), lock-wait timeouts (abort fan-out through
-    the grant machinery) and unexpected states always take the sequential
-    single-event step, as does any window the prefix scan cuts below two
-    events.
-    """
-    t_now = jnp.min(_times_flat(s))
-    due_term = s.term_time == t_now
-    due_sub = s.sub_time == t_now
-    due_op = s.op_time == t_now
-    sst = s.sub_state
-    sub_drainable = (
-        (sst == SUB_SCHED)
-        | (sst == SUB_ROUND_REPLY)
-        | (sst == SUB_PREP_CMD)
-        | (sst == SUB_PREPARING)
-        | (sst == SUB_VOTE)
-        | (sst == SUB_COMMIT_CMD)
-        | (sst == SUB_LOCAL_COMMIT)
-        | (sst == SUB_ACK)
-        | (sst == SUB_ABORT_PEER)
-        | (sst == SUB_ABORT_ACK)
+    return _PlanVals(
+        cand_i=cand_i,
+        cand_is_sub=is_sub_c,
+        cand_t_sub=t_sub_c,
+        cand_d_sub=d_sub_c,
+        pos_term=pos_term,
+        pos_sub=pos_sub,
+        pos_op=pos_op,
+        iters_term=iters_term,
+        iters_sub=iters_sub,
+        iters_op=iters_op,
+        cat_log=cat_log,
+        cat_sched=cat_sched,
+        cat_prep=cat_prep,
+        cat_preparing=cat_preparing,
+        cat_commit=cat_commit,
+        cat_ack=cat_ack,
+        cat_prog=cat_prog,
+        dm_cat=dm_cat,
+        f_cat=f_cat,
+        cat_arr=cat_arr,
+        cat_exec=cat_exec,
+        ok=ok,
+        arr_state=arr_state,
+        arr_time=arr_time,
+        has_next=has_next,
+        tgt3=tgt3,
+        ok_chain=ok_chain,
+        chain_state=chain_state,
+        chain_time=chain_time,
+        time_rd=time_rd,
+        new_sub_state=new_sub_state,
+        new_sub_time=new_sub_time,
+        aborting_td=aborting_td,
+        arrival_td=arrival_td,
+        has_c=has_c,
+        first_c=first_c,
+        prep_time=prep_time,
+        vote_t=vote_t,
+        dm_self=dm_self,
+        ready_chiller_j=ready_chiller_j,
+        advance_j=advance_j,
+        send_c_j=send_c_j,
+        send_p_j=send_p_j,
+        log_t_j=log_t_j,
+        done_ack_j=done_ack_j,
+        done_abk_j=done_abk_j,
+        dt_commit3=dt_commit3,
+        dt_prepare3=dt_prepare3,
+        log_term_j=log_term_j,
+        dt_log=dt_log,
+        ack_t=ack_t,
+        rel_waiter_td=rel_waiter_td,
+        pinned_term=pinned_term,
+        pinned_sub=pinned_sub,
+        pinned_op=pinned_op,
+        win_term=win_term,
+        win_sub=win_sub,
+        win_op=win_op,
+        n_win=n_win,
+        use=use,
+        t_last=t_last,
+        stop_code=stop_code,
     )
-    op_drainable = (s.op_state == OP_ENROUTE) | (s.op_state == OP_EXEC)
-    clean = (
-        ~jnp.any(due_term & (s.phase != T_COMMIT_LOG))
-        & ~jnp.any(due_sub & ~sub_drainable)
-        & ~jnp.any(due_op & ~op_drainable)
-    )
-
-    def windowed(s_: SimState) -> SimState:
-        use, apply = _window_plan(cfg, bank, s_)
-        return jax.lax.cond(use, apply, lambda s2: _step(cfg, bank, s2), s_)
-
-    return jax.lax.cond(clean, windowed, lambda s_: _step(cfg, bank, s_), s)
-
-
-def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
-    """Branchless windowed drain — the lockstep (vmap) hot path.
-
-    Computes the window plan and the branchless single-event `_omni_step`
-    unconditionally and selects per-leaf with one masked `where` — no
-    `lax.switch`/`lax.cond`, whose branches all execute under vmap anyway and
-    pay a full-state select per branch. Lanes whose window is degenerate
-    (< 2 events) fall back to `_omni_step` without diverging, so vmap lanes
-    drain real windows instead of being silently downgraded to `drain=False`.
-    """
-    use, apply = _window_plan(cfg, bank, s)
-    s_win = apply(s)
-    s_one = _omni_step(cfg, bank, s)
-    return jax.tree_util.tree_map(lambda a, b: jnp.where(use, a, b), s_win, s_one)

@@ -286,10 +286,14 @@ class TestRunResult:
 class TestResume:
     @staticmethod
     def _neutral(s, ref):
-        # drained/windows are window-telemetry: a window cut at the first
-        # run's horizon may merge in the uninterrupted run; every other leaf
-        # must stay bitwise-identical (same convention as the drain tests)
-        return s._replace(drained=ref.drained, windows=ref.windows)
+        # drained/windows/win_stops/fused are window-telemetry: a window cut
+        # at the first run's horizon may merge in the uninterrupted run;
+        # every other leaf must stay bitwise-identical (same convention as
+        # the drain tests)
+        return s._replace(
+            drained=ref.drained, windows=ref.windows,
+            win_stops=ref.win_stops, fused=ref.fused,
+        )
 
     @pytest.mark.slow
     def test_resume_continues_bitwise(self):

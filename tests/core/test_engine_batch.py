@@ -51,10 +51,13 @@ def _stepped(cfg, bank, s, n, drain):
 
 
 def _assert_state_bitwise(sa, sb):
-    # `drained`/`windows` are path telemetry; every other leaf (nested
-    # hs/dyn included) must match bitwise
+    # `drained`/`windows`/`win_stops`/`fused` are path telemetry; every other
+    # leaf (nested hs/dyn included) must match bitwise
     fa = jax.tree_util.tree_flatten_with_path(
-        sa._replace(drained=sb.drained, windows=sb.windows)
+        sa._replace(
+            drained=sb.drained, windows=sb.windows,
+            win_stops=sb.win_stops, fused=sb.fused,
+        )
     )[0]
     fb = jax.tree_util.tree_flatten_with_path(sb)[0]
     assert len(fa) == len(fb)
@@ -225,6 +228,64 @@ class TestLockstepBitwise:
         assert prints[True][0]["commits"] > 0
         assert prints[False] == prints[True]
 
+    @pytest.mark.parametrize("preset", ["ssp", "geotp", "chiller"])
+    def test_fused_window_matches_seq_across_presets(self, preset):
+        # PR-5 tentpole: the fused plan+omnibus lockstep pass (lockstep +
+        # drain, ONE straight-line pass per iteration) must stay
+        # bitwise-identical to the seed single-event path for every preset
+        bank = _bank()
+        net = make_net_params(RTT)
+        cfg_l = dataclasses.replace(_cfg(preset), lockstep=True)
+        st_l, m_l = engine.simulate(
+            cfg_l, bank, net.tau_dm, net.tau_ds, jitter_milli=30
+        )
+        st_s, m_s = engine.simulate(
+            _cfg(preset, drain=False), bank, net.tau_dm, net.tau_ds,
+            jitter_milli=30,
+        )
+        assert m_l == m_s
+        assert _fingerprint(st_l, m_l) == _fingerprint(st_s, m_s)
+        assert int(st_l.fused) > 0  # the fused pass actually ran every trip
+        assert int(st_l.drained) > 0  # and real windows applied
+
+    @pytest.mark.slow
+    def test_fused_window_matches_under_aborts(self):
+        # tiny hot keyspace through the FUSED pass: timeouts, abort
+        # fan-outs, waiter releases and retries all take the scalar-row
+        # extras woven into the shared masked pass
+        cfg_w = workloads.YCSBConfig(
+            num_ds=D, records_per_node=4, ops_per_txn=K, dist_ratio=0.8,
+            theta=1.6, seed=1,
+        )
+        bank = workloads.make_ycsb_bank(cfg_w, terminals=T, txns_per_terminal=N)
+        net = make_net_params((5.0, 20.0))
+        prints = {}
+        for mode in ("seq", "fused"):
+            cfg = _cfg("geotp", drain=mode == "fused", horizon_s=6.0)
+            cfg = dataclasses.replace(cfg, lockstep=mode == "fused")
+            st, m = engine.simulate(cfg, bank, net.tau_dm, net.tau_ds)
+            m = {k: v for k, v in m.items() if v == v}  # drop NaN percentiles
+            prints[mode] = _fingerprint(st, m)
+        assert prints["fused"][0]["aborts"] > 0
+        assert prints["seq"] == prints["fused"]
+
+    def test_drain_stats_reports_stops_and_fused(self):
+        bank = _bank()
+        net = make_net_params(RTT)
+        st_m, _ = engine.simulate(
+            _cfg("ssp"), bank, net.tau_dm, net.tau_ds, jitter_milli=30
+        )
+        d = engine.drain_stats(st_m)
+        assert sum(d["window_stops"].values()) == d["windows"] > 0
+        assert d["plan_fused"] is False  # map lanes use the cond-gated plan
+        cfg_l = dataclasses.replace(_cfg("ssp"), lockstep=True)
+        st_l, _ = engine.simulate(
+            cfg_l, bank, net.tau_dm, net.tau_ds, jitter_milli=30
+        )
+        d_l = engine.drain_stats(st_l)
+        assert d_l["plan_fused"] is True
+        assert d_l["window_stops"] == d["window_stops"]  # shared plan
+
     @pytest.mark.slow
     def test_lockstep_matches_under_aborts(self):
         # tiny keyspace + hot skew: lock-wait timeouts, abort fan-outs and
@@ -330,12 +391,17 @@ class TestAllCategoryDrain:
         self._assert_bitwise(drained, seq)
 
     @pytest.mark.slow
-    def test_same_dm_conflict_routes_sequential(self):
+    def test_same_ds_fanins_drain_with_composed_ewma(self):
+        # both fan-ins hit DS 0 at distinct terminals: pre-PR-5 the
+        # one-EWMA-per-DS rule forced the sequential fallback; the unrolled
+        # EWMA chain now composes the two monitor updates exactly, so the
+        # pair drains in one window, still bitwise-equal to stepping
         bank = self._bank2()
-        cfg, s = self._mk_state(ack_d=0, vote_d=0)  # both fan-ins hit DS 0
-        drained = self._steps(cfg, bank, s, 2, drain=True)
+        cfg, s = self._mk_state(ack_d=0, vote_d=0)
+        drained = self._steps(cfg, bank, s, 1, drain=True)
         seq = self._steps(cfg, bank, s, 2, drain=False)
-        assert int(drained.drained) == 0  # conflict mask forced the fallback
+        assert int(drained.drained) == 2
+        assert int(drained.iters) == 2 == int(seq.iters)
         self._assert_bitwise(drained, seq)
 
     def test_txn_completing_ack_routes_sequential(self):
@@ -518,6 +584,181 @@ class TestWindowedDrain:
             prints[drain] = _fingerprint(st, m)
         assert prints[True][0]["aborts"] > 0  # the abort path really ran
         assert prints[False] == prints[True]
+
+
+class TestSlotAccurateFanins:
+    """PR-5 tentpole: DM fan-in stoppers sharpened to slot-accurate
+    read/write sets. Non-triggering fan-ins write only their own
+    (terminal, DS) slot, so any number of them batch per terminal and up to
+    `window.K_EWMA` per data source (composed EWMA chain); a *triggering*
+    fan-in (row write) or a fan-in behind a non-fan-in event of its terminal
+    still stops the window — all bitwise-identical to sequential stepping."""
+
+    T2, K2, D2, N2 = 6, 2, 3, 4
+
+    def _cfg2(self, drain=True):
+        return engine.SimConfig(
+            terminals=self.T2, max_ops=self.K2, num_ds=self.D2,
+            bank_txns=self.N2, proto=protocol.PRESETS["ssp"], warmup_us=0,
+            horizon_us=10_000_000, drain=drain, track_slots=True,
+        )
+
+    def _bank2(self):
+        cfg_w = workloads.YCSBConfig(
+            num_ds=self.D2, records_per_node=64, ops_per_txn=self.K2,
+            dist_ratio=0.5, theta=0.5, seed=0,
+        )
+        return workloads.make_ycsb_bank(
+            cfg_w, terminals=self.T2, txns_per_terminal=self.N2
+        )
+
+    def _base(self):
+        cfg = self._cfg2()
+        net = make_net_params((10.0, 60.0, 100.0))
+        s = engine.init_state(cfg, net.tau_dm, net.tau_ds, jitter_milli=0)
+        return cfg, s._replace(
+            term_time=jnp.full((self.T2,), engine.INF_US, jnp.int32)
+        )
+
+    def _ack(self, s, arrays, t, d, ts):
+        """Queue a commit-ack fan-in for terminal t at DS d due at ts."""
+        inv, sub_state, sub_time, phase = arrays
+        inv[t, d] = True
+        sub_state[t, d] = engine.SUB_ACK
+        sub_time[t, d] = ts
+        phase[t] = engine.T_COMMIT_WAIT
+        return arrays
+
+    def _arrays(self):
+        return (
+            np.zeros((self.T2, self.D2), bool),
+            np.zeros((self.T2, self.D2), np.int8),
+            np.full((self.T2, self.D2), engine.INF_US, np.int32),
+            np.zeros((self.T2,), np.int8),
+        )
+
+    def _pack(self, s, arrays):
+        inv, sub_state, sub_time, phase = arrays
+        return s._replace(
+            inv=jnp.asarray(inv),
+            sub_state=jnp.asarray(sub_state),
+            sub_time=jnp.asarray(sub_time),
+            phase=jnp.asarray(phase),
+        )
+
+    def test_two_fanins_one_terminal_disjoint_slots_drain(self):
+        # terminal 0 awaits acks from all three DS; the acks at DS 0/1 are
+        # due now at distinct timestamps, DS 2 is far out — neither ack
+        # completes, their write sets are disjoint slots, so BOTH drain in
+        # one window (the pre-PR-5 row-exclusive rule stopped at the second)
+        bank = self._bank2()
+        cfg, s = self._base()
+        a = self._arrays()
+        a = self._ack(s, a, 0, 0, 1000)
+        a = self._ack(s, a, 0, 1, 1400)
+        a = self._ack(s, a, 0, 2, 900_000)
+        s = self._pack(s, a)
+        drained = _stepped(cfg, bank, s, 1, True)
+        seq = _stepped(cfg, bank, s, 2, False)
+        assert int(drained.drained) == 2
+        assert int(drained.windows) == 1
+        assert int(drained.now) == 1400 == int(seq.now)
+        _assert_state_bitwise(drained, seq)
+
+    def test_triggering_fanin_still_stops_window(self):
+        # same terminal, but the second ack COMPLETES the transaction (its
+        # row read overlaps every slot and it writes the whole row): it must
+        # stay out of any window and run sequentially
+        bank = self._bank2()
+        cfg, s = self._base()
+        a = self._arrays()
+        a = self._ack(s, a, 0, 0, 1000)
+        a = self._ack(s, a, 0, 1, 1400)
+        s = self._pack(s, a)
+        drained = _stepped(cfg, bank, s, 2, True)
+        seq = _stepped(cfg, bank, s, 2, False)
+        assert int(drained.drained) == 0  # 1-event windows fall back
+        _assert_state_bitwise(drained, seq)
+
+    def test_fanin_behind_nonfan_event_stops_window_with_reason(self):
+        # terminal 1's lone ack batches with terminal 0's DS-side commit
+        # finish, but terminal 0's own ack right after the finish would read
+        # a row the finish just wrote — the window stops there and the
+        # dm_row stop reason is recorded
+        bank = self._bank2()
+        cfg, s = self._base()
+        a = self._arrays()
+        a = self._ack(s, a, 1, 1, 900)
+        a = self._ack(s, a, 0, 1, 1400)
+        a = self._ack(s, a, 1, 2, 800_000)
+        a = self._ack(s, a, 0, 2, 900_000)
+        inv, sub_state, sub_time, phase = a
+        inv[0, 0] = True
+        sub_state[0, 0] = engine.SUB_COMMIT_CMD  # commit arriving at DS 0
+        sub_time[0, 0] = 1000
+        s = self._pack(s, a)
+        drained = _stepped(cfg, bank, s, 1, True)
+        seq = _stepped(cfg, bank, s, 2, False)
+        assert int(drained.drained) == 2  # [ack(1,1), finish(0,0)]
+        assert int(drained.windows) == 1
+        stops = engine.drain_stats(drained)["window_stops"]
+        assert stops["dm_row"] == 1, stops
+        _assert_state_bitwise(drained, seq)
+
+    def test_candidate_budget_splits_long_windows_bitwise(self):
+        # 12 independent non-completing acks (<= K_EWMA per DS column):
+        # the planner's candidate budget caps the first window at PLAN_CAP
+        # events (stop reason `cap`); the remainder drains on the next
+        # iteration, bitwise-identical to 12 sequential steps
+        from repro.core.engine.window import PLAN_CAP
+
+        bank = self._bank2()
+        cfg, s = self._base()
+        a = self._arrays()
+        near = [(0, 0), (0, 1), (1, 0), (1, 1), (2, 0), (2, 2), (3, 0),
+                (3, 2), (4, 1), (4, 2), (5, 1), (5, 2)]
+        for i, (t, d) in enumerate(near):
+            a = self._ack(s, a, t, d, 1000 + 100 * i)
+            far = ({0, 1, 2} - {d2 for t2, d2 in near if t2 == t}).pop()
+            a = self._ack(s, a, t, far, 700_000 + t)
+        s = self._pack(s, a)
+        assert len(near) > PLAN_CAP
+        drained = _stepped(cfg, bank, s, 1, True)
+        assert int(drained.drained) == PLAN_CAP
+        assert int(drained.windows) == 1
+        stops = engine.drain_stats(drained)["window_stops"]
+        assert stops["cap"] == 1, stops
+        drained = _stepped(cfg, bank, drained, 1, True)
+        assert int(drained.drained) == len(near)
+        assert int(drained.windows) == 2
+        seq = s
+        for n in (2, 2, 2, 2, 2, 2):
+            seq = _stepped(cfg, bank, seq, n, False)
+        _assert_state_bitwise(drained, seq)
+
+    def test_ewma_column_cap_stops_window(self):
+        # K_EWMA+1 non-completing acks on ONE data source: the unrolled EWMA
+        # chain composes the first K_EWMA exactly; the next same-column
+        # fan-in stops the window (dm_col) and runs on the next iteration
+        from repro.core.engine.window import K_EWMA
+
+        bank = self._bank2()
+        cfg, s = self._base()
+        a = self._arrays()
+        for t in range(K_EWMA + 1):
+            a = self._ack(s, a, t, 0, 1000 + 100 * t)
+            a = self._ack(s, a, t, 1, 700_000 + t)  # keeps the fan-in partial
+        s = self._pack(s, a)
+        drained = _stepped(cfg, bank, s, 1, True)
+        assert int(drained.drained) == K_EWMA
+        assert int(drained.windows) == 1
+        stops = engine.drain_stats(drained)["window_stops"]
+        assert stops["dm_col"] == 1, stops
+        drained = _stepped(cfg, bank, drained, 1, True)
+        seq = s
+        for n in (2, 2, 1):
+            seq = _stepped(cfg, bank, seq, n, False)
+        _assert_state_bitwise(drained, seq)
 
 
 class TestWorldSpec:
