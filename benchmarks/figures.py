@@ -313,6 +313,45 @@ def fig15_multiregion(quick=True):
     return out
 
 
+def fig16_faults(quick=True):
+    """Fault sweep: GeoTP vs coordinated-prepare (SSP) under deterministic
+    data-source crashes — availability, abort-cause breakdown and goodput
+    during outages, against a fault-free control with the same (all-pad)
+    schedule shape."""
+    out = []
+    horizon_s = 8.0 if quick else 20.0
+    bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.2)
+    # two full crash/recovery cycles inside the horizon (us timestamps)
+    crashes = ((2_000_000, 0, 4_000_000), (5_000_000, 2, 6_500_000))
+    clean = ((engine.INF_US, 0, engine.INF_US),) * len(crashes)
+    cells = []
+    for label, sched in (("crashes", crashes), ("fault-free", clean)):
+        for preset in ("ssp", "geotp"):
+            cells.append(dict(preset=preset, faults=sched, schedule=label))
+    res = run_sweep(
+        "fig16", cells, bank, QUICK_T, horizon_s=horizon_s, warmup_s=1.0
+    )
+    for i, (c, m) in enumerate(zip(cells, res.metrics)):
+        d = engine.drain_stats(res.world(i), horizon_us=res.cfg.horizon_us)
+        out.append(
+            dict(
+                schedule=c["schedule"],
+                availability=d["availability"],
+                abort_causes=d["abort_causes"],
+                commits_during_fault=d["commits_during_fault"],
+                **m,
+            )
+        )
+        print(
+            summary_line(f"fig16 {c['schedule']} {c['preset']}", m)
+            + f" avail={d['availability']:.4f}"
+            f" crash_aborts={d['abort_causes']['crash']}"
+            f" goodput_in_fault={d['commits_during_fault']}"
+        )
+    save("fig16_faults", out)
+    return out
+
+
 ALL_FIGURES = [
     fig1_motivation,
     fig5_overall,
@@ -326,4 +365,5 @@ ALL_FIGURES = [
     fig13_yugabyte,
     fig14_txn_length,
     fig15_multiregion,
+    fig16_faults,
 ]

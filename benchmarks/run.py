@@ -8,10 +8,13 @@ once per batching strategy — "map" (sequential lanes + windowed drain) and
 "vmap" (lockstep lanes, branchless windowed drain) — records events/sec,
 drain hit rate, mean window length and while-loop trip count per strategy
 into results/bench/BENCH_engine.json, compares against the seed engine
-(single-event stepping, one compile per grid cell), and acts as a guard:
-it fails if map events/sec drops more than 30% below the stored baseline,
-or if the vmap path reports a zero drain hit rate (the silent
-drain-disabled downgrade this telemetry used to hide).
+(single-event stepping, one compile per grid cell), runs a crash-heavy
+fault schedule to completion (recording availability / abort-cause /
+goodput-during-fault telemetry), and acts as a guard: it fails if map
+events/sec drops more than 30% below the stored baseline, if the vmap path
+reports a zero drain hit rate (the silent drain-disabled downgrade this
+telemetry used to hide), or if the fault schedule fails to inject real
+downtime or to recover.
 """
 
 from __future__ import annotations
@@ -107,6 +110,28 @@ def validate(results_dir="results/bench") -> list:
             g3 = by[3]["geotp"]["throughput_tps"] / max(by[3]["ssp"]["throughput_tps"], 1e-9)
             add("fig14: GeoTP advantage persists with interactive rounds", g3 > 1.0, f"3-round ratio={g3:.2f}")
 
+    fig16 = load("fig16_faults")
+    if fig16:
+        faulted = {r["preset"]: r for r in fig16 if r["schedule"] == "crashes"}
+        clean = {r["preset"]: r for r in fig16 if r["schedule"] == "fault-free"}
+        if faulted and clean:
+            add("fig16: injected outages show up in availability",
+                all(r["availability"] < 1.0 for r in faulted.values())
+                and all(r["availability"] == 1.0 for r in clean.values()),
+                {k: round(v["availability"], 4) for k, v in faulted.items()})
+            add("fig16: crash-cause aborts only under the crash schedule",
+                all(r["abort_causes"]["crash"] > 0 for r in faulted.values())
+                and all(r["abort_causes"]["crash"] == 0 for r in clean.values()),
+                {k: v["abort_causes"]["crash"] for k, v in faulted.items()})
+            add("fig16: service survives the outages (commits on every cell)",
+                all(r["commits"] > 0 for r in faulted.values()),
+                {k: v["commits"] for k, v in faulted.items()})
+            if "geotp" in faulted and "ssp" in faulted:
+                add("fig16: GeoTP >= SSP throughput under crashes",
+                    faulted["geotp"]["throughput_tps"]
+                    >= faulted["ssp"]["throughput_tps"],
+                    {k: round(v["throughput_tps"]) for k, v in faulted.items()})
+
     t1 = load("table1_heterogeneous")
     if t1:
         oks = []
@@ -132,6 +157,9 @@ SMOKE_HORIZON_S = 2.5
 SMOKE_WARMUP_S = 0.5
 SMOKE_REGRESSION_FRAC = 0.7  # fail below 70% of the stored baseline...
 SMOKE_MIN_SPEEDUP = 3.0  # ...unless the same-run speedup-vs-seed still holds
+# crash-heavy fault-injection smoke: two full crash/recovery cycles inside
+# the smoke horizon ((t_crash_us, ds, t_recover_us) rows, paper 4-DS layout)
+SMOKE_FAULTS = ((500_000, 0, 1_000_000), (1_200_000, 2, 1_900_000))
 
 
 def smoke() -> int:
@@ -244,6 +272,28 @@ def smoke() -> int:
         f"(incl compile) -> {eps_seed:.0f} events/sec; batched speedup {speedup:.1f}x"
     )
 
+    # crash-heavy fault schedule: the injected outages must run to
+    # completion (recoveries re-admit, terminals keep committing) and report
+    # real downtime through the availability telemetry
+    t0 = time.time()
+    res_f = common.run_sweep(
+        "smoke_faults",
+        [dict(preset=p, seed=0, faults=SMOKE_FAULTS) for p in ("ssp", "geotp")],
+        banks[0],
+        SMOKE_T,
+        horizon_s=SMOKE_HORIZON_S,
+        warmup_s=SMOKE_WARMUP_S,
+        strategy="map",
+    )
+    wall_fault = time.time() - t0
+    d_fault = res_f.drain
+    print(
+        f"[smoke] faults: {len(res_f)} worlds, availability "
+        f"{d_fault['availability']:.4f}, crash aborts "
+        f"{d_fault['abort_causes']['crash']}, commits during fault "
+        f"{d_fault['commits_during_fault']}, {wall_fault:.1f}s (incl compile)"
+    )
+
     bench = common.load_bench()
     prior = bench.get("smoke", {}).get("events_per_sec_batched")
     prior_mwl = bench.get("smoke", {}).get("mean_window_len")
@@ -266,8 +316,29 @@ def smoke() -> int:
         "loop_iters_vmap": drain["vmap"]["loop_iters"],
         "events_per_sec_seed": round(eps_seed, 1),
         "speedup_vs_seed": round(speedup, 2),
+        "availability_fault": d_fault["availability"],
+        "abort_causes_fault": d_fault["abort_causes"],
+        "commits_during_fault": d_fault["commits_during_fault"],
+        "wall_fault_s": round(wall_fault, 2),
         "total_wall_s": round(time.time() - t_all, 2),
     }
+    if not 0.0 < d_fault["availability"] < 1.0 or any(
+        m["commits"] == 0 for m in res_f.metrics
+    ):
+        # the schedule keeps both DSs down for a known 1.2s of the 2.5s
+        # horizon: availability must reflect it and service must survive it
+        print(
+            f"[smoke] FAULT REGRESSION: crash-heavy schedule reported "
+            f"availability={d_fault['availability']} and commits="
+            f"{[m['commits'] for m in res_f.metrics]} — outages not "
+            f"injected or recovery failed to re-admit"
+        )
+        if prior is not None:
+            entry["events_per_sec_batched"] = prior
+        if prior_mwl is not None:
+            entry["mean_window_len"] = prior_mwl
+        common.record_smoke(entry)
+        return 1
     if prior_mwl is not None and entry["mean_window_len"] < prior_mwl - 1e-9:
         # window-length ratchet: the grid and stoppers are deterministic, so
         # a shorter mean window means the stoppers got coarser, not host

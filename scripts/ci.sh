@@ -20,9 +20,11 @@
 # plan+omnibus windowed drain) path reports a real (> 0) drain hit rate —
 # lockstep lanes must never silently run with draining disabled again —
 # that map throughput has not dropped >30% below the baseline stored in
-# results/bench/BENCH_engine.json, and that the mean window length has not
+# results/bench/BENCH_engine.json, that the mean window length has not
 # regressed below its stored baseline (the slot-accurate stoppers must not
-# silently coarsen back). Guard semantics: docs/benchmarks.md.
+# silently coarsen back), and that a crash-heavy fault schedule runs to
+# completion with real availability loss recorded into the bench JSON.
+# Guard semantics: docs/benchmarks.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -89,6 +91,10 @@ grep -q "vmap/map events/sec ratio" /tmp/smoke.out || {
 }
 grep -Eq "drain hit rate map: [0-9.]+%, vmap: [0-9.]+%" /tmp/smoke.out || {
     echo "[ci] smoke did not report per-strategy drain hit rates"
+    exit 1
+}
+grep -Eq "\[smoke\] faults: .*availability 0\.[0-9]+" /tmp/smoke.out || {
+    echo "[ci] smoke did not run the crash-heavy fault schedule"
     exit 1
 }
 echo "[ci] OK"

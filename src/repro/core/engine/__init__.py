@@ -7,7 +7,9 @@ state machine and decomposed into a package:
                  DynProto) and the shared scalar helpers
     handlers.py  sequential per-event semantics: lock tables, hotspot,
                  DM protocol progress, the 12 fused event handlers
-    step.py      seed-reference step (single event, 12-way lax.switch)
+    faults.py    deterministic fault injection: DS crash cascade, recovery,
+                 heartbeat probes (shared verbatim by all four step modes)
+    step.py      seed-reference step (single event, 12/14-way lax.switch)
     omni.py      branchless omnibus step (lockstep/vmap single-event path)
     window.py    windowed-drain planner (candidate ranks, stoppers, prefix)
     apply.py     masked window application + the map-lane drain step
@@ -78,6 +80,13 @@ from repro.core.engine.state import (
     LK_FREE,
     LK_SHARED,
     LK_X,
+    # abort causes
+    CAUSE_NONE,
+    CAUSE_TIMEOUT,
+    CAUSE_ADMISSION,
+    CAUSE_CRASH,
+    CAUSE_EXHAUSTED,
+    ABORT_CAUSES,
     HIST_BINS,
     INF_US,
     DynProto,
@@ -88,6 +97,7 @@ from repro.core.engine.state import (
     init_state,
     init_state_world,
     make_world,
+    pad_faults,
     stack_worlds,
     _HIST_BASE_US,
     _SALT_MUL,
@@ -108,6 +118,7 @@ from repro.core.engine.handlers import (
     _dm_progress,
     _initiate_abort,
 )
+from repro.core.engine.faults import _fault_event, _hb_event
 from repro.core.engine.step import _step
 from repro.core.engine.omni import _omni_step
 from repro.core.engine.apply import _apply_window, _drain_step

@@ -4,7 +4,7 @@ The three documented entry points of the engine package:
 
 * **`Grid`** — a declarative sweep: a validated list of cells (dicts over the
   engine axes `preset` / `rtt_ms` / `tau_true_us` / `jitter_milli` /
-  `exec_scale_milli` / `seed`, plus free-form labels) with optional per-cell
+  `exec_scale_milli` / `seed` / `faults`, plus free-form labels) with optional per-cell
   Banks. Build from raw cells (`Grid(cells)`), a cross product
   (`Grid.cross(...)`) or zipped axes (`Grid.zipped(...)`). Every cell is
   validated at construction — heterogeneous `num_ds`, unknown presets and
@@ -45,10 +45,19 @@ from repro.core.protocol import PRESETS, ProtocolConfig
 
 from repro.core.engine.batch import _run_jit, _sim_world_fresh, simulate_batch
 from repro.core.engine.metrics import drain_stats, summarize, world_index
-from repro.core.engine.state import SimConfig, WorldSpec, make_world, stack_worlds
+from repro.core.engine.state import (
+    INF_US,
+    SimConfig,
+    WorldSpec,
+    make_world,
+    stack_worlds,
+)
 
 # engine-owned axes a Grid cell may set; everything else is a free-form label
-GRID_AXES = ("preset", "rtt_ms", "tau_true_us", "jitter_milli", "exec_scale_milli", "seed")
+GRID_AXES = (
+    "preset", "rtt_ms", "tau_true_us", "jitter_milli", "exec_scale_milli",
+    "seed", "faults",
+)
 # axes whose single value is itself a sequence (one entry per data source)
 _VECTOR_AXES = ("rtt_ms", "tau_true_us", "exec_scale_milli")
 
@@ -115,9 +124,55 @@ def _cell_num_ds(cell: dict, default_rtt_ms) -> int:
     return len(rtt if rtt is not None else default_rtt_ms)
 
 
+def _validate_cell_faults(i: int, val, num_ds: int) -> tuple:
+    """Normalize + validate one cell's fault schedule at Grid construction.
+
+    Returns the schedule as a tuple of (t_crash_us, ds, t_recover_us) int
+    triples. Pad rows (crash >= INF_US) are kept but skipped by the semantic
+    checks. Raises ValueError with the offending cell index for malformed
+    rows, out-of-range DS indices, recover-before-crash, or overlapping
+    crash intervals on one data source.
+    """
+    if not isinstance(val, (list, tuple)):
+        raise ValueError(
+            f"Grid cell {i}: faults must be a sequence of "
+            f"(t_crash_us, ds, t_recover_us) triples, got {type(val).__name__}"
+        )
+    rows = []
+    live = {}  # ds -> list of ((crash, recover), row index)
+    for j, r in enumerate(val):
+        if not isinstance(r, (list, tuple)) or len(r) != 3:
+            raise ValueError(
+                f"Grid cell {i}: faults row {j} must be a "
+                f"(t_crash_us, ds, t_recover_us) triple, got {r!r}"
+            )
+        crash, ds, rec = (int(x) for x in r)
+        rows.append((crash, ds, rec))
+        if crash >= INF_US:
+            continue  # pad row — never fires inside the horizon
+        if not 0 <= ds < num_ds:
+            raise ValueError(
+                f"Grid cell {i}: faults row {j} targets ds={ds}, out of "
+                f"range for num_ds={num_ds}"
+            )
+        if rec <= crash:
+            raise ValueError(
+                f"Grid cell {i}: faults row {j} recovers at {rec}us, which "
+                f"is not after its crash at {crash}us"
+            )
+        for (c0, r0), j0 in live.get(ds, ()):
+            if crash < r0 and c0 < rec:
+                raise ValueError(
+                    f"Grid cell {i}: faults rows {j0} and {j} overlap on "
+                    f"ds={ds} ([{c0}, {r0}) vs [{crash}, {rec}) us)"
+                )
+        live.setdefault(ds, []).append(((crash, rec), j))
+    return tuple(rows)
+
+
 # axes dropped from tabulated rows (per-DS arrays don't tabulate; rtt_ms is
 # kept — figures label cells by it)
-_NON_LABEL_AXES = ("tau_true_us", "exec_scale_milli")
+_NON_LABEL_AXES = ("tau_true_us", "exec_scale_milli", "faults")
 
 
 def _row_labels(cell: dict) -> dict:
@@ -139,8 +194,15 @@ class Grid:
     `cells` is a list of dicts. Required key: ``preset`` (a name from
     `protocol.PRESETS` or a `ProtocolConfig`). Optional engine axes:
     ``rtt_ms``, ``tau_true_us``, ``jitter_milli``, ``exec_scale_milli``,
-    ``seed``. Any other key is a free-form label carried into
+    ``seed``, ``faults``. Any other key is a free-form label carried into
     `RunResult.rows()` (figure axes like ``theta`` or ``level``).
+
+    ``faults`` is a deterministic crash schedule: a sequence of
+    ``(t_crash_us, ds, t_recover_us)`` triples (pad rows: ``(INF_US, 0,
+    INF_US)``). Schedules are validated at construction (DS index range,
+    recover after crash, no overlapping outages per DS) and must have the
+    same row count in every cell — the schedule is a static engine axis
+    (`SimConfig.max_faults`), derived per grid by the `Simulator`.
 
     NOTE: an unset ``jitter_milli`` defaults to **30** (±3% one-way jitter —
     the historical `run_sweep` cell default, kept for baseline
@@ -203,6 +265,32 @@ class Grid:
                     f" differs from cell 0's num_ds={self.num_ds} — "
                     "heterogeneous grids must be split into separate sweeps"
                 )
+            if c.get("faults") is not None:
+                c["faults"] = _validate_cell_faults(i, c["faults"], self.num_ds)
+        # the fault axis is static-shaped: every cell must carry the same
+        # number of schedule rows (F) so the worlds stack into one batch
+        fault_cells = [i for i, c in enumerate(cells) if c.get("faults") is not None]
+        if fault_cells:
+            i0 = fault_cells[0]
+            self.max_faults = len(cells[i0]["faults"])
+            for i, c in enumerate(cells):
+                f = c.get("faults")
+                if f is None:
+                    raise ValueError(
+                        f"Grid cell {i}: no fault schedule, but cell {i0} "
+                        f"has {self.max_faults} rows — fault schedules are a "
+                        "static axis; give every cell a schedule (pad "
+                        "fault-free cells with (INF_US, 0, INF_US) rows)"
+                    )
+                if len(f) != self.max_faults:
+                    raise ValueError(
+                        f"Grid cell {i}: fault schedule has {len(f)} rows "
+                        f"but cell {i0} has {self.max_faults} — pad shorter "
+                        "schedules with (INF_US, 0, INF_US) rows so every "
+                        "cell shares one static shape"
+                    )
+        else:
+            self.max_faults = 0
         if self.banks is not None:
             if len(self.banks) != len(cells):
                 raise ValueError(
@@ -224,13 +312,23 @@ class Grid:
     def _axis_values(key: str, val) -> list:
         """One axis -> list of per-cell values. Strings and scalars are a
         single value; for the vector axes (rtt_ms, ...) a flat sequence of
-        numbers is ONE value, a sequence of sequences is a swept axis."""
+        numbers is ONE value, a sequence of sequences is a swept axis. For
+        ``faults`` a sequence of (crash, ds, recover) triples is ONE
+        schedule; a sequence of such schedules sweeps the axis."""
         if val is None:
             return [None]
         if isinstance(val, (str, ProtocolConfig)):
             return [val]
         if not isinstance(val, (list, tuple)):
             return [val]  # scalar
+        if key == "faults":
+            # one schedule is depth-2 (rows of numbers); a sweep is depth-3
+            if len(val) > 0 and isinstance(val[0], (list, tuple)) and (
+                len(val[0]) > 0 and isinstance(val[0][0], (list, tuple))
+            ):
+                return [tuple(tuple(r) for r in sched) for sched in val]
+            return [tuple(tuple(r) if isinstance(r, (list, tuple)) else r
+                          for r in val)]
         if key in _VECTOR_AXES:
             if len(val) > 0 and isinstance(val[0], (list, tuple)):
                 return list(val)
@@ -291,6 +389,8 @@ class Grid:
             jitter_milli=c.get("jitter_milli", 30),
             exec_scale_milli=c.get("exec_scale_milli"),
             seed=c.get("seed", 0),
+            faults=c.get("faults"),
+            max_faults=self.max_faults,
         )
 
     def worlds(self) -> WorldSpec:
@@ -338,8 +438,11 @@ class RunResult:
     >>> res.world(1).now.ndim  # one cell's final SimState
     0
     >>> sorted(res.drain)  # doctest: +NORMALIZE_WHITESPACE
-    ['drain_hit_rate', 'drained_events', 'events', 'loop_iters',
+    ['abort_causes', 'availability', 'commits_during_fault',
+     'drain_hit_rate', 'drained_events', 'events', 'loop_iters',
      'mean_window_len', 'plan_fused', 'seq_events', 'window_stops', 'windows']
+    >>> res.drain["availability"]  # fault-free run: every DS up throughout
+    1.0
     """
 
     cfg: SimConfig
@@ -363,8 +466,12 @@ class RunResult:
 
     @property
     def drain(self) -> dict:
-        """Windowed-drain telemetry aggregated over every cell."""
-        return drain_stats(self.states)
+        """Windowed-drain + fault telemetry aggregated over every cell.
+
+        Passes the run horizon so `availability` charges a DS still down at
+        the end for its open outage up to the horizon, not just to the last
+        processed event."""
+        return drain_stats(self.states, horizon_us=self.cfg.horizon_us)
 
     def world(self, i: int):
         """Final SimState of cell i."""
@@ -393,8 +500,10 @@ class RunResult:
         Writes the exact legacy schema (worlds/terminals/events/wall_s/
         events_per_sec/strategy/horizon_s + drain telemetry) so stored
         baselines and the smoke-guard comparisons keep working, plus the jax
-        runtime environment keys, the per-stopper window-termination counts
-        and whether the fused lockstep plan ran (see docs/benchmarks.md).
+        runtime environment keys, the per-stopper window-termination counts,
+        whether the fused lockstep plan ran, and the fault telemetry
+        (availability / abort-cause breakdown / commits during outages — see
+        docs/benchmarks.md).
         """
         d = self.drain
         entry = {
@@ -410,6 +519,9 @@ class RunResult:
             "loop_iters": d["loop_iters"],
             "window_stops": d["window_stops"],
             "plan_fused": d["plan_fused"],
+            "availability": d["availability"],
+            "abort_causes": d["abort_causes"],
+            "commits_during_fault": d["commits_during_fault"],
         }
         return record_bench(tag, entry, path)
 
@@ -505,19 +617,29 @@ class Simulator:
                 f"bank.num_ds={bank.num_ds} != Simulator num_ds={self.cfg.num_ds}"
             )
 
+    def _cfg_for(self, faults) -> SimConfig:
+        """The static config for one run: `max_faults` follows the worlds'
+        schedule shape ([..., F, 3]), so fault-free runs compile the exact
+        tail-free program and fault runs recompile once per distinct F."""
+        F = int(faults.shape[-2])
+        if F == self.cfg.max_faults:
+            return self.cfg
+        return dataclasses.replace(self.cfg, max_faults=F)
+
     # ---- entry points -----------------------------------------------------
 
     def run(self, world: WorldSpec, bank, *, labels: dict | None = None) -> RunResult:
         """Run ONE world (fused init+run, the scalar map-style path)."""
         self._check_bank(bank, batched=False)
+        cfg = self._cfg_for(world.faults)
         t0 = time.time()
-        states = _sim_world_fresh(self.cfg, bank, world)
+        states = _sim_world_fresh(cfg, bank, world)
         states = jax.block_until_ready(states)
         wall = time.time() - t0
-        m = summarize(self.cfg, states)
+        m = summarize(cfg, states)
         assert m["noops"] == 0, ("noop event fired", m["noops"])
         return RunResult(
-            cfg=self.cfg,
+            cfg=cfg,
             states=states,
             metrics=[m],
             cells=[dict(labels or {})],
@@ -548,15 +670,16 @@ class Simulator:
             bank_batched = False
         self._check_bank(bank, batched=bank_batched)
         worlds = grid.worlds()
+        cfg = self._cfg_for(worlds.faults)
         t0 = time.time()
         states, metrics = simulate_batch(
-            self.cfg, bank, worlds, bank_batched=bank_batched, strategy=strategy
+            cfg, bank, worlds, bank_batched=bank_batched, strategy=strategy
         )
         wall = time.time() - t0
         for i, m in enumerate(metrics):
             assert m["noops"] == 0, (f"grid cell {i}", grid.cells[i], m["noops"])
         return RunResult(
-            cfg=self.cfg,
+            cfg=cfg,
             states=states,
             metrics=metrics,
             cells=[dict(c) for c in grid.cells],

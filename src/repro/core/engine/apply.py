@@ -192,6 +192,10 @@ def _apply_window(
     # composes them exactly; tau_est is never read inside a window — the only
     # readers, txn starts and round advances, are non-drainable) ------------
     cnt_d = jnp.sum(dm_mask, axis=0, dtype=i32)  # [D]
+    if s_.fault_time.shape[0]:
+        # monitor frozen while a DS is down (mirrors the sequential gate);
+        # ds_down cannot change inside a window — fault events are pinned
+        cnt_d = jnp.where(s_.ds_down, 0, cnt_d)
     tau_est = s_.tau_est
     for i in range(K_EWMA):
         tau_est = jnp.where(
@@ -316,11 +320,17 @@ def _drainable_due(s: SimState) -> jax.Array:
         | (sst == SUB_ABORT_ACK)
     )
     op_drainable = (s.op_state == OP_ENROUTE) | (s.op_state == OP_EXEC)
-    return (
+    clean = (
         ~jnp.any(due_term & (s.phase != T_COMMIT_LOG))
         & ~jnp.any(due_sub & ~sub_drainable)
         & ~jnp.any(due_op & ~op_drainable)
     )
+    if s.fault_time.shape[0]:
+        # a due crash/recovery or heartbeat always takes the sequential step
+        clean = clean & ~jnp.any(s.fault_time == t_now) & ~jnp.any(
+            s.hb_time == t_now
+        )
+    return clean
 
 
 def _drain_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
@@ -330,7 +340,8 @@ def _drain_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     Cheap pre-checks route to the windowed masked pass only when every event
     due at the minimum timestamp belongs to a drainable category; txn starts
     (admission + hot-table claims), lock-wait timeouts (abort fan-out through
-    the grant machinery) and unexpected states always take the sequential
+    the grant machinery), fault-injection events (crash/recovery cascades,
+    heartbeat probes) and unexpected states always take the sequential
     single-event step, as does any window the prefix scan cuts below two
     events. Bitwise-identical to `_step` (`drain=False`); the windowed-drain
     telemetry (`SimState.drained/windows/win_stops`) is the only divergence.

@@ -68,10 +68,18 @@ def simulate(
     jitter_milli: int = 0,
     exec_scale_milli=None,
     state: SimState | None = None,
+    faults=None,
 ):
-    """Convenience wrapper: init (or continue) + run + summarize."""
+    """Convenience wrapper: init (or continue) + run + summarize.
+
+    `faults` is a [cfg.max_faults, 3] crash schedule (see `state.pad_faults`);
+    only meaningful on fresh runs of a fault-carrying config.
+    """
     if state is None:
-        state = init_state(cfg, tau_true_us, tau_ds_us, jitter_milli, exec_scale_milli)
+        state = init_state(
+            cfg, tau_true_us, tau_ds_us, jitter_milli, exec_scale_milli,
+            faults=faults,
+        )
     state = _run_jit(cfg, bank, state)
     return state, summarize(cfg, state)
 

@@ -1,0 +1,217 @@
+"""Deterministic fault injection: data-source crash / recovery / heartbeat.
+
+Fault events live in a per-world schedule (``WorldSpec.faults``, padded to
+``SimConfig.max_faults`` rows of ``(t_crash_us, ds, t_recover_us)``) and fire
+as first-class events from the ``_times_flat`` tail sections. The masked
+event bodies below are shared verbatim by all four step modes — `step._step`
+dispatches them as switch branches, `omni._omni_step` and
+`fused._omni_window` run them as identity-when-off sections at the very end
+of their passes — so faulted runs stay bitwise-identical across modes by
+construction. A fault-free config (``max_faults == 0``) compiles none of
+this: the tail sections, and every call site, are gated on the static fault
+count.
+
+The crash event doubles as the failure-detection point: the middleware
+learns of the outage at the crash timestamp (a deterministic stand-in for a
+detection delay — fold one into the schedule by shifting ``t_crash_us`` if
+needed), and the heartbeat probes model the liveness checks it keeps sending
+until the data source recovers.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hotspot as hs_mod
+from repro.core.netmodel import INF_US
+
+from repro.core.engine.state import (
+    CAUSE_CRASH,
+    OP_NONE,
+    OP_DONE,
+    SUB_PREP_CMD,
+    SUB_PREPARING,
+    SUB_COMMIT_CMD,
+    SUB_ACK,
+    SUB_LOCAL_COMMIT,
+    SUB_DONE,
+    SUB_ABORT_PEER,
+    SUB_ABORT_ACK,
+    SUB_ABORTED,
+    T_ACTIVE,
+    T_COMMIT_LOG,
+    T_ABORT_WAIT,
+    SimConfig,
+    SimState,
+    _delay_salted,
+    _salt,
+)
+
+
+def _fault_event(cfg: SimConfig, s: SimState, f, active) -> SimState:
+    """Fault-schedule row f fires (identity when ``active`` is False).
+
+    Stage 0 — the crash: mark the DS down and freeze the latency monitor's
+    input, crash-abort every engaged transaction with undecided work there
+    (peers route through the ordinary SUB_ABORT_PEER machinery, which
+    releases locks and FIFO-regrants waiters at the surviving data sources),
+    wipe the victims' ops at the dead DS (the op-derived lock state there
+    empties — every waiter at the dead DS belongs to a victim), defer
+    already-decided commands addressed to the dead DS until recovery, and arm
+    the heartbeat probe. Stage 1 — the recovery: re-admit traffic (deferred
+    commands fire at the recovery timestamp) and disarm the probe.
+    """
+    T, D = cfg.terminals, cfg.num_ds
+    d = s.fault_ds[f]
+    crash = active & (s.fault_stage[f] == 0)
+    recover = active & (s.fault_stage[f] == 1)
+    rec_t = s.fault_recover[f]
+
+    # schedule-row + liveness bookkeeping (row f advances crash -> recover)
+    s = s._replace(
+        fault_stage=s.fault_stage.at[f].set(
+            jnp.where(crash, 1, jnp.where(recover, 2, s.fault_stage[f])).astype(
+                jnp.int8
+            )
+        ),
+        fault_time=s.fault_time.at[f].set(
+            jnp.where(crash, rec_t, jnp.where(recover, INF_US, s.fault_time[f]))
+        ),
+        ds_down=s.ds_down.at[d].set(
+            jnp.where(crash, True, jnp.where(recover, False, s.ds_down[d]))
+        ),
+        down_since=s.down_since.at[d].set(
+            jnp.where(crash, s.now, s.down_since[d])
+        ),
+        down_us=s.down_us.at[d].add(
+            jnp.where(recover, s.now - s.down_since[d], 0)
+        ),
+        hb_time=s.hb_time.at[d].set(
+            jnp.where(
+                crash,
+                s.now + s.dyn.hb_interval_us,
+                jnp.where(recover, INF_US, s.hb_time[d]),
+            )
+        ),
+    )
+
+    # ---- crash cascade ----------------------------------------------------
+    # victims: engaged transactions whose subtxn at d has not reached the
+    # commit decision and is not already aborting. Post-decision rows keep
+    # their locks; their DS-side commands are deferred to recovery below.
+    std = s.sub_state[:, d]
+    post = (
+        (std == SUB_COMMIT_CMD)
+        | (std == SUB_ACK)
+        | (std == SUB_LOCAL_COMMIT)
+        | (std == SUB_DONE)
+    )
+    abortf_d = (
+        (std == SUB_ABORT_PEER) | (std == SUB_ABORT_ACK) | (std == SUB_ABORTED)
+    )
+    engaged = (s.phase == T_ACTIVE) | (s.phase == T_COMMIT_LOG)
+    victim = crash & s.inv[:, d] & engaged & ~post & ~abortf_d  # [T]
+
+    # wipe the victims' ops at the dead DS (state is op-derived, so this IS
+    # the lock release there; no grants — every waiter at d is a victim too)
+    op_at_d = (s.op_state != OP_NONE) & (s.op_ds == d.astype(s.op_ds.dtype))
+    wipe = victim[:, None] & op_at_d
+    s = s._replace(
+        op_state=jnp.where(wipe, OP_DONE, s.op_state).astype(jnp.int8),
+        op_time=jnp.where(wipe, INF_US, s.op_time),
+    )
+
+    # hot-table bookkeeping for the wiped footprint: a_cnt -> t_cnt like
+    # `_hs_complete_ds(committed=False)`, but WITHOUT the Eq.(4) w_lat update
+    # — a crash-truncated span is not a latency observation (monitor freeze)
+    keys_flat = s.op_key.reshape(-1)
+    wipe_flat = wipe.reshape(-1)
+    slot, found = hs_mod.lookup_slots(s.hs.slot_key, keys_flat, wipe_flat)
+    upd = found.astype(jnp.int32)
+    hs = s.hs
+    hs = hs._replace(
+        a_cnt=jnp.maximum(hs.a_cnt.at[slot].add(-upd), 0),
+        t_cnt=hs.t_cnt.at[slot].add(upd),
+    )
+    s = s._replace(hs=hs)
+
+    # peer-abort fan-out, vectorized over victims (mirrors `_initiate_abort`:
+    # direct DS<->DS notify under early_abort, else routed through the DM;
+    # the co-located geo-agent acks the dead DS's own slot)
+    ids = jnp.arange(D, dtype=jnp.int32)
+    tids = jnp.arange(T, dtype=jnp.int32)
+    sa = _salt(s, 59) + tids[:, None] * jnp.int32(D) + ids[None, :]  # [T,D]
+    notify_direct = _delay_salted(s.jitter_milli, s.tau_ds[d][None, :], sa)
+    to_dm = _delay_salted(s.jitter_milli, s.tau_true[d], _salt(s, 61) + tids)
+    notify_dm = to_dm[:, None] + _delay_salted(
+        s.jitter_milli, s.tau_true[None, :], sa
+    )
+    notify = jnp.where(s.dyn.early_abort, notify_direct, notify_dm)  # [T,D]
+    own_ack = s.now + _delay_salted(
+        s.jitter_milli, s.tau_true[d], _salt(s, 67) + tids
+    )  # [T]
+
+    at_d = ids[None, :] == d  # [1,D] -> broadcasts over [T,D]
+    abortf = (
+        (s.sub_state == SUB_ABORT_PEER)
+        | (s.sub_state == SUB_ABORT_ACK)
+        | (s.sub_state == SUB_ABORTED)
+    )
+    peers = victim[:, None] & s.inv & ~at_d & ~abortf
+    own = victim[:, None] & at_d
+    new_sub = jnp.where(
+        peers, SUB_ABORT_PEER, jnp.where(own, SUB_ABORT_ACK, s.sub_state)
+    )
+    new_tm = jnp.where(
+        peers, s.now + notify, jnp.where(own, own_ack[:, None], s.sub_time)
+    )
+
+    # defer DS-side commands addressed to the dead DS until it recovers
+    # (commit/apply/prepare/abort commands can only pre-exist the crash —
+    # nothing new is dispatched to a down DS: starts fail fast, undecided
+    # work was just aborted)
+    ds_side = (
+        (std == SUB_COMMIT_CMD)
+        | (std == SUB_LOCAL_COMMIT)
+        | (std == SUB_PREP_CMD)
+        | (std == SUB_PREPARING)
+        | (std == SUB_ABORT_PEER)
+    )
+    defer = crash & ds_side & ~victim  # [T]
+    new_tm = jnp.where(
+        defer[:, None] & at_d, jnp.maximum(new_tm, rec_t), new_tm
+    )
+
+    return s._replace(
+        sub_state=new_sub.astype(jnp.int8),
+        sub_time=new_tm,
+        phase=jnp.where(victim, T_ABORT_WAIT, s.phase).astype(jnp.int8),
+        term_time=jnp.where(victim, INF_US, s.term_time),
+        abort_cause=jnp.where(victim, CAUSE_CRASH, s.abort_cause),
+    )
+
+
+def _hb_event(cfg: SimConfig, s: SimState, d, active) -> SimState:
+    """Heartbeat probe at DS d (identity when ``active`` is False): count it
+    and re-arm while the DS is down. Recovery disarms the probe (sets
+    hb_time to INF), so probes only ever fire during an outage; the ~down
+    clear below is the same can't-spin safety valve as `_h_noop`."""
+    fire = active & s.ds_down[d]
+    return s._replace(
+        hb_count=s.hb_count.at[d].add(fire.astype(jnp.int32)),
+        hb_time=s.hb_time.at[d].set(
+            jnp.where(
+                fire,
+                s.now + s.dyn.hb_interval_us,
+                jnp.where(active, INF_US, s.hb_time[d]),
+            )
+        ),
+    )
+
+
+def _h_fault(cfg: SimConfig, bank, s: SimState, f, idx) -> SimState:
+    return _fault_event(cfg, s, f, jnp.asarray(True))
+
+
+def _h_hb(cfg: SimConfig, bank, s: SimState, d, idx) -> SimState:
+    return _hb_event(cfg, s, d, jnp.asarray(True))

@@ -43,8 +43,14 @@ from repro.core import scheduler as sched
 from repro.core.netmodel import INF_US, _hash_u32, ewma_update
 from repro.core.workloads import Bank
 
+from repro.core.engine.faults import _fault_event, _hb_event
 from repro.core.engine.handlers import _grant_decision, _stagger
 from repro.core.engine.state import (
+    CAUSE_NONE,
+    CAUSE_TIMEOUT,
+    CAUSE_ADMISSION,
+    CAUSE_CRASH,
+    CAUSE_EXHAUSTED,
     N_STOP_REASONS,
     OP_NONE,
     OP_PENDING,
@@ -114,6 +120,19 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     j_op = i0 - T - T * D
     t = w(is_term0, i0, w(is_sub0, j_sub // D, j_op // K))
     idx = w(is_sub0, j_sub % D, w(is_term0, 0, j_op % K))
+    F = cfg.max_faults
+    M0 = T + T * D + T * K
+    if F:
+        # fault/heartbeat tail events: always pinned (use=False), handled by
+        # the masked singleton handlers at the very end of this pass
+        is_fault0 = (i0 >= M0) & (i0 < M0 + F)
+        is_hb0 = i0 >= M0 + F
+        is_tail0 = is_fault0 | is_hb0
+        is_op0 = is_op0 & ~is_tail0
+        f_ev0 = jnp.minimum(w(is_fault0, i0 - M0, 0), F - 1)
+        d_hb0 = jnp.minimum(w(is_hb0, i0 - M0 - F, 0), D - 1)
+        t = w(is_tail0, 0, t)
+        idx = w(is_tail0, 0, idx)
     k_ev = jnp.minimum(idx, K - 1)
     d_ev = jnp.minimum(idx, D - 1)
     it0 = s.iters + 1
@@ -149,6 +168,8 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
             ]
         )
     )
+    if F:
+        is_noop = is_noop & ~is_tail0
 
     # ---- shared masked pass: the window, or the rank-0 drainable event ----
     act_term = w(use, v.win_term, (v.pos_term == 0) & ~v.pinned_term)
@@ -195,7 +216,9 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     # were counted by the shared pass's EWMA chain) -------------------------
     tau_est = sx.tau_est.at[d_ev].set(
         w(
-            is_fanin_x,
+            # monitor freeze: a fan-in from a crashed DS must not feed the
+            # EWMA (see handlers._ewma_est)
+            is_fanin_x & ~s.ds_down[d_ev],
             ewma_update(sx.tau_est[d_ev], sx.tau_true[d_ev], i32(cfg.beta_milli)),
             sx.tau_est[d_ev],
         )
@@ -253,7 +276,9 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     block, force_abort = sched.admission_decision(
         p_abort, u, s.blocked[t], s.dyn.max_blocked
     )
-    force_abort = force_abort & s.dyn.admission & is_start
+    # fail fast on a footprint touching a crashed DS (mirrors _h_start_txn)
+    hit_down = is_start & jnp.any(inv_new & s.ds_down)
+    force_abort = (force_abort & s.dyn.admission & is_start) | hit_down
     block = block & s.dyn.admission & is_start & ~force_abort
     dispatching = is_start & ~block & ~force_abort
 
@@ -279,7 +304,14 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     sx = sx._replace(hs=hs)
     arrive = sx.arrive.at[t].set(w(dispatching | force_abort, t_now0, sx.arrive[t]))
     blocked = sx.blocked.at[t].add(w(block, 1, 0))
-    sx = sx._replace(arrive=arrive, blocked=blocked)
+    abort_cause = sx.abort_cause.at[t].set(
+        w(
+            force_abort,
+            w(hit_down, CAUSE_CRASH, CAUSE_ADMISSION),
+            sx.abort_cause[t],
+        )
+    )
+    sx = sx._replace(arrive=arrive, blocked=blocked, abort_cause=abort_cause)
     inv_t = sx.inv[t]
 
     # ===================== subtxn row (ordered masked writes) ==============
@@ -331,6 +363,15 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     sub_row = w(is_timeout & at_do, SUB_ABORT_ACK, sub_row)
     sub_tm = w(is_timeout & at_do, own_ack_t, sub_tm)
     sub_lel_row = sub_lel_row.at[w(is_timeout, d_o, 0)].add(w(is_timeout, span_do, 0))
+    # first cause wins (mirrors _initiate_abort)
+    abort_cause = sx.abort_cause.at[t].set(
+        w(
+            is_timeout & (sx.abort_cause[t] == CAUSE_NONE),
+            CAUSE_TIMEOUT,
+            sx.abort_cause[t],
+        )
+    )
+    sx = sx._replace(abort_cause=abort_cause)
 
     # ============== pinned DM progress: chiller stage-2 / advance ==========
     ready_ch = is_round_in_x & v.ready_chiller_j[t, d_ev]
@@ -429,6 +470,15 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     one_a = w(gate_fin & meas & ~committed_fin, 1, 0)
     dist = sx.is_dist[t]
     lat_ms = (lat + 500) // 1000
+    # abort-cause tally + fault-window goodput (mirrors _finish_txn)
+    will_retry_fin = ~committed_fin & (sx.retries[t] < s.dyn.max_retries)
+    cause_fin = w(
+        ~will_retry_fin & (sx.retries[t] > 0), CAUSE_EXHAUSTED, sx.abort_cause[t]
+    )
+    sx = sx._replace(
+        ab_cause=sx.ab_cause.at[cause_fin].add(one_a),
+        commits_fault=sx.commits_fault + w(jnp.any(s.ds_down), one_c, 0),
+    )
     sx = sx._replace(
         commits=sx.commits + one_c,
         aborts=sx.aborts + one_a,
@@ -463,17 +513,22 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         _hash_u32(sx.txn_ctr[t] * 977 + t.astype(i32) * 131 + sx.retries[t])
         % jnp.maximum(base, 1).astype(jnp.uint32)
     ).astype(i32)
-    backoff = base * (1 + jnp.minimum(sx.retries[t], 7)) + jit_b
+    # floor at 1 us so a zero-backoff retry against a still-down DS cannot
+    # livelock the event loop (mirrors _finish_txn)
+    backoff = jnp.maximum(base * (1 + jnp.minimum(sx.retries[t], 7)) + jit_b, 1)
     retries = sx.retries.at[t].set(
         w(gate_fin, w(retry, sx.retries[t] + 1, 0), sx.retries[t])
     )
     retry_same = sx.retry_same.at[t].set(w(gate_fin, retry, sx.retry_same[t]))
     blocked = sx.blocked.at[t].set(w(gate_fin, 0, sx.blocked[t]))
     cur = sx.cur.at[t].add(w(gate_fin & ~retry, 1, 0))
+    abort_cause = sx.abort_cause.at[t].set(
+        w(gate_fin, CAUSE_NONE, sx.abort_cause[t])
+    )
     sx = sx._replace(
         op_state=op_state, op_time=op_time, inv=inv, first_lock=first_lock,
         cur_round=cur_round, retries=retries, retry_same=retry_same,
-        blocked=blocked, cur=cur,
+        blocked=blocked, cur=cur, abort_cause=abort_cause,
     )
 
     # ======================= phase / terminal timer ========================
@@ -503,9 +558,26 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     )
 
     # ============================== noop ===================================
-    return sx._replace(
+    upd = dict(
         op_time=w(is_noop & (sx.op_time == t_now0), INF_US, sx.op_time),
         sub_time=w(is_noop & (sx.sub_time == t_now0), INF_US, sx.sub_time),
         term_time=w(is_noop & (sx.term_time == t_now0), INF_US, sx.term_time),
         noops=sx.noops + w(is_noop, 1, 0),
     )
+    if F:
+        upd.update(
+            fault_time=w(is_noop & (sx.fault_time == t_now0), INF_US, sx.fault_time),
+            hb_time=w(is_noop & (sx.hb_time == t_now0), INF_US, sx.hb_time),
+        )
+    sx = sx._replace(**upd)
+
+    # ===================== fault / heartbeat tail events ===================
+    # Run dead last: the sub_row/sub_tm scatter above rewrites row `t` (a
+    # stale row-0 copy for tail events) and would clobber the crash
+    # cascade's sub-state writes if these ran any earlier. A tail at rank 0
+    # is always pinned, so `use` is False and the rest of the pass was a
+    # masked identity.
+    if F:
+        sx = _fault_event(cfg, sx, f_ev0, is_fault0)
+        sx = _hb_event(cfg, sx, d_hb0, is_hb0)
+    return sx

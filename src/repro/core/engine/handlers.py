@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import hotspot as hs_mod
 from repro.core import scheduler as sched
@@ -56,6 +55,11 @@ from repro.core.engine.state import (
     T_COMMIT_LOG,
     T_COMMIT_WAIT,
     T_ABORT_WAIT,
+    CAUSE_NONE,
+    CAUSE_TIMEOUT,
+    CAUSE_ADMISSION,
+    CAUSE_CRASH,
+    CAUSE_EXHAUSTED,
     DynProto,
     SimConfig,
     SimState,
@@ -246,6 +250,19 @@ def _finish_txn(cfg: SimConfig, s: SimState, t, committed) -> SimState:
     b = _hist_bin(lat)
     slot = s.cur[t] % N
 
+    # abort-cause tally (first cause wins; a final abort that burned retries
+    # is recorded as "exhausted" — the distinct give-up code) + fault-window
+    # goodput. Tallied before the reset below clears the pending cause.
+    will_retry = ~committed & (s.retries[t] < s.dyn.max_retries)
+    cause = jnp.where(
+        ~will_retry & (s.retries[t] > 0), CAUSE_EXHAUSTED, s.abort_cause[t]
+    )
+    s = s._replace(
+        ab_cause=s.ab_cause.at[cause].add(jnp.where(meas & ~committed, 1, 0)),
+        commits_fault=s.commits_fault
+        + jnp.where(meas & committed & jnp.any(s.ds_down), 1, 0),
+    )
+
     s = s._replace(
         commits=s.commits + jnp.where(meas & committed, 1, 0),
         aborts=s.aborts + jnp.where(meas & ~committed, 1, 0),
@@ -279,6 +296,7 @@ def _finish_txn(cfg: SimConfig, s: SimState, t, committed) -> SimState:
         first_lock=s.first_lock.at[t].set(jnp.full((D,), INF_US, jnp.int32)),
         rd_done=s.rd_done.at[t].set(jnp.zeros((D,), bool)),
         cur_round=s.cur_round.at[t].set(0),
+        abort_cause=s.abort_cause.at[t].set(CAUSE_NONE),
     )
     # next / retry
     retry = ~committed & (s.retries[t] < s.dyn.max_retries)
@@ -289,7 +307,9 @@ def _finish_txn(cfg: SimConfig, s: SimState, t, committed) -> SimState:
         _hash_u32(s.txn_ctr[t] * 977 + t.astype(jnp.int32) * 131 + s.retries[t])
         % jnp.maximum(base, 1).astype(jnp.uint32)
     ).astype(jnp.int32)
-    backoff = base * (1 + jnp.minimum(s.retries[t], 7)) + jit
+    # floor 1 µs: a zero-backoff preset would respin a crash-fail-fasted
+    # terminal at a constant `now` until max_events (livelock)
+    backoff = jnp.maximum(base * (1 + jnp.minimum(s.retries[t], 7)) + jit, 1)
     s = s._replace(
         retries=s.retries.at[t].set(jnp.where(retry, s.retries[t] + 1, 0)),
         retry_same=s.retry_same.at[t].set(retry),
@@ -504,6 +524,11 @@ def _initiate_abort(cfg: SimConfig, s: SimState, t, d) -> SimState:
         sub_time=s.sub_time.at[t].set(new_tm),
         phase=s.phase.at[t].set(T_ABORT_WAIT),
         term_time=s.term_time.at[t].set(INF_US),
+        # first cause wins (a second timeout during an in-flight abort must
+        # not relabel it)
+        abort_cause=s.abort_cause.at[t].set(
+            jnp.where(s.abort_cause[t] == CAUSE_NONE, CAUSE_TIMEOUT, s.abort_cause[t])
+        ),
     )
 
 
@@ -593,7 +618,11 @@ def _h_start_txn(cfg: SimConfig, bank: Bank, s: SimState, t, idx) -> SimState:
         p_abort, u, s.blocked[t], s.dyn.max_blocked
     )
     block = block & s.dyn.admission
-    force_abort = force_abort & s.dyn.admission
+    # fail fast when the footprint touches a crashed data source: abort
+    # immediately (the retry/backoff loop re-attempts it — by then the DS may
+    # have recovered) instead of dispatching into a black hole
+    hit_down = jnp.any(inv & s.ds_down)
+    force_abort = (force_abort & s.dyn.admission) | hit_down
 
     def do_block(s_: SimState) -> SimState:
         return s_._replace(
@@ -602,8 +631,13 @@ def _h_start_txn(cfg: SimConfig, bank: Bank, s: SimState, t, idx) -> SimState:
         )
 
     def do_abort(s_: SimState) -> SimState:
-        # admission abort: nothing dispatched; count + retry
-        s_ = s_._replace(arrive=s_.arrive.at[t].set(s_.now))
+        # admission / fail-fast abort: nothing dispatched; count + retry
+        s_ = s_._replace(
+            arrive=s_.arrive.at[t].set(s_.now),
+            abort_cause=s_.abort_cause.at[t].set(
+                jnp.where(hit_down, CAUSE_CRASH, CAUSE_ADMISSION)
+            ),
+        )
         return _finish_txn(cfg, s_, t, jnp.asarray(False))
 
     return jax.lax.cond(
@@ -730,6 +764,9 @@ def _h_sub_dispatch(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
 
 def _ewma_est(cfg, s: SimState, d) -> SimState:
     new = ewma_update(s.tau_est[d], s.tau_true[d], jnp.int32(cfg.beta_milli))
+    # monitor freeze: messages already in flight from a now-crashed DS must
+    # not feed the latency EWMA (fault-free runs: ds_down is all-False)
+    new = jnp.where(s.ds_down[d], s.tau_est[d], new)
     return s._replace(tau_est=s.tau_est.at[d].set(new))
 
 
@@ -816,50 +853,15 @@ def _h_dm_fin(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
 def _h_noop(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     # Safety valve: an event fired in an unexpected state. Clear it so the
     # loop cannot spin; `noops` must stay 0 (invariant-checked in tests).
-    return s._replace(
+    upd = dict(
         op_time=jnp.where(s.op_time == s.now, INF_US, s.op_time),
         sub_time=jnp.where(s.sub_time == s.now, INF_US, s.sub_time),
         term_time=jnp.where(s.term_time == s.now, INF_US, s.term_time),
         noops=s.noops + 1,
     )
-
-
-# handler ids — state-twin events (reply/vote, the three lock-releasing DS
-# events, the two completion acks) share one fused branch each, so the
-# dispatch switch compiles 12 bodies instead of 16 and lockstep (vmap) lanes
-# execute that much less per step
-(
-    H_START,
-    H_SEND_COMMITS,
-    H_OP_ARRIVE,
-    H_OP_TIMEOUT,
-    H_OP_EXEC,
-    H_SUB_DISPATCH,
-    H_DM_ROUND,
-    H_DS_PREP_CMD,
-    H_DS_PREPARED,
-    H_DS_FINISH,
-    H_DM_FIN,
-    H_NOOP,
-) = range(12)
-
-_SUB_HANDLER = np.full(18, H_NOOP, np.int32)
-_SUB_HANDLER[SUB_SCHED] = H_SUB_DISPATCH
-_SUB_HANDLER[SUB_ROUND_REPLY] = H_DM_ROUND
-_SUB_HANDLER[SUB_PREP_CMD] = H_DS_PREP_CMD
-_SUB_HANDLER[SUB_PREPARING] = H_DS_PREPARED
-_SUB_HANDLER[SUB_VOTE] = H_DM_ROUND
-_SUB_HANDLER[SUB_COMMIT_CMD] = H_DS_FINISH
-_SUB_HANDLER[SUB_ACK] = H_DM_FIN
-_SUB_HANDLER[SUB_LOCAL_COMMIT] = H_DS_FINISH
-_SUB_HANDLER[SUB_ABORT_PEER] = H_DS_FINISH
-_SUB_HANDLER[SUB_ABORT_ACK] = H_DM_FIN
-
-_OP_HANDLER = np.full(8, H_NOOP, np.int32)
-_OP_HANDLER[OP_ENROUTE] = H_OP_ARRIVE
-_OP_HANDLER[OP_WAIT] = H_OP_TIMEOUT
-_OP_HANDLER[OP_EXEC] = H_OP_EXEC
-
-_TERM_HANDLER = np.full(5, H_NOOP, np.int32)
-_TERM_HANDLER[T_IDLE] = H_START
-_TERM_HANDLER[T_COMMIT_LOG] = H_SEND_COMMITS
+    if s.fault_time.shape[0]:  # fault sections exist only when max_faults > 0
+        upd.update(
+            fault_time=jnp.where(s.fault_time == s.now, INF_US, s.fault_time),
+            hb_time=jnp.where(s.hb_time == s.now, INF_US, s.hb_time),
+        )
+    return s._replace(**upd)

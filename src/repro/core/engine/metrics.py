@@ -6,6 +6,7 @@ import jax
 import numpy as np
 
 from repro.core.engine.state import (
+    ABORT_CAUSES,
     HIST_BINS,
     STOP_REASONS,
     _HIST_BASE_US,
@@ -55,8 +56,8 @@ def summarize(cfg: SimConfig, s: SimState) -> dict:
     }
 
 
-def drain_stats(state: SimState) -> dict:
-    """Windowed-drain telemetry for a final state (single or batched).
+def drain_stats(state: SimState, horizon_us: int | None = None) -> dict:
+    """Windowed-drain + fault telemetry for a final state (single or batched).
 
     Deliberately NOT part of `summarize`: the metric dicts there are part of
     the bitwise drain-vs-sequential contract, while the hit rate by
@@ -67,11 +68,30 @@ def drain_stats(state: SimState) -> dict:
     `window_stops` counts, per stop reason, why each applied window ended
     (see `state.STOP_REASONS`); `plan_fused` reports whether any lane ran the
     fused plan+omnibus lockstep pass (`fused._omni_window`).
+
+    Fault-injection fields: `availability` is the mean fraction of
+    (world, data source) wall-clock spent up — 1.0 on fault-free runs; a DS
+    still down at the end contributes its open outage up to `horizon_us`
+    (pass `SimConfig.horizon_us`; defaults to each world's final clock).
+    `abort_causes` breaks measured aborts down by first cause (see
+    `state.ABORT_CAUSES`) and `commits_during_fault` counts commits measured
+    while at least one DS was down (goodput under degraded service).
     """
     events = int(np.sum(np.asarray(state.iters)))
     drained = int(np.sum(np.asarray(state.drained)))
     windows = int(np.sum(np.asarray(state.windows)))
     stops = np.asarray(state.win_stops).reshape(-1, len(STOP_REASONS)).sum(axis=0)
+    causes = np.asarray(state.ab_cause).reshape(-1, len(ABORT_CAUSES)).sum(axis=0)
+    down_us = np.asarray(state.down_us, dtype=np.int64)
+    ds_down = np.asarray(state.ds_down)
+    down_since = np.asarray(state.down_since, dtype=np.int64)
+    if horizon_us is None:
+        end = np.asarray(state.now, dtype=np.int64)[..., None]  # per world
+    else:
+        end = np.int64(horizon_us)
+    total_down = down_us + np.where(ds_down, np.maximum(end - down_since, 0), 0)
+    wall = np.broadcast_to(end, total_down.shape)
+    avail = 1.0 - float(total_down.sum()) / max(float(wall.sum()), 1.0)
     return {
         "events": events,
         "drained_events": drained,
@@ -82,6 +102,9 @@ def drain_stats(state: SimState) -> dict:
         "loop_iters": (events - drained) + windows,
         "window_stops": {r: int(c) for r, c in zip(STOP_REASONS, stops)},
         "plan_fused": bool(np.sum(np.asarray(state.fused)) > 0),
+        "availability": round(avail, 6),
+        "abort_causes": {r: int(c) for r, c in zip(ABORT_CAUSES, causes)},
+        "commits_during_fault": int(np.sum(np.asarray(state.commits_fault))),
     }
 
 

@@ -53,6 +53,11 @@ from repro.core.engine.state import (
     T_COMMIT_LOG,
     T_COMMIT_WAIT,
     T_ABORT_WAIT,
+    CAUSE_NONE,
+    CAUSE_TIMEOUT,
+    CAUSE_ADMISSION,
+    CAUSE_CRASH,
+    CAUSE_EXHAUSTED,
     SimConfig,
     SimState,
     _delay,
@@ -65,6 +70,7 @@ from repro.core.engine.state import (
     _times_flat,
     _u01,
 )
+from repro.core.engine.faults import _fault_event, _hb_event
 from repro.core.engine.handlers import _grant_decision, _stagger
 
 def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
@@ -93,6 +99,8 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     w = jnp.where
 
     # ---- event pick (identical to _step) ----------------------------------
+    F = cfg.max_faults
+    M0 = T + T * D + T * K
     flat = _times_flat(s)
     i = jnp.argmin(flat).astype(i32)
     t_now = flat[i]
@@ -103,6 +111,17 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     j_op = i - T - T * D
     t = w(is_term, i, w(is_sub, j_sub // D, j_op // K))
     idx = w(is_sub, j_sub % D, w(is_term, 0, j_op % K))
+    if F:
+        # fault/heartbeat tail sections (masked handlers run at the very end
+        # of the pass — everything in between is identity for a tail event)
+        is_fault_ev = (i >= M0) & (i < M0 + F)
+        is_hb_ev = i >= M0 + F
+        is_tail = is_fault_ev | is_hb_ev
+        is_op = is_op & ~is_tail
+        f_ev = jnp.minimum(w(is_fault_ev, i - M0, 0), F - 1)
+        d_hb = jnp.minimum(w(is_hb_ev, i - M0 - F, 0), D - 1)
+        t = w(is_tail, 0, t)
+        idx = w(is_tail, 0, idx)
     k_ev = jnp.minimum(idx, K - 1)
     d_ev = jnp.minimum(idx, D - 1)
     s = s._replace(now=t_now, iters=s.iters + 1)
@@ -132,6 +151,8 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         is_start | is_logflush | is_arrive | is_timeout | is_exec | is_sched
         | is_round_in | is_prep_cmd | is_prepared | is_finish | is_fin_ack
     )
+    if F:
+        is_noop = is_noop & ~is_tail
     d_o = s.op_ds[t, k_ev].astype(i32)  # the op event's data source
     kk = jnp.arange(K, dtype=i32)
     dd = jnp.arange(D, dtype=i32)
@@ -189,7 +210,9 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     block, force_abort = sched.admission_decision(
         p_abort, u, s.blocked[t], s.dyn.max_blocked
     )
-    force_abort = force_abort & s.dyn.admission & is_start
+    # fail fast on a footprint touching a crashed DS (mirrors _h_start_txn)
+    hit_down = is_start & jnp.any(inv_new & s.ds_down)
+    force_abort = (force_abort & s.dyn.admission & is_start) | hit_down
     block = block & s.dyn.admission & is_start & ~force_abort
     dispatching = is_start & ~block & ~force_abort
 
@@ -221,7 +244,14 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         w(dispatching | force_abort, s.now, s.arrive[t])
     )
     blocked = s.blocked.at[t].add(w(block, 1, 0))
-    s = s._replace(arrive=arrive, blocked=blocked)
+    abort_cause = s.abort_cause.at[t].set(
+        w(
+            force_abort,
+            w(hit_down, CAUSE_CRASH, CAUSE_ADMISSION),
+            s.abort_cause[t],
+        )
+    )
+    s = s._replace(arrive=arrive, blocked=blocked, abort_cause=abort_cause)
 
     # ============ op events: exec completion, chained lock attempt =========
     op_state = s.op_state.at[t, k_ev].set(
@@ -334,7 +364,9 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     # DM fan-ins: self-update + shared EWMA monitor refresh
     tau_est = s.tau_est.at[d_ev].set(
         w(
-            is_round_in | is_fin_ack,
+            # monitor freeze: a fan-in from a crashed DS (message already in
+            # flight when it died) must not feed the EWMA (see _ewma_est)
+            (is_round_in | is_fin_ack) & ~s.ds_down[d_ev],
             ewma_update(s.tau_est[d_ev], s.tau_true[d_ev], i32(cfg.beta_milli)),
             s.tau_est[d_ev],
         )
@@ -370,6 +402,15 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     sub_tm = w(is_timeout & peers, s.now + notify, sub_tm)
     sub_row = w(is_timeout & at_do, SUB_ABORT_ACK, sub_row)
     sub_tm = w(is_timeout & at_do, own_ack_t, sub_tm)
+    # first cause wins (mirrors _initiate_abort)
+    abort_cause = s.abort_cause.at[t].set(
+        w(
+            is_timeout & (s.abort_cause[t] == CAUSE_NONE),
+            CAUSE_TIMEOUT,
+            s.abort_cause[t],
+        )
+    )
+    s = s._replace(abort_cause=abort_cause)
 
     # ================== DM progress (round fan-in only) ====================
     # chiller stage-2: every dispatched sub voted -> release the held stage
@@ -514,6 +555,15 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     one_a = w(gate_fin & meas & ~committed_fin, 1, 0)
     dist = s.is_dist[t]
     lat_ms = (lat + 500) // 1000
+    # abort-cause tally + fault-window goodput (mirrors _finish_txn)
+    will_retry_fin = ~committed_fin & (s.retries[t] < s.dyn.max_retries)
+    cause_fin = w(
+        ~will_retry_fin & (s.retries[t] > 0), CAUSE_EXHAUSTED, s.abort_cause[t]
+    )
+    s = s._replace(
+        ab_cause=s.ab_cause.at[cause_fin].add(one_a),
+        commits_fault=s.commits_fault + w(jnp.any(s.ds_down), one_c, 0),
+    )
     s = s._replace(
         commits=s.commits + one_c,
         aborts=s.aborts + one_a,
@@ -550,17 +600,22 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         _hash_u32(s.txn_ctr[t] * 977 + t.astype(i32) * 131 + s.retries[t])
         % jnp.maximum(base, 1).astype(jnp.uint32)
     ).astype(i32)
-    backoff = base * (1 + jnp.minimum(s.retries[t], 7)) + jit_b
+    # floor at 1 us so a zero-backoff retry against a still-down DS cannot
+    # livelock the event loop (mirrors _finish_txn)
+    backoff = jnp.maximum(base * (1 + jnp.minimum(s.retries[t], 7)) + jit_b, 1)
     retries = s.retries.at[t].set(
         w(gate_fin, w(retry, s.retries[t] + 1, 0), s.retries[t])
     )
     retry_same = s.retry_same.at[t].set(w(gate_fin, retry, s.retry_same[t]))
     blocked = s.blocked.at[t].set(w(gate_fin, 0, s.blocked[t]))
     cur = s.cur.at[t].add(w(gate_fin & ~retry, 1, 0))
+    abort_cause = s.abort_cause.at[t].set(
+        w(gate_fin, CAUSE_NONE, s.abort_cause[t])
+    )
     s = s._replace(
         op_state=op_state, op_time=op_time, inv=inv, first_lock=first_lock,
         cur_round=cur_round, retries=retries, retry_same=retry_same,
-        blocked=blocked, cur=cur,
+        blocked=blocked, cur=cur, abort_cause=abort_cause,
     )
 
     # ======================= phase / terminal timer ========================
@@ -592,9 +647,24 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     )
 
     # ============================== noop ===================================
-    return s._replace(
+    upd = dict(
         op_time=w(is_noop & (s.op_time == s.now), INF_US, s.op_time),
         sub_time=w(is_noop & (s.sub_time == s.now), INF_US, s.sub_time),
         term_time=w(is_noop & (s.term_time == s.now), INF_US, s.term_time),
         noops=s.noops + w(is_noop, 1, 0),
     )
+    if cfg.max_faults:
+        upd.update(
+            fault_time=w(is_noop & (s.fault_time == s.now), INF_US, s.fault_time),
+            hb_time=w(is_noop & (s.hb_time == s.now), INF_US, s.hb_time),
+        )
+    s = s._replace(**upd)
+
+    # ===================== fault / heartbeat tail events ===================
+    # Run dead last: the sub_row/sub_tm scatter above rewrites row `t` (a
+    # stale row-0 copy for tail events) and would clobber the crash
+    # cascade's sub-state writes if these ran any earlier.
+    if cfg.max_faults:
+        s = _fault_event(cfg, s, f_ev, is_fault_ev)
+        s = _hb_event(cfg, s, d_hb, is_hb_ev)
+    return s

@@ -84,6 +84,9 @@ _SALT_MUL = jnp.int32(2654435761 % (2**31))
 #   cap           the window filled the planner's candidate budget
 #                 (window.PLAN_CAP events) — longer windows split, bitwise-
 #                 identically, across iterations
+#   fault         a fault-schedule event (data-source crash/recovery) or a
+#                 heartbeat probe — always pinned: crashes rewrite arbitrary
+#                 rows and the monitor freeze, so they run sequentially
 STOP_REASONS = (
     "horizon",
     "nondrainable",
@@ -93,8 +96,23 @@ STOP_REASONS = (
     "dm_col",
     "rel_op",
     "cap",
+    "fault",
 )
 N_STOP_REASONS = len(STOP_REASONS)
+
+# ---- abort cause codes ------------------------------------------------------
+# Recorded per-terminal while a txn is in flight (`SimState.abort_cause`) and
+# tallied into `SimState.ab_cause` when the abort finishes; surfaced as the
+# `abort_causes` breakdown in `metrics.drain_stats`.
+(
+    CAUSE_NONE,  # committed / never aborted
+    CAUSE_TIMEOUT,  # lock-wait timeout fired (`_h_op_timeout`)
+    CAUSE_ADMISSION,  # O3 admission control aborted at start
+    CAUSE_CRASH,  # data-source crash killed or fail-fasted the txn
+    CAUSE_EXHAUSTED,  # retry budget spent: final abort after max_retries
+) = range(5)
+N_ABORT_CAUSES = 5
+ABORT_CAUSES = ("none", "timeout", "admission", "crash", "exhausted")
 
 
 class DynProto(NamedTuple):
@@ -122,9 +140,17 @@ class DynProto(NamedTuple):
     lan_rtt_us: jax.Array  # i32
     retry_backoff_us: jax.Array  # i32
     max_retries: jax.Array  # i32
+    hb_interval_us: jax.Array  # i32 — heartbeat probe period while a DS is down
 
 
 def dyn_from_proto(p: ProtocolConfig) -> DynProto:
+    if p.max_retries > 0 and p.retry_backoff_us <= 0:
+        # the retry loop re-schedules the aborted terminal at now + backoff;
+        # a zero backoff would respin the same microsecond until max_events
+        raise ValueError(
+            f"preset {p.name!r}: max_retries={p.max_retries} needs "
+            f"retry_backoff_us > 0 (got {p.retry_backoff_us})"
+        )
     i32 = jnp.int32
     return DynProto(
         prepare=i32(p.prepare),
@@ -143,6 +169,7 @@ def dyn_from_proto(p: ProtocolConfig) -> DynProto:
         lan_rtt_us=i32(p.lan_rtt_us),
         retry_backoff_us=i32(p.retry_backoff_us),
         max_retries=i32(p.max_retries),
+        hb_interval_us=i32(p.hb_interval_us),
     )
 
 
@@ -162,6 +189,28 @@ class WorldSpec(NamedTuple):
     lel_scale_milli: jax.Array  # scalar (§IV-C forecast scaling)
     dyn: DynProto
     seed: jax.Array  # scalar tag
+    # deterministic fault schedule: [F,3] rows (t_crash_us, ds, t_recover_us),
+    # padded with (INF_US, 0, INF_US). F is static (`SimConfig.max_faults`).
+    faults: jax.Array
+
+
+def pad_faults(faults, max_faults: int | None = None) -> jax.Array:
+    """Normalize a fault schedule to a static [F,3] i32 array.
+
+    `faults` is a sequence of (t_crash_us, ds, t_recover_us) triples (or an
+    equivalent [n,3] array); None means no faults. Padding rows carry
+    (INF_US, 0, INF_US) so their events never fire inside the horizon.
+    """
+    rows = jnp.zeros((0, 3), jnp.int32) if faults is None else jnp.asarray(
+        faults, jnp.int32
+    ).reshape(-1, 3)
+    n = rows.shape[0]
+    if max_faults is None:
+        max_faults = n
+    if n > max_faults:
+        raise ValueError(f"{n} fault rows exceed max_faults={max_faults}")
+    pad = jnp.tile(jnp.array([[INF_US, 0, INF_US]], jnp.int32), (max_faults - n, 1))
+    return jnp.concatenate([rows, pad], axis=0)
 
 
 def make_world(
@@ -173,6 +222,8 @@ def make_world(
     jitter_milli: int = 0,
     exec_scale_milli=None,
     seed: int = 0,
+    faults=None,
+    max_faults: int | None = None,
 ) -> WorldSpec:
     """Build a WorldSpec from a preset name / ProtocolConfig + RTT vector."""
     if isinstance(proto, str):
@@ -195,6 +246,7 @@ def make_world(
         lel_scale_milli=jnp.int32(proto.lel_scale_milli),
         dyn=dyn_from_proto(proto),
         seed=jnp.int32(seed),
+        faults=pad_faults(faults, max_faults),
     )
 
 
@@ -240,6 +292,10 @@ class SimConfig:
     # summarize/figures reads it, and it would dominate the lockstep
     # while-carry — opt-in (tests use it to widen the bitwise fingerprint).
     track_slots: bool = False
+    # static fault-schedule capacity F: `SimState.fault_*` are [F] leaves and
+    # `_times_flat` grows an [F]-slot section. 0 = fault-free engine; the
+    # Simulator derives it from `WorldSpec.faults.shape[-2]` per grid.
+    max_faults: int = 0
 
 
 class SimState(NamedTuple):
@@ -272,6 +328,19 @@ class SimState(NamedTuple):
     sub_lel: jax.Array  # [T,D] i32
     first_lock: jax.Array  # [T,D] i32
     rd_done: jax.Array  # [T,D] bool
+    # fault injection (F = cfg.max_faults; all-INF when fault-free)
+    fault_ds: jax.Array  # [F] i32 — target data source of schedule row f
+    fault_recover: jax.Array  # [F] i32 — recovery timestamp of row f
+    fault_time: jax.Array  # [F] i32 — next event of row f (crash, then recover)
+    fault_stage: jax.Array  # [F] i8 — 0 pending crash / 1 pending recover / 2 done
+    ds_down: jax.Array  # [D] bool — currently crashed
+    hb_time: jax.Array  # [D] i32 — next heartbeat probe (INF unless down)
+    hb_count: jax.Array  # [D] i32 — heartbeat probes fired while down
+    down_since: jax.Array  # [D] i32 — crash timestamp of the current outage
+    down_us: jax.Array  # [D] i32 — accumulated completed-outage time
+    abort_cause: jax.Array  # [T] i32 — pending CAUSE_* of the in-flight txn
+    ab_cause: jax.Array  # [N_ABORT_CAUSES] i32 — final-abort cause tally
+    commits_fault: jax.Array  # i32 — commits while >=1 DS was down
     # hot-record footprint: fixed-capacity hash table [C+1] (+1 = scratch row).
     # (2PL lock state needs no table: it is derived exactly from the op arrays,
     #  since every held/waited lock belongs to exactly one in-flight op.)
@@ -315,8 +384,10 @@ def init_state(
     exec_scale_milli=None,
     dyn: DynProto | None = None,
     lel_scale_milli=None,
+    faults=None,
 ) -> SimState:
     T, K, D, N = (cfg.terminals, cfg.max_ops, cfg.num_ds, cfg.bank_txns)
+    F = cfg.max_faults
     i32 = jnp.int32
     if exec_scale_milli is None:
         exec_scale_milli = jnp.full((D,), 1000, i32)
@@ -324,6 +395,9 @@ def init_state(
         dyn = dyn_from_proto(cfg.proto)
     if lel_scale_milli is None:
         lel_scale_milli = cfg.proto.lel_scale_milli
+    if faults is None:
+        faults = pad_faults(None, F)
+    faults = jnp.asarray(faults, i32).reshape(F, 3)
     # ramp terminals in over 2ms to avoid a synchronized start
     start = (jnp.arange(T, dtype=i32) * 2000) // max(T, 1)
     return SimState(
@@ -353,6 +427,18 @@ def init_state(
         sub_lel=jnp.zeros((T, D), i32),
         first_lock=jnp.full((T, D), INF_US, i32),
         rd_done=jnp.zeros((T, D), bool),
+        fault_ds=faults[:, 1],
+        fault_recover=faults[:, 2],
+        fault_time=faults[:, 0],
+        fault_stage=jnp.zeros((F,), jnp.int8),
+        ds_down=jnp.zeros((D,), bool),
+        hb_time=jnp.full((D,), INF_US, i32),
+        hb_count=jnp.zeros((D,), i32),
+        down_since=jnp.zeros((D,), i32),
+        down_us=jnp.zeros((D,), i32),
+        abort_cause=jnp.zeros((T,), i32),
+        ab_cause=jnp.zeros((N_ABORT_CAUSES,), i32),
+        commits_fault=i32(0),
         hs=hs_mod.hash_init(cfg.hot_capacity + 1),
         tau_true=jnp.asarray(tau_true_us, i32),
         tau_est=jnp.asarray(tau_true_us, i32),
@@ -395,6 +481,7 @@ def init_state_world(cfg: SimConfig, world: WorldSpec) -> SimState:
         world.exec_scale_milli,
         dyn=world.dyn,
         lel_scale_milli=world.lel_scale_milli,
+        faults=world.faults,
     )
 
 
@@ -460,7 +547,15 @@ def _measuring(cfg: SimConfig, s: SimState) -> jax.Array:
 
 
 def _times_flat(s: SimState) -> jax.Array:
-    """Concatenated [T + T*D + T*K] event-time view (term | sub | op)."""
-    return jnp.concatenate(
-        [s.term_time, s.sub_time.reshape(-1), s.op_time.reshape(-1)]
-    )
+    """Concatenated [T + T*D + T*K + F + D] event-time view
+    (term | sub | op | fault | heartbeat).
+
+    The fault and heartbeat tails exist only when the config carries a
+    fault schedule (``max_faults > 0``); a fault-free config compiles the
+    exact tail-free view, and an all-INF schedule never wins the
+    first-occurrence argmin — either way every step mode stays bitwise-
+    identical to the tail-free engine."""
+    parts = [s.term_time, s.sub_time.reshape(-1), s.op_time.reshape(-1)]
+    if s.fault_time.shape[0]:
+        parts += [s.fault_time, s.hb_time]
+    return jnp.concatenate(parts)

@@ -28,7 +28,11 @@ Window stoppers (slot-accurate read/write sets — see docs/architecture.md):
   fan-in per terminal and per DS);
 * at most `K_EWMA` fan-ins per data source (the latency monitor composes
   that many exact EWMA applications per window);
-* a release sharing its (terminal, DS) with an earlier op event.
+* a release sharing its (terminal, DS) with an earlier op event;
+* fault-injection events (data-source crash/recovery and heartbeat probes,
+  present only when ``SimConfig.max_faults > 0``) are always pinned: a due
+  one stops the window at itself (stop reason `fault`) and runs through the
+  sequential crash-cascade handler.
 
 Every windowed event keeps the iteration number (hash salt) and timestamp it
 would have had sequentially, so drained runs stay bitwise-identical to
@@ -113,6 +117,7 @@ PLAN_CAP = 8
     STOP_DM_COL,
     STOP_REL_OP,
     STOP_CAP,
+    STOP_FAULT,
 ) = range(N_STOP_REASONS)
 
 
@@ -220,8 +225,12 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     slow per-lane loops on CPU while the matrices are pure elementwise work
     shared across lanes.
     """
-    T, D, K = cfg.terminals, cfg.num_ds, cfg.max_ops
-    M = T + T * D + T * K
+    T, D, K, F = cfg.terminals, cfg.num_ds, cfg.max_ops, cfg.max_faults
+    M0 = T + T * D + T * K
+    # fault/heartbeat tail slots exist only on fault-carrying configs; they
+    # are always pinned (never drained), so a due fault stops the window at
+    # itself and routes through the sequential fault handler.
+    M = M0 + (F + D if F else 0)
     i32 = jnp.int32
     BIG = jnp.int32(M)
     st = s.op_state
@@ -268,14 +277,14 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     # candidate slots, so per-slot tensors below may be garbage elsewhere.
     w_rank = jnp.arange(W, dtype=i32)
     is_sub_c = (cand_i >= T) & (cand_i < T + T * D)
-    is_op_c = cand_i >= T + T * D
+    is_op_c = (cand_i >= T + T * D) & (cand_i < M0)
     sub_flat_c = jnp.clip(cand_i - T, 0, T * D - 1)
     t_sub_c = jnp.where(is_sub_c, sub_flat_c // D, 0)
     d_sub_c = jnp.where(is_sub_c, sub_flat_c % D, 0)
     op_flat_c = jnp.clip(cand_i - T - T * D, 0, T * K - 1)
     pos_term = pos[:T]
     pos_sub = pos[T : T + T * D].reshape(T, D)
-    pos_op = pos[T + T * D :].reshape(T, K)
+    pos_op = pos[T + T * D : M0].reshape(T, K)
     iters_term = s.iters + 1 + pos_term
     iters_sub = s.iters + 1 + pos_sub
     iters_op = s.iters + 1 + pos_op
@@ -620,11 +629,21 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     conf_rel = jnp.concatenate(
         [zt, conf_rel_sub.reshape(-1), conf_rel_op.reshape(-1)]
     )
-    conflict = conf_key | conf_row | conf_col | conf_rel
     pinned_flat = jnp.concatenate(
         [pinned_term, pinned_sub.reshape(-1), pinned_op.reshape(-1)]
     )
     n_flat = jnp.concatenate([n_term, n_sub.reshape(-1), n_op.reshape(-1)])
+    if F:
+        # fault/heartbeat tails: pinned, schedule nothing, conflict with
+        # nothing — a due one simply stops the window at itself
+        zfd = jnp.zeros((F + D,), bool)
+        conf_key = jnp.concatenate([conf_key, zfd])
+        conf_row = jnp.concatenate([conf_row, zfd])
+        conf_col = jnp.concatenate([conf_col, zfd])
+        conf_rel = jnp.concatenate([conf_rel, zfd])
+        pinned_flat = jnp.concatenate([pinned_flat, jnp.ones((F + D,), bool)])
+        n_flat = jnp.concatenate([n_flat, jnp.zeros((F + D,), i32)])
+    conflict = conf_key | conf_row | conf_col | conf_rel
     horizon_i = jnp.int32(cfg.horizon_us)
     code = jnp.where(
         flat >= horizon_i,
@@ -647,6 +666,11 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
             ),
         ),
     ).astype(i32)
+    if F:
+        # distinguish fault/heartbeat stoppers from ordinary non-drainable
+        # events (horizon stays dominant)
+        tail_flat = jnp.arange(M, dtype=i32) >= M0
+        code = jnp.where((flat < horizon_i) & tail_flat, STOP_FAULT, code)
     if cfg.lockstep:
         # candidate-space equivalent of the cummin prefix: W-element gathers
         # plus a [W, W] triangular running min — no scatters, no scans

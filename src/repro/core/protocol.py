@@ -64,6 +64,9 @@ class ProtocolConfig:
     # benchbase semantics: an aborted transaction is recorded and the terminal
     # moves on to the next one (retries only when explicitly configured)
     max_retries: int = 0
+    # heartbeat probe period while a data source is crashed (fault injection;
+    # probes are deterministic liveness checks — see docs/architecture.md)
+    hb_interval_us: int = 500_000
 
 
 SSP = ProtocolConfig(

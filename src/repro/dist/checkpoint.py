@@ -12,6 +12,13 @@ Protocol (the paper's decentralized-prepare idea applied to checkpoint I/O):
      torn state: without COMMIT the step never happened).
 
 Trees are flattened with '/'-joined key paths into one npz per host shard.
+
+A host crashing mid-prepare here (shard written, COMMIT absent) is the
+filesystem analogue of the engine's deterministic fault injection — the
+``faults`` Grid axis crashes a simulated data source mid-prepare and drives
+the peer-abort path; `recover` plays the same role for checkpoint state:
+without COMMIT the step never happened. tests/dist/ asserts both halves of
+that contract.
 """
 
 from __future__ import annotations

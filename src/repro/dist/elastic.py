@@ -6,6 +6,13 @@ and tell each new host which old shards to read. Shards are replicated
 param trees (every host holds the full tree in the reduced local setup), so
 resize = re-assign data ranges; the plan generalizes to sharded layouts by
 mapping shard ranges instead.
+
+This is the training-infrastructure face of the same crash/recovery story
+the engine simulates: the ``faults`` Grid axis
+(`repro.core.engine.Grid`, `SimConfig.max_faults`) injects deterministic
+data-source outages into the transaction simulation, while `plan_resize` +
+`CheckpointManager.recover` handle the real host-set change on this side.
+Property tests over old x new host sweeps live in tests/dist/.
 """
 
 from __future__ import annotations

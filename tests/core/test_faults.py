@@ -1,0 +1,367 @@
+"""Deterministic fault injection: crash/recovery, heartbeats, retries.
+
+Acceptance invariants of the fault-injection tentpole:
+
+1. **Fault-free preservation** — a config with ``max_faults=0`` and one with
+   a padded all-INF schedule produce bitwise-identical trajectories, for
+   EVERY protocol preset (the fault tail must never perturb a healthy run).
+2. **Mode interchangeability** — a crash-heavy schedule is bitwise-identical
+   across all four step modes (drain x lockstep) and across the map/vmap
+   batch strategies.
+3. **Crash semantics** — in-flight work at a dead data source aborts through
+   the peer-abort path with the distinct CAUSE_CRASH code, recovery
+   re-admits the DS, heartbeats fire only while it is down, and the
+   availability/goodput telemetry is exact for deterministic schedules.
+4. **Retry knobs** — `DynProto.max_retries` caps retries end-to-end and the
+   give-up abort is tallied as CAUSE_EXHAUSTED; `dyn_from_proto` rejects
+   retry configs that could livelock (zero backoff).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine, protocol, workloads
+from repro.core.engine.api import Grid, Simulator
+from repro.core.engine.state import (
+    ABORT_CAUSES,
+    CAUSE_CRASH,
+    CAUSE_EXHAUSTED,
+    INF_US,
+)
+from repro.core.netmodel import make_net_params
+
+T, K, D, N = 8, 4, 2, 32
+RTT = (10.0, 100.0)
+
+# three crash/recovery cycles inside the 2s horizon, both data sources hit,
+# one outage long enough (>500ms) for heartbeat probes to fire
+CRASH_HEAVY = (
+    (100_000, 0, 400_000),
+    (600_000, 1, 1_300_000),
+    (1_500_000, 0, 1_700_000),
+)
+
+
+def _bank(seed=0, theta=0.9, records=2000):
+    cfg_w = workloads.YCSBConfig(
+        num_ds=D, records_per_node=records, ops_per_txn=K, dist_ratio=0.5,
+        theta=theta, seed=seed,
+    )
+    return workloads.make_ycsb_bank(cfg_w, terminals=T, txns_per_terminal=N)
+
+
+def _cfg(preset, drain=True, lockstep=False, max_faults=0, horizon_s=2.0):
+    proto = preset if isinstance(preset, protocol.ProtocolConfig) else (
+        protocol.PRESETS[preset]
+    )
+    return engine.SimConfig(
+        terminals=T, max_ops=K, num_ds=D, bank_txns=N,
+        proto=proto, warmup_us=0,
+        horizon_us=int(horizon_s * 1e6), drain=drain, lockstep=lockstep,
+        track_slots=True,  # widen the bitwise fingerprint
+        max_faults=max_faults,
+    )
+
+
+def _fingerprint(st, m):
+    """Full bitwise fingerprint: metrics + every histogram/slot array +
+    the fault telemetry leaves."""
+    return (
+        m,
+        np.asarray(st.hist_all).tobytes(),
+        np.asarray(st.hist_cen).tobytes(),
+        np.asarray(st.hist_dist).tobytes(),
+        np.asarray(st.slot_commits).tobytes(),
+        np.asarray(st.slot_aborts).tobytes(),
+        np.asarray(st.slot_lat).tobytes(),
+        np.asarray(st.hs.w_lat).tobytes(),
+        np.asarray(st.ab_cause).tobytes(),
+        np.asarray(st.hb_count).tobytes(),
+        np.asarray(st.down_us).tobytes(),
+        np.asarray(st.commits_fault).tobytes(),
+    )
+
+
+def _assert_state_bitwise(sa, sb):
+    # `drained`/`windows`/`win_stops`/`fused` are path telemetry; every other
+    # leaf (nested hs/dyn and the fault leaves included) must match bitwise
+    fa = jax.tree_util.tree_flatten_with_path(
+        sa._replace(
+            drained=sb.drained, windows=sb.windows,
+            win_stops=sb.win_stops, fused=sb.fused,
+        )
+    )[0]
+    fb = jax.tree_util.tree_flatten_with_path(sb)[0]
+    assert len(fa) == len(fb)
+    for (path, a), (_, b) in zip(fa, fb):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=jax.tree_util.keystr(path)
+        )
+
+
+class TestFaultFreePreservation:
+    """An all-INF padded schedule must never perturb a healthy run."""
+
+    @pytest.mark.parametrize("preset", sorted(protocol.PRESETS))
+    def test_inf_schedule_matches_fault_free_engine(self, preset):
+        # `proto` is excluded from the jit compile key, so this whole preset
+        # sweep costs two compiled programs (max_faults 0 and 3), not 18
+        bank = _bank()
+        net = make_net_params(RTT)
+        s0, m0 = engine.simulate(
+            _cfg(preset), bank, net.tau_dm, net.tau_ds, jitter_milli=30
+        )
+        sf, mf = engine.simulate(
+            _cfg(preset, max_faults=3), bank, net.tau_dm, net.tau_ds,
+            jitter_milli=30,  # faults=None -> all-INF padding rows
+        )
+        assert m0 == mf
+        assert _fingerprint(s0, m0) == _fingerprint(sf, mf)
+        # the schedule leaves differ in shape ([0] vs [3]) by construction;
+        # every other leaf must match bitwise
+        sf = sf._replace(
+            fault_ds=s0.fault_ds, fault_recover=s0.fault_recover,
+            fault_time=s0.fault_time, fault_stage=s0.fault_stage,
+        )
+        _assert_state_bitwise(sf, s0)
+        assert np.all(np.asarray(sf.ds_down) == False)  # noqa: E712
+        assert np.all(np.asarray(sf.hb_count) == 0)
+
+
+class TestFaultBitwiseAcrossModes:
+    """One crash-heavy schedule, four step modes, one trajectory."""
+
+    def _run(self, drain, lockstep):
+        bank = _bank()
+        net = make_net_params(RTT)
+        cfg = _cfg("geotp", drain=drain, lockstep=lockstep,
+                   max_faults=len(CRASH_HEAVY))
+        return engine.simulate(
+            cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30,
+            faults=CRASH_HEAVY,
+        )
+
+    def test_crash_heavy_schedule_matches_across_all_modes(self):
+        ref_s, ref_m = self._run(drain=False, lockstep=False)  # seed path
+        # the schedule actually bit: crash-cause aborts + real downtime
+        assert int(np.asarray(ref_s.ab_cause)[CAUSE_CRASH]) > 0
+        assert ref_m["noops"] == 0
+        for drain, lockstep in ((True, False), (False, True), (True, True)):
+            st, m = self._run(drain=drain, lockstep=lockstep)
+            assert m == ref_m, (drain, lockstep)
+            assert _fingerprint(st, m) == _fingerprint(ref_s, ref_m)
+            _assert_state_bitwise(st, ref_s)
+
+    def test_faulted_grid_map_matches_vmap(self):
+        # batched acceptance: map and vmap strategies must agree bitwise on
+        # a faulted grid, drain on (the default) — vmap routes through the
+        # fused lockstep pass, map through the windowed scalar path
+        bank = _bank()
+        sim = Simulator.from_bank(bank, horizon_s=2.0, warmup_s=0.0)
+        grid = Grid.cross(
+            preset=("ssp", "geotp"), rtt_ms=RTT, faults=(CRASH_HEAVY,)
+        )
+        res_m = sim.run_grid(grid, bank, strategy="map")
+        res_v = sim.run_grid(grid, bank, strategy="vmap")
+        for a, b in zip(res_m.metrics, res_v.metrics):
+            assert a.keys() == b.keys()
+            for k in a:  # nan-aware: an empty percentile is nan on BOTH paths
+                both_nan = (
+                    isinstance(a[k], float)
+                    and np.isnan(a[k]) and np.isnan(b[k])
+                )
+                assert both_nan or a[k] == b[k], (k, a[k], b[k])
+        fa = jax.tree_util.tree_flatten_with_path(res_m.states)[0]
+        fb = jax.tree_util.tree_flatten_with_path(res_v.states)[0]
+        skip = ("drained", "windows", "win_stops", "fused")
+        for (path, a), (_, b) in zip(fa, fb):
+            if any(k in jax.tree_util.keystr(path) for k in skip):
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=jax.tree_util.keystr(path),
+            )
+        assert res_m.drain["abort_causes"]["crash"] > 0
+
+
+class TestCrashSemantics:
+    def _run(self, faults, preset="geotp", horizon_s=2.0, bank=None,
+             drain=True):
+        bank = bank if bank is not None else _bank()
+        net = make_net_params(RTT)
+        cfg = _cfg(preset, drain=drain, max_faults=len(faults),
+                   horizon_s=horizon_s)
+        st, m = engine.simulate(
+            cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30, faults=faults,
+        )
+        return cfg, st, m
+
+    def test_crash_aborts_in_flight_work_with_cause_crash(self):
+        cfg, st, m = self._run(CRASH_HEAVY)
+        causes = np.asarray(st.ab_cause)
+        assert m["noops"] == 0
+        assert int(causes[CAUSE_CRASH]) > 0  # in-flight victims + fail-fasts
+        assert m["aborts"] >= int(causes.sum())
+        assert m["commits"] > 0  # service continues around the outages
+
+    def test_recovery_readmits_the_data_source(self):
+        faults = ((100_000, 0, 300_000),)
+        cfg, st, m = self._run(faults)
+        # outage closed: DS back up, schedule exhausted, probes disarmed
+        assert not np.any(np.asarray(st.ds_down))
+        assert np.all(np.asarray(st.fault_stage) == 2)
+        assert np.all(np.asarray(st.fault_time) == INF_US)
+        assert np.all(np.asarray(st.hb_time) == INF_US)
+        # downtime bookkeeping is exact for a closed deterministic outage
+        assert int(np.asarray(st.down_us)[0]) == 200_000
+        assert int(np.asarray(st.down_us)[1]) == 0
+        # commits resume after recovery: goodput-during-fault is a strict
+        # subset of total commits
+        assert 0 <= int(st.commits_fault) < m["commits"]
+
+    def test_heartbeat_fires_only_while_down(self):
+        # a 1.2s outage with the default 500ms probe interval -> exactly two
+        # probes at crash+500ms and crash+1000ms; the healthy DS probes zero
+        faults = ((200_000, 0, 1_400_000),)
+        cfg, st, m = self._run(faults)
+        hb = np.asarray(st.hb_count)
+        assert int(hb[0]) == 2
+        assert int(hb[1]) == 0
+        assert int(np.asarray(st.down_us)[0]) == 1_200_000
+
+    def test_availability_is_exact_for_deterministic_schedules(self):
+        cfg, st, m = self._run(((100_000, 0, 300_000), (500_000, 1, 800_000)))
+        d = engine.drain_stats(st, horizon_us=cfg.horizon_us)
+        # (200ms + 300ms) down over 2 DS x 2s wall
+        assert d["availability"] == 1.0 - 500_000 / 4_000_000
+        assert set(d["abort_causes"]) == set(ABORT_CAUSES)
+
+    def test_open_outage_charged_to_horizon(self):
+        # a DS still down at the horizon is charged for the open outage
+        faults = ((500_000, 0, 10_000_000),)  # recovery beyond the horizon
+        cfg, st, m = self._run(faults)
+        assert bool(np.asarray(st.ds_down)[0])
+        d = engine.drain_stats(st, horizon_us=cfg.horizon_us)
+        assert d["availability"] == 1.0 - 1_500_000 / 4_000_000
+
+    def test_fault_free_schedule_all_causes_zero(self):
+        cfg, st, m = self._run(((INF_US, 0, INF_US),))
+        d = engine.drain_stats(st, horizon_us=cfg.horizon_us)
+        assert d["availability"] == 1.0
+        assert d["abort_causes"]["crash"] == 0
+        assert d["commits_during_fault"] == 0
+
+
+class TestRetryKnobs:
+    def test_dyn_from_proto_rejects_retries_without_backoff(self):
+        bad = dataclasses.replace(
+            protocol.PRESETS["geotp"], max_retries=2, retry_backoff_us=0
+        )
+        with pytest.raises(ValueError, match="retry_backoff_us"):
+            engine.dyn_from_proto(bad)
+
+    def test_max_retries_cap_and_exhausted_cause(self):
+        # a long outage + retries: fail-fasted terminals back off, retry,
+        # and give up after max_retries with the distinct EXHAUSTED code
+        proto = dataclasses.replace(protocol.PRESETS["geotp"], max_retries=2)
+        bank = _bank()
+        net = make_net_params(RTT)
+        faults = ((100_000, 0, 1_800_000),)
+        cfg = _cfg(proto, max_faults=1)
+        st, m = engine.simulate(
+            cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30, faults=faults,
+        )
+        assert m["noops"] == 0
+        assert int(np.max(np.asarray(st.retries))) <= 2  # cap enforced
+        causes = np.asarray(st.ab_cause)
+        assert int(causes[CAUSE_EXHAUSTED]) > 0  # give-ups tallied distinctly
+        assert int(causes[CAUSE_CRASH]) > 0  # first failures keep their cause
+
+    def test_no_retries_means_no_exhausted(self):
+        # every builtin preset ships max_retries=0: the EXHAUSTED code can
+        # only appear when retries are actually enabled
+        bank = _bank()
+        net = make_net_params(RTT)
+        cfg = _cfg("geotp", max_faults=len(CRASH_HEAVY))
+        st, m = engine.simulate(
+            cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30,
+            faults=CRASH_HEAVY,
+        )
+        assert int(np.asarray(st.ab_cause)[CAUSE_EXHAUSTED]) == 0
+        assert np.all(np.asarray(st.retries) == 0)
+
+
+class TestGridFaultValidation:
+    """Construction-time schedule validation (regression suite)."""
+
+    def test_ds_out_of_range(self):
+        with pytest.raises(ValueError, match=r"cell 0.*ds=5, out of range"):
+            Grid([{"preset": "ssp", "faults": ((10, 5, 20),)}])
+
+    def test_recover_not_after_crash(self):
+        with pytest.raises(ValueError, match=r"cell 0.*not after its crash"):
+            Grid([{"preset": "ssp", "faults": ((30, 0, 20),)}])
+        with pytest.raises(ValueError, match=r"cell 0.*not after its crash"):
+            Grid([{"preset": "ssp", "faults": ((30, 0, 30),)}])
+
+    def test_overlapping_outages_on_one_ds(self):
+        with pytest.raises(ValueError, match=r"cell 0.*rows 0 and 1 overlap"):
+            Grid([{"preset": "ssp", "faults": ((10, 0, 50), (20, 0, 60))}])
+        # same interval on DIFFERENT data sources is fine
+        g = Grid([{"preset": "ssp", "faults": ((10, 0, 50), (10, 1, 50))}])
+        assert g.max_faults == 2
+
+    def test_malformed_row(self):
+        with pytest.raises(ValueError, match=r"cell 1.*row 0 must be a"):
+            Grid([{"preset": "ssp"}, {"preset": "ssp", "faults": ((10, 0),)}])
+        with pytest.raises(ValueError, match=r"cell 0.*must be a sequence"):
+            Grid([{"preset": "ssp", "faults": 7}])
+
+    def test_ragged_schedules_raise_with_cell_index(self):
+        with pytest.raises(ValueError, match=r"cell 1.*has 2 rows.*pad"):
+            Grid([
+                {"preset": "ssp", "faults": ((10, 0, 20),)},
+                {"preset": "geotp", "faults": ((10, 0, 20), (30, 1, 40))},
+            ])
+        with pytest.raises(ValueError, match=r"cell 1: no fault schedule"):
+            Grid([
+                {"preset": "ssp", "faults": ((10, 0, 20),)},
+                {"preset": "geotp"},
+            ])
+
+    def test_pad_rows_skip_semantic_checks(self):
+        # pad rows carry ds=0 / recover<=crash by convention and must pass
+        g = Grid([{
+            "preset": "ssp",
+            "faults": ((10, 0, 20), (INF_US, 0, INF_US)),
+        }])
+        assert g.max_faults == 2
+
+    def test_cross_sweeps_schedules_by_depth(self):
+        one = Grid.cross(preset="geotp", faults=((10, 0, 20), (30, 1, 40)))
+        assert len(one) == 1 and one.max_faults == 2
+        swept = Grid.cross(
+            preset="geotp", faults=[[(10, 0, 20)], [(30, 1, 40)]]
+        )
+        assert len(swept) == 2
+        assert swept.cells[1]["faults"] == ((30, 1, 40),)
+
+    def test_faults_are_not_tabulation_labels(self):
+        g = Grid.cross(preset="geotp", faults=((10, 0, 20),), theta=0.9)
+        assert "faults" not in g.labels(0) and g.labels(0)["theta"] == 0.9
+
+    def test_simulator_derives_max_faults_from_grid(self):
+        bank = _bank()
+        sim = Simulator.from_bank(bank, horizon_s=0.2, warmup_s=0.0)
+        grid = Grid.cross(
+            preset="geotp", rtt_ms=RTT, faults=((20_000, 0, 60_000),)
+        )
+        res = sim.run_grid(grid, bank)
+        assert res.cfg.max_faults == 1
+        assert sim.cfg.max_faults == 0  # the Simulator itself is untouched
+        res0 = sim.run_grid(Grid.cross(preset="geotp", rtt_ms=RTT), bank)
+        assert res0.cfg.max_faults == 0
+        assert res0.drain["availability"] == 1.0

@@ -1,0 +1,123 @@
+"""Elastic resize plans + one-round-commit checkpoints.
+
+The recovery story the engine *simulates* (the ``faults`` Grid axis:
+deterministic DS crash/recovery driving the peer-abort path), exercised on
+the real-infrastructure side: `validate(plan_resize(...))` must hold for
+every old x new host pair, and a crash mid-prepare (shard written, COMMIT
+absent) must leave no torn checkpoint state after `recover()`.
+"""
+
+import numpy as np
+import pytest
+
+from repro.dist import checkpoint, elastic
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests need the dev extra; skip, don't fail
+    HAVE_HYPOTHESIS = False
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
+
+    def settings(**kw):
+        return lambda f: f
+
+    def given(*a, **kw):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+
+class TestResizePlan:
+    def test_exhaustive_small_sweep(self):
+        # every old x new pair up to 8 hosts, several batch sizes: the plan
+        # must tile the batch exactly and read only existing old shards
+        for old in range(1, 9):
+            for new in range(1, 9):
+                plan = elastic.plan_resize(old, new)
+                assert plan.new_hosts == new and plan.old_hosts == old
+                assert len(plan.sources) == len(plan.batch_ranges) == new
+                for srcs in plan.sources:
+                    assert all(0 <= s < old for s in srcs)
+                for batch in (1, 7, 64, 1000):
+                    assert elastic.validate(plan, batch), (old, new, batch)
+
+    @given(
+        old=st.integers(min_value=1, max_value=64),
+        new=st.integers(min_value=1, max_value=64),
+        batch=st.integers(min_value=1, max_value=100_000),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_plan_property(self, old, new, batch):
+        plan = elastic.plan_resize(old, new)
+        assert elastic.validate(plan, batch)
+        # per-host ranges are non-overlapping, ordered, and cover [0, batch)
+        rows = [elastic.local_batch(batch, plan, h) for h in range(new)]
+        total = sum(hi - lo for lo, hi in rows)
+        assert total == batch
+        assert all(hi >= lo for lo, hi in rows)
+
+    def test_shrink_and_grow_reuse_old_shards(self):
+        plan = elastic.plan_resize(4, 2)
+        assert plan.sources == ((0,), (1,))
+        plan = elastic.plan_resize(2, 4)
+        assert plan.sources == ((0,), (1,), (0,), (1,))
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((4, 3)).astype(np.float32),
+        "b": rng.standard_normal((3,)).astype(np.float32),
+        "inner": {"scale": np.float32(seed + 1.5)},
+    }
+
+
+class TestCheckpointOneRoundCommit:
+    def test_write_commit_restore_roundtrip(self, tmp_path):
+        mgr = checkpoint.CheckpointManager(tmp_path, n_hosts=2)
+        trees = [_tree(0), _tree(1)]
+        for h, t in enumerate(trees):
+            mgr.write_shard(7, h, t)
+        assert mgr.prepared(7)
+        assert mgr.commit(7)
+        assert mgr.latest_step() == 7
+        for h, t in enumerate(trees):
+            got = mgr.restore(7, h, like=_tree(99))
+            for k in ("w", "b"):
+                np.testing.assert_array_equal(got[k], t[k])
+            np.testing.assert_array_equal(got["inner"]["scale"], t["inner"]["scale"])
+
+    def test_commit_refuses_partial_prepare(self, tmp_path):
+        mgr = checkpoint.CheckpointManager(tmp_path, n_hosts=2)
+        mgr.write_shard(3, 0, _tree())  # host 1 never votes
+        assert not mgr.prepared(3)
+        assert not mgr.commit(3)
+        assert mgr.latest_step() is None
+
+    def test_crash_mid_prepare_leaves_no_torn_state(self, tmp_path):
+        # the filesystem analogue of the engine's crash-mid-prepare abort:
+        # a step without COMMIT never happened and is garbage-collected
+        mgr = checkpoint.CheckpointManager(tmp_path, n_hosts=2)
+        for h in range(2):
+            mgr.write_shard(1, h, _tree(h))
+        assert mgr.commit(1)
+        mgr.write_shard(2, 0, _tree(5))  # crash before host 1's shard
+        assert mgr.recover() == 1  # latest COMMITTED step survives
+        assert not (tmp_path / "step_00000002").exists()  # leftovers GC'd
+        assert (tmp_path / "step_00000001" / "COMMIT").exists()
+
+    def test_commit_is_idempotent(self, tmp_path):
+        mgr = checkpoint.CheckpointManager(tmp_path, n_hosts=1)
+        mgr.write_shard(4, 0, _tree())
+        assert mgr.commit(4)
+        assert mgr.commit(4)  # re-publish is a no-op, still True
+        assert mgr.recover() == 4
+
+    def test_recover_empty_root(self, tmp_path):
+        mgr = checkpoint.CheckpointManager(tmp_path, n_hosts=1)
+        assert mgr.recover() is None
