@@ -352,6 +352,65 @@ def fig16_faults(quick=True):
     return out
 
 
+def fig17_partitions(quick=True):
+    """Link-fault sweep: GeoTP vs SSP under typed link faults — an
+    asymmetric middleware partition (replica failover + stale reads), a
+    degraded link (EWMA keeps observing, GeoTP re-plans around it) and a
+    mesh partition — against a fault-free control of the same shape."""
+    out = []
+    horizon_s = 8.0 if quick else 20.0
+    bank = ycsb_bank(QUICK_T, theta=0.9, dist_ratio=0.2)
+    MW = engine.MW
+    P, G = engine.KIND_PARTITION, engine.KIND_DEGRADE
+    pad = (engine.INF_US, engine.KIND_CRASH, 0, 0, engine.INF_US, 0)
+    # mw cut of ds1 (failover window), 4x degrade of the ds2 link, mesh cut
+    partitions = (
+        (1_500_000, P, MW, 1, 4_000_000, 0),
+        (2_000_000, G, MW, 2, 5_000_000, 4_000),
+        (5_500_000, P, 1, 2, 6_500_000, 0),
+    )
+    # pure degrade cycles: nothing severed, latency inflation only
+    degrades = (
+        (1_500_000, G, MW, 1, 4_500_000, 6_000),
+        (3_000_000, G, MW, 2, 6_000_000, 4_000),
+        pad,
+    )
+    clean = (pad,) * len(partitions)
+    replicas = dict(replica_tau=(30_000,) * 4, repl_lag_us=500_000)
+    cells = []
+    for label, sched in (
+        ("partitions", partitions), ("degrades", degrades), ("fault-free", clean)
+    ):
+        for preset in ("ssp", "geotp"):
+            cells.append(dict(preset=preset, faults=sched, schedule=label, **replicas))
+    res = run_sweep(
+        "fig17", cells, bank, QUICK_T, horizon_s=horizon_s, warmup_s=1.0
+    )
+    for i, (c, m) in enumerate(zip(cells, res.metrics)):
+        d = engine.drain_stats(res.world(i), horizon_us=res.cfg.horizon_us)
+        out.append(
+            dict(
+                schedule=c["schedule"],
+                availability=d["availability"],
+                link_downtime_us=d["link_downtime_us"],
+                failovers=d["failovers"],
+                stale_reads=d["stale_reads"],
+                max_staleness_us=d["max_staleness_us"],
+                abort_causes=d["abort_causes"],
+                commits_during_fault=d["commits_during_fault"],
+                **m,
+            )
+        )
+        print(
+            summary_line(f"fig17 {c['schedule']} {c['preset']}", m)
+            + f" avail={d['availability']:.4f}"
+            f" failovers={d['failovers']}"
+            f" stale_reads={d['stale_reads']}"
+        )
+    save("fig17_partitions", out)
+    return out
+
+
 ALL_FIGURES = [
     fig1_motivation,
     fig5_overall,
@@ -366,4 +425,5 @@ ALL_FIGURES = [
     fig14_txn_length,
     fig15_multiregion,
     fig16_faults,
+    fig17_partitions,
 ]

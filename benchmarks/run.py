@@ -10,11 +10,13 @@ drain hit rate, mean window length and while-loop trip count per strategy
 into results/bench/BENCH_engine.json, compares against the seed engine
 (single-event stepping, one compile per grid cell), runs a crash-heavy
 fault schedule to completion (recording availability / abort-cause /
-goodput-during-fault telemetry), and acts as a guard: it fails if map
-events/sec drops more than 30% below the stored baseline, if the vmap path
-reports a zero drain hit rate (the silent drain-disabled downgrade this
-telemetry used to hide), or if the fault schedule fails to inject real
-downtime or to recover.
+goodput-during-fault telemetry) plus a partition-heavy typed schedule
+(asymmetric middleware cut + degraded link, recording failover / stale-read
+telemetry), and acts as a guard: it fails if map events/sec drops more than
+30% below the stored baseline, if the vmap path reports a zero drain hit
+rate (the silent drain-disabled downgrade this telemetry used to hide), or
+if either fault schedule fails to inject real downtime, to recover, or to
+fail reads over to the replica.
 """
 
 from __future__ import annotations
@@ -132,6 +134,34 @@ def validate(results_dir="results/bench") -> list:
                     >= faulted["ssp"]["throughput_tps"],
                     {k: round(v["throughput_tps"]) for k, v in faulted.items()})
 
+    fig17 = load("fig17_partitions")
+    if fig17:
+        parts = {r["preset"]: r for r in fig17 if r["schedule"] == "partitions"}
+        degr = {r["preset"]: r for r in fig17 if r["schedule"] == "degrades"}
+        clean = {r["preset"]: r for r in fig17 if r["schedule"] == "fault-free"}
+        if parts and clean:
+            add("fig17: partitions charge availability, fault-free does not",
+                all(r["availability"] < 1.0 for r in parts.values())
+                and all(r["availability"] == 1.0 for r in clean.values()),
+                {k: round(v["availability"], 4) for k, v in parts.items()})
+            add("fig17: replica failover serves stale reads during the cut",
+                all(r["failovers"] > 0 and r["stale_reads"] > 0
+                    for r in parts.values()),
+                {k: (v["failovers"], v["stale_reads"]) for k, v in parts.items()})
+        if degr and clean:
+            add("fig17: degraded links inflate latency without downtime",
+                all(r["availability"] == 1.0 for r in degr.values())
+                and all(
+                    degr[p]["avg_latency_ms"] > clean[p]["avg_latency_ms"]
+                    for p in degr
+                ),
+                {k: round(v["avg_latency_ms"]) for k, v in degr.items()})
+            if "geotp" in degr and "ssp" in degr:
+                add("fig17: GeoTP re-plans around the degraded link (>= SSP)",
+                    degr["geotp"]["throughput_tps"]
+                    >= degr["ssp"]["throughput_tps"],
+                    {k: round(v["throughput_tps"]) for k, v in degr.items()})
+
     t1 = load("table1_heterogeneous")
     if t1:
         oks = []
@@ -160,6 +190,13 @@ SMOKE_MIN_SPEEDUP = 3.0  # ...unless the same-run speedup-vs-seed still holds
 # crash-heavy fault-injection smoke: two full crash/recovery cycles inside
 # the smoke horizon ((t_crash_us, ds, t_recover_us) rows, paper 4-DS layout)
 SMOKE_FAULTS = ((500_000, 0, 1_000_000), (1_200_000, 2, 1_900_000))
+# partition-heavy smoke: typed rows — a long asymmetric middleware cut (so
+# admissions during the cut fail over to the replica) plus a degraded link
+SMOKE_PARTITIONS = (
+    (600_000, 1, -1, 1, 2_300_000, 0),  # KIND_PARTITION, MW<->ds1
+    (800_000, 2, -1, 2, 2_000_000, 4_000),  # KIND_DEGRADE, MW<->ds2, 4x
+)
+SMOKE_REPLICAS = dict(replica_tau=(30_000,) * 4, repl_lag_us=500_000)
 
 
 def smoke() -> int:
@@ -294,6 +331,31 @@ def smoke() -> int:
         f"{d_fault['commits_during_fault']}, {wall_fault:.1f}s (incl compile)"
     )
 
+    # partition-heavy typed schedule: the asymmetric middleware cut must
+    # register as real downtime AND the replica failover path must serve
+    # stale reads while the primary is unreachable
+    t0 = time.time()
+    res_p = common.run_sweep(
+        "smoke_partitions",
+        [
+            dict(preset=p, seed=0, faults=SMOKE_PARTITIONS, **SMOKE_REPLICAS)
+            for p in ("ssp", "geotp")
+        ],
+        banks[0],
+        SMOKE_T,
+        horizon_s=SMOKE_HORIZON_S,
+        warmup_s=SMOKE_WARMUP_S,
+        strategy="map",
+    )
+    wall_part = time.time() - t0
+    d_part = res_p.drain
+    print(
+        f"[smoke] partitions: {len(res_p)} worlds, availability "
+        f"{d_part['availability']:.4f}, failovers {d_part['failovers']}, "
+        f"stale reads {d_part['stale_reads']} (max staleness "
+        f"{d_part['max_staleness_us']}us), {wall_part:.1f}s (incl compile)"
+    )
+
     bench = common.load_bench()
     prior = bench.get("smoke", {}).get("events_per_sec_batched")
     prior_mwl = bench.get("smoke", {}).get("mean_window_len")
@@ -320,8 +382,34 @@ def smoke() -> int:
         "abort_causes_fault": d_fault["abort_causes"],
         "commits_during_fault": d_fault["commits_during_fault"],
         "wall_fault_s": round(wall_fault, 2),
+        "availability_partition": d_part["availability"],
+        "failovers_partition": d_part["failovers"],
+        "stale_reads_partition": d_part["stale_reads"],
+        "max_staleness_us_partition": d_part["max_staleness_us"],
+        "wall_partition_s": round(wall_part, 2),
         "total_wall_s": round(time.time() - t_all, 2),
     }
+    if (
+        not 0.0 < d_part["availability"] < 1.0
+        or d_part["failovers"] <= 0
+        or d_part["stale_reads"] <= 0
+        or any(m["commits"] == 0 for m in res_p.metrics)
+    ):
+        # the 1.7s middleware cut must register as downtime, and replica
+        # failover must actually serve stale reads while ds1 is unreachable
+        print(
+            f"[smoke] PARTITION REGRESSION: typed schedule reported "
+            f"availability={d_part['availability']}, failovers="
+            f"{d_part['failovers']}, stale_reads={d_part['stale_reads']}, "
+            f"commits={[m['commits'] for m in res_p.metrics]} — the cut was "
+            f"not injected or the failover path went dead"
+        )
+        if prior is not None:
+            entry["events_per_sec_batched"] = prior
+        if prior_mwl is not None:
+            entry["mean_window_len"] = prior_mwl
+        common.record_smoke(entry)
+        return 1
     if not 0.0 < d_fault["availability"] < 1.0 or any(
         m["commits"] == 0 for m in res_f.metrics
     ):

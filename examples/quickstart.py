@@ -48,6 +48,31 @@ print(f"with a 2s outage of DS 0: availability {d['availability']:.4f}, "
       f"commits during outage {d['commits_during_fault']}")
 assert 0.0 < d["availability"] < 1.0
 
+# Link-level faults: typed (t_start, kind, endpoint_a, endpoint_b, t_end,
+# severity) rows. A PARTITION severs one link — in-flight statements defer
+# to the heal instead of crash-aborting, and with `replica_tau` set,
+# read-only work at the cut DS fails over to its replica (stale reads and
+# the worst staleness window are recorded). A DEGRADE multiplies a link's
+# RTT — nothing is severed, the EWMA latency monitor keeps observing and
+# GeoTP re-plans around the slow link.
+from repro.core.engine import KIND_DEGRADE, KIND_PARTITION, MW
+
+partitioned = Grid.cross(
+    preset=("ssp", "geotp"), jitter_milli=0,
+    faults=(
+        (2_000_000, KIND_PARTITION, MW, 0, 4_000_000, 0),   # DM<->DS0 cut
+        (2_500_000, KIND_DEGRADE, MW, 1, 4_500_000, 5_000),  # DS1 5x slower
+    ),
+    replica_tau=(30_000,) * 4, repl_lag_us=500_000,
+)
+res_p = sim.run_grid(partitioned, bank)
+d = res_p.drain
+print(f"with a 2s partition of DS 0: availability {d['availability']:.4f}, "
+      f"failovers {d['failovers']}, stale reads {d['stale_reads']} "
+      f"(max staleness {d['max_staleness_us']}us), per-link downtime "
+      f"{d['link_downtime_us']}us")
+assert 0.0 < d["availability"] < 1.0
+
 # ---- 3. The model substrate: one forward pass of an assigned arch ----------
 from repro.configs import registry
 from repro.models import stack

@@ -22,9 +22,11 @@
 # that map throughput has not dropped >30% below the baseline stored in
 # results/bench/BENCH_engine.json, that the mean window length has not
 # regressed below its stored baseline (the slot-accurate stoppers must not
-# silently coarsen back), and that a crash-heavy fault schedule runs to
-# completion with real availability loss recorded into the bench JSON.
-# Guard semantics: docs/benchmarks.md.
+# silently coarsen back), that a crash-heavy fault schedule runs to
+# completion with real availability loss recorded into the bench JSON, and
+# that a partition-heavy typed schedule (asymmetric middleware cut +
+# degraded link) records real downtime AND replica failovers serving stale
+# reads. Guard semantics: docs/benchmarks.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -95,6 +97,10 @@ grep -Eq "drain hit rate map: [0-9.]+%, vmap: [0-9.]+%" /tmp/smoke.out || {
 }
 grep -Eq "\[smoke\] faults: .*availability 0\.[0-9]+" /tmp/smoke.out || {
     echo "[ci] smoke did not run the crash-heavy fault schedule"
+    exit 1
+}
+grep -Eq "\[smoke\] partitions: .*availability 0\.[0-9]+, failovers [1-9][0-9]*, stale reads [1-9][0-9]*" /tmp/smoke.out || {
+    echo "[ci] smoke did not run the partition-heavy schedule (or failover path went dead)"
     exit 1
 }
 echo "[ci] OK"

@@ -4,10 +4,13 @@ This is the paper's experimental platform, rebuilt as a deterministic JAX
 state machine and decomposed into a package:
 
     state.py     shapes + state containers (SimConfig/SimState/WorldSpec/
-                 DynProto) and the shared scalar helpers
-    handlers.py  sequential per-event semantics: lock tables, hotspot,
-                 DM protocol progress, the 12 fused event handlers
-    faults.py    deterministic fault injection: DS crash cascade, recovery,
+                 DynProto), the shared scalar helpers and the effective-link
+                 model (`_mw_link`/`_ds_send`: partitions + degrades)
+    locks.py     FIFO-fair 2PL lock-table primitives over the op arrays
+    handlers.py  sequential per-event semantics: hotspot, DM protocol
+                 progress, replica failover, the 12 fused event handlers
+    faults.py    deterministic typed fault injection: crash cascades,
+                 asymmetric link partitions, latency degradation, recovery,
                  heartbeat probes (shared verbatim by all four step modes)
     step.py      seed-reference step (single event, 12/14-way lax.switch)
     omni.py      branchless omnibus step (lockstep/vmap single-event path)
@@ -87,6 +90,13 @@ from repro.core.engine.state import (
     CAUSE_CRASH,
     CAUSE_EXHAUSTED,
     ABORT_CAUSES,
+    # typed fault rows
+    KIND_CRASH,
+    KIND_PARTITION,
+    KIND_DEGRADE,
+    FAULT_KINDS,
+    FAULT_COLS,
+    MW,
     HIST_BINS,
     INF_US,
     DynProto,
@@ -111,9 +121,12 @@ from repro.core.engine.state import (
     _times_flat,
     _u01,
 )
-from repro.core.engine.handlers import (
+from repro.core.engine.locks import (
     _attempt_lock,
+    _grant_decision,
     _release_and_grant,
+)
+from repro.core.engine.handlers import (
     _finish_txn,
     _dm_progress,
     _initiate_abort,

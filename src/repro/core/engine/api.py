@@ -46,7 +46,12 @@ from repro.core.protocol import PRESETS, ProtocolConfig
 from repro.core.engine.batch import _run_jit, _sim_world_fresh, simulate_batch
 from repro.core.engine.metrics import drain_stats, summarize, world_index
 from repro.core.engine.state import (
+    FAULT_COLS,
     INF_US,
+    KIND_CRASH,
+    KIND_DEGRADE,
+    KIND_PARTITION,
+    MW,
     SimConfig,
     WorldSpec,
     make_world,
@@ -56,10 +61,10 @@ from repro.core.engine.state import (
 # engine-owned axes a Grid cell may set; everything else is a free-form label
 GRID_AXES = (
     "preset", "rtt_ms", "tau_true_us", "jitter_milli", "exec_scale_milli",
-    "seed", "faults",
+    "seed", "faults", "replica_tau", "repl_lag_us",
 )
 # axes whose single value is itself a sequence (one entry per data source)
-_VECTOR_AXES = ("rtt_ms", "tau_true_us", "exec_scale_milli")
+_VECTOR_AXES = ("rtt_ms", "tau_true_us", "exec_scale_milli", "replica_tau")
 
 BENCH_DIR = pathlib.Path("results/bench")
 BENCH_FILE = BENCH_DIR / "BENCH_engine.json"
@@ -124,55 +129,120 @@ def _cell_num_ds(cell: dict, default_rtt_ms) -> int:
     return len(rtt if rtt is not None else default_rtt_ms)
 
 
+def _fault_row_resources(kind: int, a: int, b: int) -> tuple:
+    """The link/node resources one typed fault row occupies, as hashable
+    keys: overlapping intervals on a shared resource are rejected. A CRASH
+    claims its node AND its middleware link (the outage accounting
+    `down_since`/`down_us` is per-node and cannot track two concurrent
+    spells); a middleware-side PARTITION/DEGRADE claims the mw<->b link; a
+    mesh row claims the undirected a<->b link."""
+    if kind == KIND_CRASH:
+        return (("ds", a), ("mw", a))
+    if a == MW:
+        return (("mw", b),)
+    return (("mesh", min(a, b), max(a, b)),)
+
+
 def _validate_cell_faults(i: int, val, num_ds: int) -> tuple:
     """Normalize + validate one cell's fault schedule at Grid construction.
 
-    Returns the schedule as a tuple of (t_crash_us, ds, t_recover_us) int
-    triples. Pad rows (crash >= INF_US) are kept but skipped by the semantic
-    checks. Raises ValueError with the offending cell index for malformed
-    rows, out-of-range DS indices, recover-before-crash, or overlapping
-    crash intervals on one data source.
+    Rows are typed 6-tuples ``(t_start_us, kind, endpoint_a, endpoint_b,
+    t_end_us, severity)`` with ``kind`` in {KIND_CRASH, KIND_PARTITION,
+    KIND_DEGRADE} and ``endpoint_a == MW`` (-1) selecting the middleware
+    side of a link; legacy ``(t_crash_us, ds, t_recover_us)`` crash triples
+    are accepted and widened. Returns the schedule normalized to a tuple of
+    6-tuples. Pad rows (t_start >= INF_US) are kept but skipped by the
+    semantic checks. Raises ValueError with the offending cell index for
+    malformed rows, unknown kinds, out-of-range endpoints, end-before-start,
+    non-positive DEGRADE severity, or overlapping intervals on one
+    link/node (see `_fault_row_resources`).
     """
     if not isinstance(val, (list, tuple)):
         raise ValueError(
             f"Grid cell {i}: faults must be a sequence of "
-            f"(t_crash_us, ds, t_recover_us) triples, got {type(val).__name__}"
+            f"(t_crash_us, ds, t_recover_us) triples or typed "
+            f"(t_start_us, kind, endpoint_a, endpoint_b, t_end_us, severity) "
+            f"rows, got {type(val).__name__}"
         )
     rows = []
-    live = {}  # ds -> list of ((crash, recover), row index)
+    live = {}  # resource key -> list of ((start, end), row index)
     for j, r in enumerate(val):
-        if not isinstance(r, (list, tuple)) or len(r) != 3:
+        if not isinstance(r, (list, tuple)) or len(r) not in (3, FAULT_COLS):
             raise ValueError(
                 f"Grid cell {i}: faults row {j} must be a "
-                f"(t_crash_us, ds, t_recover_us) triple, got {r!r}"
+                f"(t_crash_us, ds, t_recover_us) triple or a "
+                f"(t_start_us, kind, endpoint_a, endpoint_b, t_end_us, "
+                f"severity) 6-tuple, got {r!r}"
             )
-        crash, ds, rec = (int(x) for x in r)
-        rows.append((crash, ds, rec))
-        if crash >= INF_US:
+        if len(r) == 3:
+            crash, ds, rec = (int(x) for x in r)
+            start, kind, a, b, end, sev = crash, KIND_CRASH, ds, ds, rec, 0
+        else:
+            start, kind, a, b, end, sev = (int(x) for x in r)
+        rows.append((start, kind, a, b, end, sev))
+        if start >= INF_US:
             continue  # pad row — never fires inside the horizon
-        if not 0 <= ds < num_ds:
+        if kind not in (KIND_CRASH, KIND_PARTITION, KIND_DEGRADE):
             raise ValueError(
-                f"Grid cell {i}: faults row {j} targets ds={ds}, out of "
-                f"range for num_ds={num_ds}"
+                f"Grid cell {i}: faults row {j} has unknown kind={kind} "
+                f"(crash={KIND_CRASH}, partition={KIND_PARTITION}, "
+                f"degrade={KIND_DEGRADE})"
             )
-        if rec <= crash:
-            raise ValueError(
-                f"Grid cell {i}: faults row {j} recovers at {rec}us, which "
-                f"is not after its crash at {crash}us"
-            )
-        for (c0, r0), j0 in live.get(ds, ()):
-            if crash < r0 and c0 < rec:
+        if kind == KIND_CRASH:
+            if not 0 <= a < num_ds:
                 raise ValueError(
-                    f"Grid cell {i}: faults rows {j0} and {j} overlap on "
-                    f"ds={ds} ([{c0}, {r0}) vs [{crash}, {rec}) us)"
+                    f"Grid cell {i}: faults row {j} targets ds={a}, out of "
+                    f"range for num_ds={num_ds}"
                 )
-        live.setdefault(ds, []).append(((crash, rec), j))
+        else:
+            if a != MW and not 0 <= a < num_ds:
+                raise ValueError(
+                    f"Grid cell {i}: faults row {j} endpoint_a={a} is "
+                    f"neither MW (-1) nor a ds in range for num_ds={num_ds}"
+                )
+            if not 0 <= b < num_ds:
+                raise ValueError(
+                    f"Grid cell {i}: faults row {j} endpoint_b={b}, out of "
+                    f"range for num_ds={num_ds}"
+                )
+            if a == b:
+                raise ValueError(
+                    f"Grid cell {i}: faults row {j} links ds={a} to itself"
+                )
+        if end <= start:
+            raise ValueError(
+                f"Grid cell {i}: faults row {j} "
+                + (
+                    f"recovers at {end}us, which is not after its crash "
+                    f"at {start}us"
+                    if kind == KIND_CRASH
+                    else f"ends at {end}us, which is not after its start "
+                    f"at {start}us"
+                )
+            )
+        if kind == KIND_DEGRADE and sev <= 0:
+            raise ValueError(
+                f"Grid cell {i}: faults row {j} is a degrade with "
+                f"severity={sev}; need a positive milli-scale RTT "
+                f"multiplier (e.g. 3000 = 3x)"
+            )
+        for res in _fault_row_resources(kind, a, b):
+            for (c0, r0), j0 in live.get(res, ()):
+                if start < r0 and c0 < end:
+                    what = "ds" if res[0] == "ds" else "link"
+                    name = res[1] if len(res) == 2 else f"{res[1]}<->{res[2]}"
+                    raise ValueError(
+                        f"Grid cell {i}: faults rows {j0} and {j} overlap "
+                        f"on {what}={name} ([{c0}, {r0}) vs "
+                        f"[{start}, {end}) us)"
+                    )
+            live.setdefault(res, []).append(((start, end), j))
     return tuple(rows)
 
 
 # axes dropped from tabulated rows (per-DS arrays don't tabulate; rtt_ms is
 # kept — figures label cells by it)
-_NON_LABEL_AXES = ("tau_true_us", "exec_scale_milli", "faults")
+_NON_LABEL_AXES = ("tau_true_us", "exec_scale_milli", "faults", "replica_tau")
 
 
 def _row_labels(cell: dict) -> dict:
@@ -197,12 +267,17 @@ class Grid:
     ``seed``, ``faults``. Any other key is a free-form label carried into
     `RunResult.rows()` (figure axes like ``theta`` or ``level``).
 
-    ``faults`` is a deterministic crash schedule: a sequence of
-    ``(t_crash_us, ds, t_recover_us)`` triples (pad rows: ``(INF_US, 0,
-    INF_US)``). Schedules are validated at construction (DS index range,
-    recover after crash, no overlapping outages per DS) and must have the
-    same row count in every cell — the schedule is a static engine axis
+    ``faults`` is a deterministic fault schedule: a sequence of typed
+    ``(t_start_us, kind, endpoint_a, endpoint_b, t_end_us, severity)`` rows
+    (kind in {crash, partition, degrade}; ``endpoint_a == MW`` (-1) selects
+    the middleware side of a link; legacy ``(t_crash_us, ds, t_recover_us)``
+    crash triples still accepted; pad rows: ``(INF_US, 0, INF_US)``).
+    Schedules are validated at construction (kind/endpoint ranges, end after
+    start, no overlapping intervals per link/node) and must have the same
+    row count in every cell — the schedule is a static engine axis
     (`SimConfig.max_faults`), derived per grid by the `Simulator`.
+    ``replica_tau`` (per-DS replica-link RTT vector, INF_US = no replica)
+    and ``repl_lag_us`` enable read-only replica failover during outages.
 
     NOTE: an unset ``jitter_milli`` defaults to **30** (±3% one-way jitter —
     the historical `run_sweep` cell default, kept for baseline
@@ -267,6 +342,13 @@ class Grid:
                 )
             if c.get("faults") is not None:
                 c["faults"] = _validate_cell_faults(i, c["faults"], self.num_ds)
+            rt = c.get("replica_tau")
+            if rt is not None and len(rt) != self.num_ds:
+                raise ValueError(
+                    f"Grid cell {i}: replica_tau has {len(rt)} entries, "
+                    f"need one per data source (num_ds={self.num_ds}; use "
+                    f"INF_US for data sources without a replica)"
+                )
         # the fault axis is static-shaped: every cell must carry the same
         # number of schedule rows (F) so the worlds stack into one batch
         fault_cells = [i for i, c in enumerate(cells) if c.get("faults") is not None]
@@ -391,6 +473,8 @@ class Grid:
             seed=c.get("seed", 0),
             faults=c.get("faults"),
             max_faults=self.max_faults,
+            replica_tau=c.get("replica_tau"),
+            repl_lag_us=c.get("repl_lag_us", 0),
         )
 
     def worlds(self) -> WorldSpec:
@@ -439,8 +523,10 @@ class RunResult:
     0
     >>> sorted(res.drain)  # doctest: +NORMALIZE_WHITESPACE
     ['abort_causes', 'availability', 'commits_during_fault',
-     'drain_hit_rate', 'drained_events', 'events', 'loop_iters',
-     'mean_window_len', 'plan_fused', 'seq_events', 'window_stops', 'windows']
+     'drain_hit_rate', 'drained_events', 'events', 'failovers',
+     'link_downtime_us', 'loop_iters', 'max_staleness_us',
+     'mean_window_len', 'plan_fused', 'seq_events', 'stale_reads',
+     'window_stops', 'windows']
     >>> res.drain["availability"]  # fault-free run: every DS up throughout
     1.0
     """
@@ -502,7 +588,8 @@ class RunResult:
         baselines and the smoke-guard comparisons keep working, plus the jax
         runtime environment keys, the per-stopper window-termination counts,
         whether the fused lockstep plan ran, and the fault telemetry
-        (availability / abort-cause breakdown / commits during outages — see
+        (availability / abort-cause breakdown / commits during outages /
+        per-link downtime / replica failovers + stale reads — see
         docs/benchmarks.md).
         """
         d = self.drain
@@ -522,6 +609,10 @@ class RunResult:
             "availability": d["availability"],
             "abort_causes": d["abort_causes"],
             "commits_during_fault": d["commits_during_fault"],
+            "link_downtime_us": d["link_downtime_us"],
+            "stale_reads": d["stale_reads"],
+            "failovers": d["failovers"],
+            "max_staleness_us": d["max_staleness_us"],
         }
         return record_bench(tag, entry, path)
 

@@ -68,6 +68,7 @@ def _apply_window(
     xlel=None,
     xcommit=None,
     xrel=None,
+    act_hb=None,
 ) -> SimState:
     """Materialize a planned window (the events under the act_* masks) in one
     masked pass, bitwise-identical to stepping them sequentially.
@@ -191,16 +192,24 @@ def _apply_window(
     # (the plan caps a DS column at K_EWMA fan-ins, so the unrolled chain
     # composes them exactly; tau_est is never read inside a window — the only
     # readers, txn starts and round advances, are non-drainable) ------------
-    cnt_d = jnp.sum(dm_mask, axis=0, dtype=i32)  # [D]
     if s_.fault_time.shape[0]:
-        # monitor frozen while a DS is down (mirrors the sequential gate);
-        # ds_down cannot change inside a window — fault events are pinned
-        cnt_d = jnp.where(s_.ds_down, 0, cnt_d)
+        # monitor freeze mirrors the sequential `_ewma_est` gate — crashed-DS
+        # fan-ins and replica-link fan-ins don't feed the EWMA — and the
+        # sample is the *effective* RTT so degrades are observed. Neither
+        # ds_down, link state nor replica routing can change inside a window
+        # (fault events are pinned, starts/finishes are non-drainable).
+        cnt_d = jnp.sum(
+            dm_mask & ~(s_.ds_down[None, :] | s_.on_repl), axis=0, dtype=i32
+        )
+        mon_sample = s_.tau_mw_eff
+    else:
+        cnt_d = jnp.sum(dm_mask, axis=0, dtype=i32)  # [D]
+        mon_sample = s_.tau_true
     tau_est = s_.tau_est
     for i in range(K_EWMA):
         tau_est = jnp.where(
             cnt_d > i,
-            ewma_update(tau_est, s_.tau_true, jnp.int32(cfg.beta_milli)),
+            ewma_update(tau_est, mon_sample, jnp.int32(cfg.beta_milli)),
             tau_est,
         )
 
@@ -272,7 +281,22 @@ def _apply_window(
     )
     lcs_span = jnp.where(lcs_have, (evt_sub - s_.first_lock + 500) // 1000, 0)
 
+    # ---- in-window heartbeat probes (satellite of the typed fault model):
+    # mirrors `_hb_event` with now = the slot's scheduled time — count and
+    # re-arm a firing probe, disarm a non-firing one. Reachability cannot
+    # change inside a window, so the plan's fire predicate is exact.
+    extra = {}
+    if s_.fault_time.shape[0] and act_hb is not None:
+        hb_fired = act_hb & v.hb_fire
+        extra["hb_count"] = s_.hb_count + hb_fired.astype(i32)
+        extra["hb_time"] = jnp.where(
+            hb_fired,
+            s_.hb_time + s_.dyn.hb_interval_us,
+            jnp.where(act_hb, INF_US, s_.hb_time),
+        )
+
     return s_._replace(
+        **extra,
         now=t_now,
         iters=s_.iters + iters_inc,
         drained=s_.drained + drained_inc,
@@ -326,10 +350,10 @@ def _drainable_due(s: SimState) -> jax.Array:
         & ~jnp.any(due_op & ~op_drainable)
     )
     if s.fault_time.shape[0]:
-        # a due crash/recovery or heartbeat always takes the sequential step
-        clean = clean & ~jnp.any(s.fault_time == t_now) & ~jnp.any(
-            s.hb_time == t_now
-        )
+        # a due fault event (crash/recovery/partition/degrade transition)
+        # always takes the sequential step; heartbeat probes are conflict-free
+        # within a window (reachability cannot change mid-window) and drain.
+        clean = clean & ~jnp.any(s.fault_time == t_now)
     return clean
 
 
@@ -364,6 +388,7 @@ def _drain_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
                 v.n_win,
                 jnp.int32(1),
                 jax.nn.one_hot(v.stop_code, N_STOP_REASONS, dtype=jnp.int32),
+                act_hb=v.win_hb,
             )
 
         return jax.lax.cond(v.use, apply_fn, lambda s2: _step(cfg, bank, s2), s_)

@@ -69,16 +69,22 @@ def simulate(
     exec_scale_milli=None,
     state: SimState | None = None,
     faults=None,
+    replica_tau=None,
+    repl_lag_us=0,
 ):
     """Convenience wrapper: init (or continue) + run + summarize.
 
-    `faults` is a [cfg.max_faults, 3] crash schedule (see `state.pad_faults`);
-    only meaningful on fresh runs of a fault-carrying config.
+    `faults` is a [cfg.max_faults, 6] typed schedule of (t_start_us, kind,
+    endpoint_a, endpoint_b, t_end_us, severity) rows — legacy
+    [cfg.max_faults, 3] crash triples are widened (see `state.pad_faults`);
+    only meaningful on fresh runs of a fault-carrying config, as are the
+    replica axes `replica_tau` ([D] replica-link RTTs, INF_US = no replica)
+    and `repl_lag_us`.
     """
     if state is None:
         state = init_state(
             cfg, tau_true_us, tau_ds_us, jitter_milli, exec_scale_milli,
-            faults=faults,
+            faults=faults, replica_tau=replica_tau, repl_lag_us=repl_lag_us,
         )
     state = _run_jit(cfg, bank, state)
     return state, summarize(cfg, state)

@@ -81,8 +81,10 @@ from repro.core.engine.state import (
     SimConfig,
     SimState,
     _delay_salted,
+    _ds_send,
     _exec_us,
     _hist_bin,
+    _mw_link,
     _times_flat,
     _u01,
 )
@@ -123,8 +125,10 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     F = cfg.max_faults
     M0 = T + T * D + T * K
     if F:
-        # fault/heartbeat tail events: always pinned (use=False), handled by
-        # the masked singleton handlers at the very end of this pass
+        # fault tail events: always pinned (use=False), handled by the masked
+        # singleton handlers at the very end of this pass. Heartbeat probes
+        # are conflict-free and drain inside windows; a rank-0 heartbeat only
+        # takes the singleton handler when no window forms (`~use`).
         is_fault0 = (i0 >= M0) & (i0 < M0 + F)
         is_hb0 = i0 >= M0 + F
         is_tail0 = is_fault0 | is_hb0
@@ -205,6 +209,7 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         xlel=xlel,
         xcommit=xcommit,
         xrel=(rel_gate_x, t, d_rel),
+        act_hb=w(use, v.win_hb, False),
     )
 
     # ======================================================================
@@ -214,12 +219,19 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
 
     # ---- latency-monitor refresh for the pinned fan-in (drainable fan-ins
     # were counted by the shared pass's EWMA chain) -------------------------
+    if F:
+        # monitor freeze: a fan-in from a crashed or replica-served DS must
+        # not feed the EWMA; a DEGRADE-inflated link IS observed, so the
+        # sample is the effective RTT (see handlers._ewma_est)
+        mon_freeze = s.ds_down[d_ev] | s.on_repl[t, d_ev]
+        mon_sample = sx.tau_mw_eff[d_ev]
+    else:
+        mon_freeze = s.ds_down[d_ev]
+        mon_sample = sx.tau_true[d_ev]
     tau_est = sx.tau_est.at[d_ev].set(
         w(
-            # monitor freeze: a fan-in from a crashed DS must not feed the
-            # EWMA (see handlers._ewma_est)
-            is_fanin_x & ~s.ds_down[d_ev],
-            ewma_update(sx.tau_est[d_ev], sx.tau_true[d_ev], i32(cfg.beta_milli)),
+            is_fanin_x & ~mon_freeze,
+            ewma_update(sx.tau_est[d_ev], mon_sample, i32(cfg.beta_milli)),
             sx.tau_est[d_ev],
         )
     )
@@ -276,8 +288,18 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     block, force_abort = sched.admission_decision(
         p_abort, u, s.blocked[t], s.dyn.max_blocked
     )
-    # fail fast on a footprint touching a crashed DS (mirrors _h_start_txn)
-    hit_down = is_start & jnp.any(inv_new & s.ds_down)
+    # fail fast on a footprint touching an unreachable DS — unless every hit
+    # DS carries a read-only replica footprint, in which case the whole txn
+    # fails over to the replicas (mirrors _h_start_txn)
+    if F:
+        hit_v = inv_new & (s.ds_down | (s.mw_heal > t_now0))
+        writes_at_d = jnp.any(oh_b & (valid_b & write_b)[:, None], axis=0)
+        can_fo = hit_v & (s.repl_tau < INF_US) & ~writes_at_d
+        do_failover = jnp.any(hit_v) & jnp.all(~hit_v | can_fo)
+        fo = hit_v & do_failover
+        hit_down = is_start & jnp.any(hit_v) & ~do_failover
+    else:
+        hit_down = is_start & jnp.any(inv_new & s.ds_down)
     force_abort = (force_abort & s.dyn.admission & is_start) | hit_down
     block = block & s.dyn.admission & is_start & ~force_abort
     dispatching = is_start & ~block & ~force_abort
@@ -341,7 +363,8 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     )
     lcs_span_x = w(lcs_gate_x, (t_now0 - s.first_lock[t, d_ev] + 500) // 1000, 0)
     ack_salt = salt0(47) + w(is_commit_fin0, 0, 6)  # 47 commit, 53 abort
-    ack_send_t = t_now0 + _delay_salted(s.jitter_milli, s.tau_true[d_ev], ack_salt)
+    kb0, kr0 = _mw_link(s, s.on_repl[t, d_ev], d_ev, t_now0)
+    ack_send_t = kb0 + _delay_salted(s.jitter_milli, kr0, ack_salt)
     sub_row = w(is_finish_x & at_ev, w(is_commit_fin0, SUB_ACK, SUB_ABORT_ACK), sub_row)
     sub_tm = w(is_finish_x & at_ev, ack_send_t, sub_tm)
     # timeout abort fan-out (peer notify + own ack); the partial round's LEL
@@ -353,13 +376,25 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     )
     peers = inv_t & (dd != d_o) & ~abort_family
     ab_salts = salt0(17) + dd
-    notify_direct = _delay_salted(s.jitter_milli, s.tau_ds[d_o], ab_salts)
-    to_dm = _delay_salted(s.jitter_milli, s.tau_true[d_o], salt0(19))
-    notify_via_dm = to_dm + _delay_salted(s.jitter_milli, s.tau_true, ab_salts)
-    notify = w(s.dyn.early_abort, notify_direct, notify_via_dm)
-    own_ack_t = t_now0 + _delay_salted(s.jitter_milli, s.tau_true[d_o], salt0(23))
+    if F:
+        # abort notifications ride the effective links (see _initiate_abort)
+        mesh_base, mesh_tau = _ds_send(s, d_o, dd, t_now0)
+        notify_direct = mesh_base + _delay_salted(s.jitter_milli, mesh_tau, ab_salts)
+        up_base, up_tau = _mw_link(s, s.on_repl[t, d_o], d_o, t_now0)
+        to_dm = up_base + _delay_salted(s.jitter_milli, up_tau, salt0(19))
+        dn_base, dn_tau = _mw_link(s, s.on_repl[t], dd, to_dm)
+        notify_via_dm = dn_base + _delay_salted(s.jitter_milli, dn_tau, ab_salts)
+        notify = w(s.dyn.early_abort, notify_direct, notify_via_dm)
+        ok_base, ok_tau = _mw_link(s, s.on_repl[t, d_o], d_o, t_now0)
+        own_ack_t = ok_base + _delay_salted(s.jitter_milli, ok_tau, salt0(23))
+    else:
+        notify_direct = _delay_salted(s.jitter_milli, s.tau_ds[d_o], ab_salts)
+        to_dm = _delay_salted(s.jitter_milli, s.tau_true[d_o], salt0(19))
+        notify_via_dm = to_dm + _delay_salted(s.jitter_milli, s.tau_true, ab_salts)
+        notify = t_now0 + w(s.dyn.early_abort, notify_direct, notify_via_dm)
+        own_ack_t = t_now0 + _delay_salted(s.jitter_milli, s.tau_true[d_o], salt0(23))
     sub_row = w(is_timeout & peers, SUB_ABORT_PEER, sub_row)
-    sub_tm = w(is_timeout & peers, t_now0 + notify, sub_tm)
+    sub_tm = w(is_timeout & peers, notify, sub_tm)
     sub_row = w(is_timeout & at_do, SUB_ABORT_ACK, sub_row)
     sub_tm = w(is_timeout & at_do, own_ack_t, sub_tm)
     sub_lel_row = sub_lel_row.at[w(is_timeout, d_o, 0)].add(w(is_timeout, span_do, 0))
@@ -475,9 +510,13 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     cause_fin = w(
         ~will_retry_fin & (sx.retries[t] > 0), CAUSE_EXHAUSTED, sx.abort_cause[t]
     )
+    if F:
+        any_down_f = jnp.any(s.ds_down | (s.mw_heal > t_now0))
+    else:
+        any_down_f = jnp.any(s.ds_down)
     sx = sx._replace(
         ab_cause=sx.ab_cause.at[cause_fin].add(one_a),
-        commits_fault=sx.commits_fault + w(jnp.any(s.ds_down), one_c, 0),
+        commits_fault=sx.commits_fault + w(any_down_f, one_c, 0),
     )
     sx = sx._replace(
         commits=sx.commits + one_c,
@@ -557,6 +596,28 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         lcs_cnt=sx.lcs_cnt + lcs_gate_x.astype(i32),
     )
 
+    # ============== replica failover bookkeeping (start / finish) ==========
+    # one combined on_repl write: a dispatching start routes the hit subtxns
+    # to their replicas (stale reads + staleness window recorded), a finish
+    # releases the routing — the two gates are mutually exclusive. Written
+    # after the scatter so every send above read the pre-update routing.
+    if F:
+        stale_w = w(fo, t_now0 - s.down_since + s.repl_lag_us, 0)
+        on_repl_row = w(dispatching, fo, w(gate_fin, False, sx.on_repl[t]))
+        sx = sx._replace(
+            on_repl=sx.on_repl.at[t].set(on_repl_row),
+            failovers=sx.failovers + w(dispatching, jnp.sum(fo.astype(i32)), 0),
+            stale_reads=sx.stale_reads
+            + w(
+                dispatching,
+                jnp.sum((valid_b & ~write_b & fo[ds_b.astype(i32)]).astype(i32)),
+                0,
+            ),
+            max_stale_us=jnp.maximum(
+                sx.max_stale_us, w(dispatching, jnp.max(stale_w), 0)
+            ),
+        )
+
     # ============================== noop ===================================
     upd = dict(
         op_time=w(is_noop & (sx.op_time == t_now0), INF_US, sx.op_time),
@@ -574,10 +635,12 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     # ===================== fault / heartbeat tail events ===================
     # Run dead last: the sub_row/sub_tm scatter above rewrites row `t` (a
     # stale row-0 copy for tail events) and would clobber the crash
-    # cascade's sub-state writes if these ran any earlier. A tail at rank 0
+    # cascade's sub-state writes if these ran any earlier. A fault at rank 0
     # is always pinned, so `use` is False and the rest of the pass was a
-    # masked identity.
+    # masked identity; a rank-0 heartbeat may instead have drained inside
+    # the window (`use`), in which case `_apply_window` already counted and
+    # re-armed it and the singleton handler must stay off.
     if F:
         sx = _fault_event(cfg, sx, f_ev0, is_fault0)
-        sx = _hb_event(cfg, sx, d_hb0, is_hb0)
+        sx = _hb_event(cfg, sx, d_hb0, is_hb0 & ~use)
     return sx

@@ -1,9 +1,10 @@
 """Event handlers: the sequential (per-event) semantics of the engine.
 
-Lock-table primitives, hotspot/metric bookkeeping, DM-side protocol
-progress, the abort path and the twelve fused event handlers the dispatch
-switch routes to, plus the state->handler-id tables. These define the seed
-semantics every other step mode (`omni`, `window`) must reproduce bitwise.
+Hotspot/metric bookkeeping, DM-side protocol progress, the abort path and
+the twelve fused event handlers the dispatch switch routes to, plus the
+state->handler-id tables (the lock-table primitives live in
+`engine.locks`). These define the seed semantics every other step mode
+(`omni`, `window`) must reproduce bitwise.
 """
 
 from __future__ import annotations
@@ -65,126 +66,26 @@ from repro.core.engine.state import (
     SimState,
     _delay,
     _delay_salted,
+    _ds_send,
     _exec_us,
     _hist_bin,
     _measuring,
+    _mw_link,
     _round_done_transition,
     _salt,
     _u01,
 )
 
 # ---------------------------------------------------------------------------
-# lock table primitives
+# lock table primitives live in engine.locks (re-exported here for the
+# dispatch tables and the engine package facade)
 # ---------------------------------------------------------------------------
 
-
-def _attempt_lock(cfg: SimConfig, s: SimState, t, k) -> SimState:
-    """Op (t,k) is at its data source and requests its lock (FIFO-fair).
-
-    Lock state is derived from the op arrays: record r is X-locked iff some
-    EXEC/HOLD op writes it, S-locked iff some EXEC/HOLD op reads it. A new
-    request must queue behind any existing waiter (fair FIFO, as in the
-    MySQL/PG record-lock wait queues the paper's data sources use)."""
-    r = s.op_key[t, k]
-    w = s.op_write[t, k]
-    d = s.op_ds[t, k]
-    st = s.op_state
-    on_r = s.op_key == r
-    holder = (st == OP_EXEC) | (st == OP_HOLD)
-    x_held = jnp.any(holder & on_r & s.op_write)
-    s_held = jnp.any(holder & on_r & ~s.op_write)
-    waiter = jnp.any((st == OP_WAIT) & on_r)
-    ok = jnp.where(w, ~x_held & ~s_held, ~x_held) & ~waiter
-
-    exec_t = s.now + _exec_us(cfg, s, d)
-    s = s._replace(
-        op_state=s.op_state.at[t, k].set(
-            jnp.where(ok, OP_EXEC, OP_WAIT).astype(jnp.int8)
-        ),
-        op_time=s.op_time.at[t, k].set(
-            jnp.where(ok, exec_t, s.now + s.dyn.lock_timeout_us)
-        ),
-        op_enq=s.op_enq.at[t, k].set(s.now),
-        first_lock=s.first_lock.at[t, d].min(jnp.where(ok, s.now, INF_US)),
-    )
-    return s
-
-
-def _grant_decision(held, rel_keys, flat_state, flat_key, flat_write, flat_enq):
-    """FIFO-compatible grant set for a release's keys: [T*K] `granted` mask.
-
-    held/rel_keys: [K] the releasing row's held mask + keys (non-held = -2);
-    flat_*: the [T*K] post-cancel op views. Grant rules: all shared waiters
-    enqueued before the earliest exclusive waiter (unless an exclusive holder
-    remains), else the earliest exclusive waiter (if no holder of either mode
-    remains). Single source for the sequential handler, the branchless
-    omnibus step and the fused windowed pass — the four step modes must agree
-    bitwise on grant fairness.
-    """
-    holderf = (flat_state == OP_EXEC) | (flat_state == OP_HOLD)
-    waitf = flat_state == OP_WAIT
-    eq = flat_key[None, :] == rel_keys[:, None]  # [K, T*K]
-    rem_x = jnp.any(eq & holderf[None, :] & flat_write[None, :], axis=1)
-    rem_s = jnp.any(eq & holderf[None, :] & ~flat_write[None, :], axis=1)
-    M = held[:, None] & eq & waitf[None, :]
-    exq = jnp.where(M & flat_write[None, :], flat_enq[None, :], INF_US)
-    ex_min = jnp.min(exq, axis=1)  # [K]
-    enq = jnp.where(M, flat_enq[None, :], INF_US)
-    grant_s = M & ~flat_write[None, :] & (enq < ex_min[:, None]) & ~rem_x[:, None]
-    any_s = jnp.any(grant_s, axis=1)
-    x_row = jnp.argmin(exq, axis=1)
-    grant_x_ok = (ex_min < INF_US) & ~any_s & ~rem_x & ~rem_s
-    grant_x = (
-        jax.nn.one_hot(x_row, M.shape[1], dtype=bool)
-        & grant_x_ok[:, None]
-        & M
-        & flat_write[None, :]
-    )
-    return jnp.any(grant_s | grant_x, axis=0)  # [T*K]
-
-
-def _release_and_grant(cfg: SimConfig, s: SimState, t, d) -> SimState:
-    """Release every lock txn t holds at data source d, cancel its remaining
-    ops there, and grant waiting requests FIFO-compatibly."""
-    K = cfg.max_ops
-    T = cfg.terminals
-    row_state = s.op_state[t]
-    mine = (row_state != OP_NONE) & (s.op_ds[t] == d.astype(s.op_ds.dtype))
-    held = mine & ((row_state == OP_EXEC) | (row_state == OP_HOLD))
-    rel_keys = jnp.where(held, s.op_key[t], -2)  # -2 matches nothing
-
-    # cancel all my ops at d (this *is* the release: lock state is op-derived)
-    s = s._replace(
-        op_state=s.op_state.at[t].set(
-            jnp.where(mine, OP_DONE, row_state).astype(jnp.int8)
-        ),
-        op_time=s.op_time.at[t].set(jnp.where(mine, INF_US, s.op_time[t])),
-    )
-
-    # ---- grant waiters on the released keys (post-release views) ----------
-    flat_state = s.op_state.reshape(-1)
-    flat_key = s.op_key.reshape(-1)
-    flat_write = s.op_write.reshape(-1)
-    flat_enq = s.op_enq.reshape(-1)
-    flat_ds = s.op_ds.reshape(-1)
-    granted = _grant_decision(
-        held, rel_keys, flat_state, flat_key, flat_write, flat_enq
-    )
-
-    exec_t = s.now + _exec_us(cfg, s, flat_ds.astype(jnp.int32))
-    new_fstate = jnp.where(granted, OP_EXEC, flat_state).astype(jnp.int8)
-    new_ftime = jnp.where(granted, exec_t, s.op_time.reshape(-1))
-    s = s._replace(
-        op_state=new_fstate.reshape(T, K), op_time=new_ftime.reshape(T, K)
-    )
-    # first-lock bookkeeping for grantees
-    gt = jnp.arange(T * K, dtype=jnp.int32) // K
-    fl = s.first_lock.reshape(-1)
-    idx = jnp.where(granted, gt * cfg.num_ds + flat_ds.astype(jnp.int32), T * cfg.num_ds)
-    fl_pad = jnp.concatenate([fl, jnp.full((1,), INF_US, jnp.int32)])
-    fl_pad = fl_pad.at[idx].min(jnp.where(granted, s.now, INF_US))
-    s = s._replace(first_lock=fl_pad[: T * cfg.num_ds].reshape(T, cfg.num_ds))
-    return s
+from repro.core.engine.locks import (  # noqa: E402
+    _attempt_lock,
+    _grant_decision,
+    _release_and_grant,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -257,10 +158,15 @@ def _finish_txn(cfg: SimConfig, s: SimState, t, committed) -> SimState:
     cause = jnp.where(
         ~will_retry & (s.retries[t] > 0), CAUSE_EXHAUSTED, s.abort_cause[t]
     )
+    # goodput gate: "during fault" means some DS is unreachable — crashed or
+    # partitioned from the middleware (fault-free configs: ds_down only)
+    if s.fault_time.shape[0]:
+        any_down = jnp.any(s.ds_down | (s.mw_heal > s.now))
+    else:
+        any_down = jnp.any(s.ds_down)
     s = s._replace(
         ab_cause=s.ab_cause.at[cause].add(jnp.where(meas & ~committed, 1, 0)),
-        commits_fault=s.commits_fault
-        + jnp.where(meas & committed & jnp.any(s.ds_down), 1, 0),
+        commits_fault=s.commits_fault + jnp.where(meas & committed & any_down, 1, 0),
     )
 
     s = s._replace(
@@ -298,6 +204,8 @@ def _finish_txn(cfg: SimConfig, s: SimState, t, committed) -> SimState:
         cur_round=s.cur_round.at[t].set(0),
         abort_cause=s.abort_cause.at[t].set(CAUSE_NONE),
     )
+    if s.fault_time.shape[0]:  # a failed-over txn releases its replica routing
+        s = s._replace(on_repl=s.on_repl.at[t].set(jnp.zeros((D,), bool)))
     # next / retry
     retry = ~committed & (s.retries[t] < s.dyn.max_retries)
     base = s.dyn.retry_backoff_us
@@ -431,10 +339,10 @@ def _dm_progress(cfg: SimConfig, s: SimState, t) -> SimState:
         )
 
         def send_commit(s2: SimState) -> SimState:
-            salts = _salt(s2, 11) + jnp.arange(cfg.num_ds, dtype=jnp.int32)
-            dtimes = s2.now + jax.vmap(lambda r, sa: _delay(s2, r, sa))(
-                s2.tau_true, salts
-            )
+            ids = jnp.arange(cfg.num_ds, dtype=jnp.int32)
+            salts = _salt(s2, 11) + ids
+            base, tau = _mw_link(s2, s2.on_repl[t], ids, s2.now)
+            dtimes = base + jax.vmap(lambda r, sa: _delay(s2, r, sa))(tau, salts)
             return s2._replace(
                 sub_state=s2.sub_state.at[t].set(
                     jnp.where(inv, SUB_COMMIT_CMD, st_).astype(jnp.int8)
@@ -447,10 +355,10 @@ def _dm_progress(cfg: SimConfig, s: SimState, t) -> SimState:
             )
 
         def send_prepare(s2: SimState) -> SimState:
-            salts = _salt(s2, 13) + jnp.arange(cfg.num_ds, dtype=jnp.int32)
-            dtimes = s2.now + jax.vmap(lambda r, sa: _delay(s2, r, sa))(
-                s2.tau_true, salts
-            )
+            ids = jnp.arange(cfg.num_ds, dtype=jnp.int32)
+            salts = _salt(s2, 13) + ids
+            base, tau = _mw_link(s2, s2.on_repl[t], ids, s2.now)
+            dtimes = base + jax.vmap(lambda r, sa: _delay(s2, r, sa))(tau, salts)
             return s2._replace(
                 sub_state=s2.sub_state.at[t].set(
                     jnp.where(inv, SUB_PREP_CMD, st_).astype(jnp.int8)
@@ -509,14 +417,34 @@ def _initiate_abort(cfg: SimConfig, s: SimState, t, d) -> SimState:
     peers = inv & (ids != d) & ~abort_family
 
     salts = _salt(s, 17) + ids
-    notify_direct = jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_ds[d], salts)
-    to_dm = _delay(s, s.tau_true[d], _salt(s, 19))
-    notify_via_dm = to_dm + jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_true, salts)
-    notify = jnp.where(s.dyn.early_abort, notify_direct, notify_via_dm)
-
-    own_ack = s.now + _delay(s, s.tau_true[d], _salt(s, 23))
+    if s.fault_time.shape[0]:
+        # abort notifications ride the effective links: degraded/partitioned
+        # mesh links slow/hold the direct route, the via-DM route crosses the
+        # timed-out sub's own middleware (or replica) link both ways
+        on_d = s.on_repl[t, d]
+        mesh_base, mesh_tau = _ds_send(s, d, ids, s.now)
+        notify_direct = mesh_base + jax.vmap(lambda r, sa: _delay(s, r, sa))(
+            mesh_tau, salts
+        )
+        up_base, up_tau = _mw_link(s, on_d, d, s.now)
+        to_dm = up_base + _delay(s, up_tau, _salt(s, 19))
+        dn_base, dn_tau = _mw_link(s, s.on_repl[t], ids, to_dm)
+        notify_via_dm = dn_base + jax.vmap(lambda r, sa: _delay(s, r, sa))(
+            dn_tau, salts
+        )
+        notify = jnp.where(s.dyn.early_abort, notify_direct, notify_via_dm)
+        ack_base, ack_tau = _mw_link(s, on_d, d, s.now)
+        own_ack = ack_base + _delay(s, ack_tau, _salt(s, 23))
+    else:
+        notify_direct = jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_ds[d], salts)
+        to_dm = _delay(s, s.tau_true[d], _salt(s, 19))
+        notify_via_dm = to_dm + jax.vmap(lambda r, sa: _delay(s, r, sa))(
+            s.tau_true, salts
+        )
+        notify = s.now + jnp.where(s.dyn.early_abort, notify_direct, notify_via_dm)
+        own_ack = s.now + _delay(s, s.tau_true[d], _salt(s, 23))
     new_st = jnp.where(peers, SUB_ABORT_PEER, st)
-    new_tm = jnp.where(peers, s.now + notify, s.sub_time[t])
+    new_tm = jnp.where(peers, notify, s.sub_time[t])
     new_st = new_st.at[d].set(SUB_ABORT_ACK)
     new_tm = new_tm.at[d].set(own_ack)
     return s._replace(
@@ -573,6 +501,22 @@ def _h_start_txn(cfg: SimConfig, bank: Bank, s: SimState, t, idx) -> SimState:
     def do_dispatch(s_: SimState) -> SimState:
         s_ = _hs_dispatch(cfg, s_, jnp.where(valid, key, -1), valid)
         s_ = s_._replace(arrive=s_.arrive.at[t].set(s_.now))
+        if s_.fault_time.shape[0]:
+            # replica failover bookkeeping: route the hit subtxns to their
+            # replicas, count the failovers and the stale read statements,
+            # and record the staleness window (outage age + replication lag)
+            stale_w = jnp.where(
+                fo, s_.now - s_.down_since + s_.repl_lag_us, 0
+            )
+            s_ = s_._replace(
+                on_repl=s_.on_repl.at[t].set(fo),
+                failovers=s_.failovers + jnp.sum(fo.astype(jnp.int32)),
+                stale_reads=s_.stale_reads
+                + jnp.sum(
+                    (valid & ~write & fo[ds.astype(jnp.int32)]).astype(jnp.int32)
+                ),
+                max_stale_us=jnp.maximum(s_.max_stale_us, jnp.max(stale_w)),
+            )
         row = s_.op_state[t] != OP_NONE
         inv0 = jnp.any(oh & (row & (rnd == 0))[:, None], axis=0)
         off = _stagger(cfg, s_, t, inv0)
@@ -618,10 +562,22 @@ def _h_start_txn(cfg: SimConfig, bank: Bank, s: SimState, t, idx) -> SimState:
         p_abort, u, s.blocked[t], s.dyn.max_blocked
     )
     block = block & s.dyn.admission
-    # fail fast when the footprint touches a crashed data source: abort
+    # fail fast when the footprint touches an unreachable data source: abort
     # immediately (the retry/backoff loop re-attempts it — by then the DS may
-    # have recovered) instead of dispatching into a black hole
-    hit_down = jnp.any(inv & s.ds_down)
+    # have recovered) instead of dispatching into a black hole. Exception:
+    # when EVERY unreachable DS in the footprint has a replica and the txn
+    # only reads there, the whole txn fails over — those subtxns ride the
+    # replica links and their reads are stale by the outage age + repl lag.
+    if s.fault_time.shape[0]:
+        hit = inv & (s.ds_down | (s.mw_heal > s.now))
+        writes_at_d = jnp.any(oh & (valid & write)[:, None], axis=0)  # [D]
+        can_fo = hit & (s.repl_tau < INF_US) & ~writes_at_d
+        do_failover = jnp.any(hit) & jnp.all(~hit | can_fo)
+        fo = hit & do_failover
+        hit_down = jnp.any(hit) & ~do_failover
+    else:
+        fo = jnp.zeros_like(inv)
+        hit_down = jnp.any(inv & s.ds_down)
     force_abort = (force_abort & s.dyn.admission) | hit_down
 
     def do_block(s_: SimState) -> SimState:
@@ -649,8 +605,10 @@ def _h_send_commits(cfg: SimConfig, bank, s: SimState, t, idx) -> SimState:
     """T_COMMIT_LOG fires: the DM flushed the commit log — broadcast commit."""
     inv = s.inv[t]
     st = s.sub_state[t]
-    salts = _salt(s, 31) + jnp.arange(cfg.num_ds, dtype=jnp.int32)
-    dtimes = s.now + jax.vmap(lambda r, sa: _delay(s, r, sa))(s.tau_true, salts)
+    ids = jnp.arange(cfg.num_ds, dtype=jnp.int32)
+    salts = _salt(s, 31) + ids
+    base, tau = _mw_link(s, s.on_repl[t], ids, s.now)
+    dtimes = base + jax.vmap(lambda r, sa: _delay(s, r, sa))(tau, salts)
     return s._replace(
         sub_state=s.sub_state.at[t].set(
             jnp.where(inv, SUB_COMMIT_CMD, st).astype(jnp.int8)
@@ -716,7 +674,8 @@ def _h_op_exec_done(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
         centralized = jnp.sum(s_.inv[t].astype(jnp.int32)) == 1
         aborting = s_.sub_state[t, d] == SUB_ABORT_PEER  # peer abort in flight
 
-        reply_t = s_.now + _delay(s_, s_.tau_true[d], _salt(s_, 37))
+        rbase, rtau = _mw_link(s_, s_.on_repl[t, d], d, s_.now)
+        reply_t = rbase + _delay(s_, rtau, _salt(s_, 37))
         prep_t = s_.now + s_.dyn.lan_rtt_us + s_.dyn.log_flush_us
         local_t = s_.now + s_.dyn.log_flush_us
         new_state, new_time = _round_done_transition(
@@ -736,7 +695,8 @@ def _h_op_exec_done(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
 
 def _h_sub_dispatch(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     """SUB_SCHED fires: DM sends the current round's statements to DS d."""
-    arrival = s.now + _delay(s, s.tau_true[d], _salt(s, 41))
+    abase, atau = _mw_link(s, s.on_repl[t, d], d, s.now)
+    arrival = abase + _delay(s, atau, _salt(s, 41))
     row = s.op_state[t]
     mask = (
         (row == OP_PENDING)
@@ -762,11 +722,20 @@ def _h_sub_dispatch(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     return s
 
 
-def _ewma_est(cfg, s: SimState, d) -> SimState:
-    new = ewma_update(s.tau_est[d], s.tau_true[d], jnp.int32(cfg.beta_milli))
-    # monitor freeze: messages already in flight from a now-crashed DS must
-    # not feed the latency EWMA (fault-free runs: ds_down is all-False)
-    new = jnp.where(s.ds_down[d], s.tau_est[d], new)
+def _ewma_est(cfg, s: SimState, t, d) -> SimState:
+    # the monitor samples the *effective* link RTT, so a DEGRADE is observed
+    # and the latency-aware scheduler re-plans around the slow link
+    if s.fault_time.shape[0]:
+        sample = s.tau_mw_eff[d]
+        # monitor freeze: messages already in flight from a now-crashed DS
+        # must not feed the latency EWMA, and replica-link fan-ins say
+        # nothing about the (unreachable) primary link
+        freeze = s.ds_down[d] | s.on_repl[t, d]
+    else:
+        sample = s.tau_true[d]
+        freeze = s.ds_down[d]  # all-False on fault-free runs
+    new = ewma_update(s.tau_est[d], sample, jnp.int32(cfg.beta_milli))
+    new = jnp.where(freeze, s.tau_est[d], new)
     return s._replace(tau_est=s.tau_est.at[d].set(new))
 
 
@@ -778,7 +747,7 @@ def _h_dm_round_in(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     traced once in the dispatch switch (smaller compile, cheaper lockstep
     lanes under vmap, where every branch executes)."""
     is_reply = s.sub_state[t, d] == SUB_ROUND_REPLY
-    s = _ewma_est(cfg, s, d)
+    s = _ewma_est(cfg, s, t, d)
     s = s._replace(
         sub_state=s.sub_state.at[t, d].set(
             jnp.where(is_reply, SUB_ROUND_AT_DM, SUB_VOTED).astype(jnp.int8)
@@ -799,10 +768,11 @@ def _h_ds_prep_cmd(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
 
 def _h_ds_prepared(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     """SUB_PREPARING fires: WAL flushed; send the vote to the DM."""
+    vbase, vtau = _mw_link(s, s.on_repl[t, d], d, s.now)
     return s._replace(
         sub_state=s.sub_state.at[t, d].set(SUB_VOTE),
         sub_time=s.sub_time.at[t, d].set(
-            s.now + _delay(s, s.tau_true[d], _salt(s, 43))
+            vbase + _delay(s, vtau, _salt(s, 43))
         ),
     )
 
@@ -821,12 +791,13 @@ def _h_ds_finish(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     s = _hs_complete_ds(cfg, s, t, d, is_commit)
     s = _release_and_grant(cfg, s, t, d)
     salt = _salt(s, 47) + jnp.where(is_commit, 0, 6)  # 47 commit, 53 abort
+    kbase, ktau = _mw_link(s, s.on_repl[t, d], d, s.now)
     return s._replace(
         sub_state=s.sub_state.at[t, d].set(
             jnp.where(is_commit, SUB_ACK, SUB_ABORT_ACK).astype(jnp.int8)
         ),
         sub_time=s.sub_time.at[t, d].set(
-            s.now + _delay(s, s.tau_true[d], salt)
+            kbase + _delay(s, ktau, salt)
         ),
     )
 
@@ -836,7 +807,7 @@ def _h_dm_fin(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     when the last ack arrives (fused commit/abort fan-in — `_finish_txn` is
     traced once, with the commit flag derived from the acked state)."""
     committed = s.sub_state[t, d] == SUB_ACK
-    s = _ewma_est(cfg, s, d)
+    s = _ewma_est(cfg, s, t, d)
     s = s._replace(
         sub_state=s.sub_state.at[t, d].set(
             jnp.where(committed, SUB_DONE, SUB_ABORTED).astype(jnp.int8)

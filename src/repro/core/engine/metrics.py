@@ -70,12 +70,18 @@ def drain_stats(state: SimState, horizon_us: int | None = None) -> dict:
     fused plan+omnibus lockstep pass (`fused._omni_window`).
 
     Fault-injection fields: `availability` is the mean fraction of
-    (world, data source) wall-clock spent up — 1.0 on fault-free runs; a DS
-    still down at the end contributes its open outage up to `horizon_us`
-    (pass `SimConfig.horizon_us`; defaults to each world's final clock).
-    `abort_causes` breaks measured aborts down by first cause (see
-    `state.ABORT_CAUSES`) and `commits_during_fault` counts commits measured
-    while at least one DS was down (goodput under degraded service).
+    (world, data source) wall-clock spent reachable — 1.0 on fault-free
+    runs; a DS still crashed OR still partitioned from the middleware at the
+    end contributes its open outage up to `horizon_us` (pass
+    `SimConfig.horizon_us`; defaults to each world's final clock).
+    `link_downtime_us` is the same charge per middleware<->DS link, summed
+    across worlds. `abort_causes` breaks measured aborts down by first cause
+    (see `state.ABORT_CAUSES`) and `commits_during_fault` counts commits
+    measured while at least one DS was unreachable (goodput under degraded
+    service). `failovers` counts subtxns routed to a replica while their
+    primary was unreachable, `stale_reads` the read-only statements those
+    served, and `max_staleness_us` the worst staleness window any such read
+    observed (outage age at dispatch + configured replication lag).
     """
     events = int(np.sum(np.asarray(state.iters)))
     drained = int(np.sum(np.asarray(state.drained)))
@@ -89,9 +95,13 @@ def drain_stats(state: SimState, horizon_us: int | None = None) -> dict:
         end = np.asarray(state.now, dtype=np.int64)[..., None]  # per world
     else:
         end = np.int64(horizon_us)
-    total_down = down_us + np.where(ds_down, np.maximum(end - down_since, 0), 0)
+    # open outage: crashed, or mw-link still severed past the end of the run
+    mw_heal = np.asarray(state.mw_heal, dtype=np.int64)
+    still_cut = ds_down | (mw_heal > end)
+    total_down = down_us + np.where(still_cut, np.maximum(end - down_since, 0), 0)
     wall = np.broadcast_to(end, total_down.shape)
     avail = 1.0 - float(total_down.sum()) / max(float(wall.sum()), 1.0)
+    link_down = total_down.reshape(-1, total_down.shape[-1]).sum(axis=0)
     return {
         "events": events,
         "drained_events": drained,
@@ -105,6 +115,10 @@ def drain_stats(state: SimState, horizon_us: int | None = None) -> dict:
         "availability": round(avail, 6),
         "abort_causes": {r: int(c) for r, c in zip(ABORT_CAUSES, causes)},
         "commits_during_fault": int(np.sum(np.asarray(state.commits_fault))),
+        "link_downtime_us": [int(x) for x in link_down],
+        "stale_reads": int(np.sum(np.asarray(state.stale_reads))),
+        "failovers": int(np.sum(np.asarray(state.failovers))),
+        "max_staleness_us": int(np.max(np.asarray(state.max_stale_us))),
     }
 
 

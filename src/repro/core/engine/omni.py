@@ -62,9 +62,11 @@ from repro.core.engine.state import (
     SimState,
     _delay,
     _delay_salted,
+    _ds_send,
     _exec_us,
     _hist_bin,
     _measuring,
+    _mw_link,
     _round_done_transition,
     _salt,
     _times_flat,
@@ -210,8 +212,18 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     block, force_abort = sched.admission_decision(
         p_abort, u, s.blocked[t], s.dyn.max_blocked
     )
-    # fail fast on a footprint touching a crashed DS (mirrors _h_start_txn)
-    hit_down = is_start & jnp.any(inv_new & s.ds_down)
+    # fail fast on a footprint touching an unreachable DS — unless every hit
+    # DS carries a read-only replica footprint, in which case the whole txn
+    # fails over to the replicas (mirrors _h_start_txn)
+    if F:
+        hit_v = inv_new & (s.ds_down | (s.mw_heal > s.now))
+        writes_at_d = jnp.any(oh_b & (valid_b & write_b)[:, None], axis=0)
+        can_fo = hit_v & (s.repl_tau < INF_US) & ~writes_at_d
+        do_failover = jnp.any(hit_v) & jnp.all(~hit_v | can_fo)
+        fo = hit_v & do_failover
+        hit_down = is_start & jnp.any(hit_v) & ~do_failover
+    else:
+        hit_down = is_start & jnp.any(inv_new & s.ds_down)
     force_abort = (force_abort & s.dyn.admission & is_start) | hit_down
     block = block & s.dyn.admission & is_start & ~force_abort
     dispatching = is_start & ~block & ~force_abort
@@ -313,7 +325,8 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     rd_is_final = s.cur_round[t].astype(i32) >= d_final
     centralized = jnp.sum(inv_t.astype(i32)) == 1
     rd_aborting = s.sub_state[t, d_o].astype(i32) == SUB_ABORT_PEER
-    reply_t_rd = s.now + _delay(s, s.tau_true[d_o], _salt(s, 37))
+    rbase_rd, rtau_rd = _mw_link(s, s.on_repl[t, d_o], d_o, s.now)
+    reply_t_rd = rbase_rd + _delay(s, rtau_rd, _salt(s, 37))
     prep_t_rd = s.now + s.dyn.lan_rtt_us + s.dyn.log_flush_us
     local_t_rd = s.now + s.dyn.log_flush_us
     rd_state, rd_time = _round_done_transition(
@@ -330,7 +343,8 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     sub_row = w(g_rd & at_do, rd_state, sub_row)
     sub_tm = w(g_rd & at_do, rd_time, sub_tm)
     # dispatch command reaches DS d_ev
-    arrival = s.now + _delay(s, s.tau_true[d_ev], _salt(s, 41))
+    abase_ev, atau_ev = _mw_link(s, s.on_repl[t, d_ev], d_ev, s.now)
+    arrival = abase_ev + _delay(s, atau_ev, _salt(s, 41))
     disp_mask = (
         (s.op_state[t].astype(i32) == OP_PENDING)
         & (s.op_ds[t].astype(i32) == d_ev)
@@ -358,16 +372,26 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     # DS-side 2PC legs
     sub_row = w(is_prep_cmd & at_ev, SUB_PREPARING, sub_row)
     sub_tm = w(is_prep_cmd & at_ev, s.now + s.dyn.log_flush_us, sub_tm)
-    vote_send_t = s.now + _delay(s, s.tau_true[d_ev], _salt(s, 43))
+    vbase_ev, vtau_ev = _mw_link(s, s.on_repl[t, d_ev], d_ev, s.now)
+    vote_send_t = vbase_ev + _delay(s, vtau_ev, _salt(s, 43))
     sub_row = w(is_prepared & at_ev, SUB_VOTE, sub_row)
     sub_tm = w(is_prepared & at_ev, vote_send_t, sub_tm)
     # DM fan-ins: self-update + shared EWMA monitor refresh
+    if F:
+        # the monitor samples the *effective* link RTT (DEGRADE is observed,
+        # the scheduler re-plans); freeze on crashed-DS fan-ins and on
+        # replica-link fan-ins, which say nothing about the primary link
+        mon_sample = s.tau_mw_eff[d_ev]
+        mon_freeze = s.ds_down[d_ev] | s.on_repl[t, d_ev]
+    else:
+        # monitor freeze: a fan-in from a crashed DS (message already in
+        # flight when it died) must not feed the EWMA (see _ewma_est)
+        mon_sample = s.tau_true[d_ev]
+        mon_freeze = s.ds_down[d_ev]
     tau_est = s.tau_est.at[d_ev].set(
         w(
-            # monitor freeze: a fan-in from a crashed DS (message already in
-            # flight when it died) must not feed the EWMA (see _ewma_est)
-            (is_round_in | is_fin_ack) & ~s.ds_down[d_ev],
-            ewma_update(s.tau_est[d_ev], s.tau_true[d_ev], i32(cfg.beta_milli)),
+            (is_round_in | is_fin_ack) & ~mon_freeze,
+            ewma_update(s.tau_est[d_ev], mon_sample, i32(cfg.beta_milli)),
             s.tau_est[d_ev],
         )
     )
@@ -384,7 +408,8 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     )
     lcs_span = w(lcs_gate, (s.now - s.first_lock[t, d_ev] + 500) // 1000, 0)
     ack_salt = _salt(s, 47) + w(is_commit_fin, 0, 6)  # 47 commit, 53 abort
-    ack_send_t = s.now + _delay(s, s.tau_true[d_ev], ack_salt)
+    kbase_ev, ktau_ev = _mw_link(s, s.on_repl[t, d_ev], d_ev, s.now)
+    ack_send_t = kbase_ev + _delay(s, ktau_ev, ack_salt)
     sub_row = w(is_finish & at_ev, w(is_commit_fin, SUB_ACK, SUB_ABORT_ACK), sub_row)
     sub_tm = w(is_finish & at_ev, ack_send_t, sub_tm)
     # timeout abort fan-out (peer notify + own ack)
@@ -393,13 +418,25 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     )
     peers = inv_t & (dd != d_o) & ~abort_family
     ab_salts = _salt(s, 17) + dd
-    notify_direct = _delay_salted(s.jitter_milli, s.tau_ds[d_o], ab_salts)
-    to_dm = _delay(s, s.tau_true[d_o], _salt(s, 19))
-    notify_via_dm = to_dm + _delay_salted(s.jitter_milli, s.tau_true, ab_salts)
-    notify = w(s.dyn.early_abort, notify_direct, notify_via_dm)
-    own_ack_t = s.now + _delay(s, s.tau_true[d_o], _salt(s, 23))
+    if F:
+        # abort notifications ride the effective links (see _initiate_abort)
+        mesh_base, mesh_tau = _ds_send(s, d_o, dd, s.now)
+        notify_direct = mesh_base + _delay_salted(s.jitter_milli, mesh_tau, ab_salts)
+        up_base, up_tau = _mw_link(s, s.on_repl[t, d_o], d_o, s.now)
+        to_dm = up_base + _delay(s, up_tau, _salt(s, 19))
+        dn_base, dn_tau = _mw_link(s, s.on_repl[t], dd, to_dm)
+        notify_via_dm = dn_base + _delay_salted(s.jitter_milli, dn_tau, ab_salts)
+        notify = w(s.dyn.early_abort, notify_direct, notify_via_dm)
+        ok_base, ok_tau = _mw_link(s, s.on_repl[t, d_o], d_o, s.now)
+        own_ack_t = ok_base + _delay(s, ok_tau, _salt(s, 23))
+    else:
+        notify_direct = _delay_salted(s.jitter_milli, s.tau_ds[d_o], ab_salts)
+        to_dm = _delay(s, s.tau_true[d_o], _salt(s, 19))
+        notify_via_dm = to_dm + _delay_salted(s.jitter_milli, s.tau_true, ab_salts)
+        notify = s.now + w(s.dyn.early_abort, notify_direct, notify_via_dm)
+        own_ack_t = s.now + _delay(s, s.tau_true[d_o], _salt(s, 23))
     sub_row = w(is_timeout & peers, SUB_ABORT_PEER, sub_row)
-    sub_tm = w(is_timeout & peers, s.now + notify, sub_tm)
+    sub_tm = w(is_timeout & peers, notify, sub_tm)
     sub_row = w(is_timeout & at_do, SUB_ABORT_ACK, sub_row)
     sub_tm = w(is_timeout & at_do, own_ack_t, sub_tm)
     # first cause wins (mirrors _initiate_abort)
@@ -475,17 +512,18 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     send_c = gate_dec & dec_c
     send_p = gate_dec & dec_p & ~dec_c
     log_f = gate_dec & dec_l & ~dec_c & ~dec_p
+    dm_base, dm_tau = _mw_link(s, s.on_repl[t], dd, s.now)
     c_salts = _salt(s, 11) + dd
-    dt_commit = s.now + _delay_salted(s.jitter_milli, s.tau_true, c_salts)
+    dt_commit = dm_base + _delay_salted(s.jitter_milli, dm_tau, c_salts)
     p_salts = _salt(s, 13) + dd
-    dt_prepare = s.now + _delay_salted(s.jitter_milli, s.tau_true, p_salts)
+    dt_prepare = dm_base + _delay_salted(s.jitter_milli, dm_tau, p_salts)
     sub_row = w(send_c & inv_t, SUB_COMMIT_CMD, sub_row)
     sub_tm = w(send_c & inv_t, dt_commit, sub_tm)
     sub_row = w(send_p & inv_t, SUB_PREP_CMD, sub_row)
     sub_tm = w(send_p & inv_t, dt_prepare, sub_tm)
     # terminal commit-log flush fires: broadcast commit to every DS
     e_salts = _salt(s, 31) + dd
-    dt_log = s.now + _delay_salted(s.jitter_milli, s.tau_true, e_salts)
+    dt_log = dm_base + _delay_salted(s.jitter_milli, dm_tau, e_salts)
     sub_row = w(is_logflush & inv_t, SUB_COMMIT_CMD, sub_row)
     sub_tm = w(is_logflush & inv_t, dt_log, sub_tm)
 
@@ -560,9 +598,15 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     cause_fin = w(
         ~will_retry_fin & (s.retries[t] > 0), CAUSE_EXHAUSTED, s.abort_cause[t]
     )
+    if F:
+        # "during fault" means some DS is unreachable — crashed or
+        # partitioned from the middleware (mirrors _finish_txn)
+        any_down_f = jnp.any(s.ds_down | (s.mw_heal > s.now))
+    else:
+        any_down_f = jnp.any(s.ds_down)
     s = s._replace(
         ab_cause=s.ab_cause.at[cause_fin].add(one_a),
-        commits_fault=s.commits_fault + w(jnp.any(s.ds_down), one_c, 0),
+        commits_fault=s.commits_fault + w(any_down_f, one_c, 0),
     )
     s = s._replace(
         commits=s.commits + one_c,
@@ -645,6 +689,28 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         lcs_sum=s.lcs_sum + lcs_span,
         lcs_cnt=s.lcs_cnt + lcs_gate.astype(i32),
     )
+
+    # ============== replica failover bookkeeping (start / finish) ==========
+    # one combined on_repl write: a dispatching start routes the hit subtxns
+    # to their replicas (stale reads + staleness window recorded), a finish
+    # releases the routing — the two gates are mutually exclusive. Written
+    # after the scatter so every send above read the pre-update routing.
+    if F:
+        stale_w = w(fo, s.now - s.down_since + s.repl_lag_us, 0)
+        on_repl_row = w(dispatching, fo, w(gate_fin, False, s.on_repl[t]))
+        s = s._replace(
+            on_repl=s.on_repl.at[t].set(on_repl_row),
+            failovers=s.failovers + w(dispatching, jnp.sum(fo.astype(i32)), 0),
+            stale_reads=s.stale_reads
+            + w(
+                dispatching,
+                jnp.sum((valid_b & ~write_b & fo[ds_b.astype(i32)]).astype(i32)),
+                0,
+            ),
+            max_stale_us=jnp.maximum(
+                s.max_stale_us, w(dispatching, jnp.max(stale_w), 0)
+            ),
+        )
 
     # ============================== noop ===================================
     upd = dict(

@@ -84,9 +84,12 @@ _SALT_MUL = jnp.int32(2654435761 % (2**31))
 #   cap           the window filled the planner's candidate budget
 #                 (window.PLAN_CAP events) — longer windows split, bitwise-
 #                 identically, across iterations
-#   fault         a fault-schedule event (data-source crash/recovery) or a
-#                 heartbeat probe — always pinned: crashes rewrite arbitrary
-#                 rows and the monitor freeze, so they run sequentially
+#   fault         a fault-schedule event (crash / partition / degrade start
+#                 or end) — always pinned: every kind rewrites link, replica
+#                 or row state that in-window sends consult. Heartbeat
+#                 probes are conflict-free and drain inside windows (their
+#                 re-arm time enters the running-min rule like any other
+#                 scheduled event)
 STOP_REASONS = (
     "horizon",
     "nondrainable",
@@ -114,6 +117,27 @@ N_STOP_REASONS = len(STOP_REASONS)
 N_ABORT_CAUSES = 5
 ABORT_CAUSES = ("none", "timeout", "admission", "crash", "exhausted")
 
+# ---- fault kinds ------------------------------------------------------------
+# `WorldSpec.faults` rows are (t_start_us, kind, endpoint_a, endpoint_b,
+# t_end_us, severity):
+#   CRASH      whole data source down (endpoint_a == endpoint_b == ds);
+#              severity ignored. The PR 6 semantics: instant cascade through
+#              peer-abort/lock-release, admission fail-fast, monitor freeze.
+#   PARTITION  one link severed while both endpoints stay up. endpoint_a ==
+#              -1 targets the middleware<->endpoint_b link (`tau_true`);
+#              endpoint_a >= 0 targets the geo-agent mesh link
+#              `tau_ds[a, b]` (both directions). In-flight statements on the
+#              severed middleware link are deferred to the heal time and
+#              resolve through the ordinary timeout/retry machinery — no
+#              crash cascade.
+#   DEGRADE    the link's RTT is multiplied by severity/1000 (milli-scale,
+#              1000 = 1x) between t_start and t_end. The EWMA monitor keeps
+#              observing the degraded link, so the latency-aware scheduler
+#              re-plans around it.
+KIND_CRASH, KIND_PARTITION, KIND_DEGRADE = 0, 1, 2
+FAULT_KINDS = ("crash", "partition", "degrade")
+MW = -1  # endpoint_a value selecting the middleware side of a link
+
 
 class DynProto(NamedTuple):
     """Dynamic (traced) protocol knobs.
@@ -140,7 +164,8 @@ class DynProto(NamedTuple):
     lan_rtt_us: jax.Array  # i32
     retry_backoff_us: jax.Array  # i32
     max_retries: jax.Array  # i32
-    hb_interval_us: jax.Array  # i32 — heartbeat probe period while a DS is down
+    hb_interval_us: jax.Array  # i32 — heartbeat probe period while unreachable
+    detect_delay_us: jax.Array  # i32 — crash/partition detection lag
 
 
 def dyn_from_proto(p: ProtocolConfig) -> DynProto:
@@ -150,6 +175,13 @@ def dyn_from_proto(p: ProtocolConfig) -> DynProto:
         raise ValueError(
             f"preset {p.name!r}: max_retries={p.max_retries} needs "
             f"retry_backoff_us > 0 (got {p.retry_backoff_us})"
+        )
+    if p.detect_delay_us < 0:
+        # the schedule shifts crash/partition starts by this much; a negative
+        # value would fire the fault before its own scheduled timestamp
+        raise ValueError(
+            f"preset {p.name!r}: detect_delay_us must be >= 0 "
+            f"(got {p.detect_delay_us})"
         )
     i32 = jnp.int32
     return DynProto(
@@ -170,6 +202,7 @@ def dyn_from_proto(p: ProtocolConfig) -> DynProto:
         retry_backoff_us=i32(p.retry_backoff_us),
         max_retries=i32(p.max_retries),
         hb_interval_us=i32(p.hb_interval_us),
+        detect_delay_us=i32(p.detect_delay_us),
     )
 
 
@@ -189,27 +222,63 @@ class WorldSpec(NamedTuple):
     lel_scale_milli: jax.Array  # scalar (§IV-C forecast scaling)
     dyn: DynProto
     seed: jax.Array  # scalar tag
-    # deterministic fault schedule: [F,3] rows (t_crash_us, ds, t_recover_us),
-    # padded with (INF_US, 0, INF_US). F is static (`SimConfig.max_faults`).
+    # deterministic fault schedule: [F,6] rows (t_start_us, kind, endpoint_a,
+    # endpoint_b, t_end_us, severity) — see the KIND_* table above — padded
+    # with (INF_US, CRASH, 0, 0, INF_US, 0). Legacy [F,3] crash triples
+    # (t_crash_us, ds, t_recover_us) are auto-widened by `pad_faults`.
+    # F is static (`SimConfig.max_faults`).
     faults: jax.Array
+    # optional geo-replica per DS: replica-link RTT (INF_US = no replica) and
+    # the shared replication lag charged to every stale read. Defaults keep
+    # direct WorldSpec(...) constructions from before the replica layer valid.
+    replica_tau: jax.Array = None  # [D] i32 (None = no replicas anywhere)
+    repl_lag_us: jax.Array = 0  # scalar i32
+
+
+FAULT_COLS = 6
+_PAD_ROW = (INF_US, KIND_CRASH, 0, 0, INF_US, 0)
+
+
+def _widen_faults(rows: jax.Array) -> jax.Array:
+    """[n,3] legacy crash triples -> [n,6] typed rows (no-op on [n,6])."""
+    if rows.shape[-1] == FAULT_COLS:
+        return rows
+    if rows.shape[-1] != 3:
+        raise ValueError(
+            f"fault rows must have 3 (legacy crash) or {FAULT_COLS} columns, "
+            f"got {rows.shape[-1]}"
+        )
+    t, ds, rec = rows[:, 0], rows[:, 1], rows[:, 2]
+    kind = jnp.full_like(t, KIND_CRASH)
+    sev = jnp.zeros_like(t)
+    return jnp.stack([t, kind, ds, ds, rec, sev], axis=1)
 
 
 def pad_faults(faults, max_faults: int | None = None) -> jax.Array:
-    """Normalize a fault schedule to a static [F,3] i32 array.
+    """Normalize a fault schedule to a static [F,6] i32 array.
 
-    `faults` is a sequence of (t_crash_us, ds, t_recover_us) triples (or an
-    equivalent [n,3] array); None means no faults. Padding rows carry
-    (INF_US, 0, INF_US) so their events never fire inside the horizon.
+    `faults` is a sequence of (t_start_us, kind, endpoint_a, endpoint_b,
+    t_end_us, severity) rows — legacy (t_crash_us, ds, t_recover_us) crash
+    triples are accepted and widened — or an equivalent array; None means no
+    faults. Padding rows carry t_start == INF_US so their events never fire
+    inside the horizon.
     """
-    rows = jnp.zeros((0, 3), jnp.int32) if faults is None else jnp.asarray(
-        faults, jnp.int32
-    ).reshape(-1, 3)
+    if faults is None:
+        rows = jnp.zeros((0, FAULT_COLS), jnp.int32)
+    else:
+        rows = jnp.asarray(faults, jnp.int32)
+        if rows.ndim != 2:
+            # flat sequences: prefer the typed 6-column layout, fall back to
+            # legacy triples
+            cols = FAULT_COLS if rows.size % FAULT_COLS == 0 else 3
+            rows = rows.reshape(-1, cols)
+        rows = _widen_faults(rows)
     n = rows.shape[0]
     if max_faults is None:
         max_faults = n
     if n > max_faults:
         raise ValueError(f"{n} fault rows exceed max_faults={max_faults}")
-    pad = jnp.tile(jnp.array([[INF_US, 0, INF_US]], jnp.int32), (max_faults - n, 1))
+    pad = jnp.tile(jnp.array([_PAD_ROW], jnp.int32), (max_faults - n, 1))
     return jnp.concatenate([rows, pad], axis=0)
 
 
@@ -224,8 +293,15 @@ def make_world(
     seed: int = 0,
     faults=None,
     max_faults: int | None = None,
+    replica_tau=None,
+    repl_lag_us: int = 0,
 ) -> WorldSpec:
-    """Build a WorldSpec from a preset name / ProtocolConfig + RTT vector."""
+    """Build a WorldSpec from a preset name / ProtocolConfig + RTT vector.
+
+    `replica_tau` is an optional [D] middleware<->replica RTT vector (µs);
+    entries of INF_US (and a None vector) mean "no replica at this DS".
+    `repl_lag_us` is the replication lag charged to stale reads on failover.
+    """
     if isinstance(proto, str):
         proto = PRESETS[proto]
     if tau_true_us is None:
@@ -238,6 +314,8 @@ def make_world(
         tau_ds_us = derive_tau_ds_us(tau_true)
     if exec_scale_milli is None:
         exec_scale_milli = jnp.full(tau_true.shape, 1000, jnp.int32)
+    if replica_tau is None:
+        replica_tau = jnp.full(tau_true.shape, INF_US, jnp.int32)
     return WorldSpec(
         tau_true=tau_true,
         tau_ds=jnp.asarray(tau_ds_us, jnp.int32),
@@ -247,6 +325,8 @@ def make_world(
         dyn=dyn_from_proto(proto),
         seed=jnp.int32(seed),
         faults=pad_faults(faults, max_faults),
+        replica_tau=jnp.asarray(replica_tau, jnp.int32),
+        repl_lag_us=jnp.int32(repl_lag_us),
     )
 
 
@@ -329,18 +409,35 @@ class SimState(NamedTuple):
     first_lock: jax.Array  # [T,D] i32
     rd_done: jax.Array  # [T,D] bool
     # fault injection (F = cfg.max_faults; all-INF when fault-free)
-    fault_ds: jax.Array  # [F] i32 — target data source of schedule row f
-    fault_recover: jax.Array  # [F] i32 — recovery timestamp of row f
-    fault_time: jax.Array  # [F] i32 — next event of row f (crash, then recover)
-    fault_stage: jax.Array  # [F] i8 — 0 pending crash / 1 pending recover / 2 done
-    ds_down: jax.Array  # [D] bool — currently crashed
-    hb_time: jax.Array  # [D] i32 — next heartbeat probe (INF unless down)
-    hb_count: jax.Array  # [D] i32 — heartbeat probes fired while down
-    down_since: jax.Array  # [D] i32 — crash timestamp of the current outage
-    down_us: jax.Array  # [D] i32 — accumulated completed-outage time
+    fault_ds: jax.Array  # [F] i32 — endpoint_a of row f (crash: the ds; MW = -1)
+    fault_recover: jax.Array  # [F] i32 — end timestamp of row f
+    fault_time: jax.Array  # [F] i32 — next event of row f (start, then end)
+    fault_stage: jax.Array  # [F] i8 — 0 pending start / 1 pending end / 2 done
+    fault_kind: jax.Array  # [F] i32 — KIND_CRASH / KIND_PARTITION / KIND_DEGRADE
+    fault_peer: jax.Array  # [F] i32 — endpoint_b of row f
+    fault_sev: jax.Array  # [F] i32 — DEGRADE severity, milli-scale
+    ds_down: jax.Array  # [D] bool — currently crashed (node dead)
+    # link state: a heal timestamp > now means the middleware<->d (resp.
+    # mesh a<->b) link is severed until then; 0 = link up. tau_*_eff carry the
+    # DEGRADE-scaled RTTs (== tau_true/tau_ds while no degrade is live).
+    mw_heal: jax.Array  # [D] i32
+    ds_heal: jax.Array  # [D,D] i32
+    tau_mw_eff: jax.Array  # [D] i32
+    tau_ds_eff: jax.Array  # [D,D] i32
+    # geo-replica failover
+    repl_tau: jax.Array  # [D] i32 — replica-link RTT (INF_US = no replica)
+    repl_lag_us: jax.Array  # i32 — replication lag charged per stale read
+    on_repl: jax.Array  # [T,D] bool — subtxn currently served by d's replica
+    stale_reads: jax.Array  # i32 — read statements served from a replica
+    failovers: jax.Array  # i32 — subtxns routed to a replica at admission
+    max_stale_us: jax.Array  # i32 — worst staleness window of any stale read
+    hb_time: jax.Array  # [D] i32 — next heartbeat probe (INF unless unreachable)
+    hb_count: jax.Array  # [D] i32 — heartbeat probes fired while unreachable
+    down_since: jax.Array  # [D] i32 — start of the current unreachability spell
+    down_us: jax.Array  # [D] i32 — accumulated completed-unreachability time
     abort_cause: jax.Array  # [T] i32 — pending CAUSE_* of the in-flight txn
     ab_cause: jax.Array  # [N_ABORT_CAUSES] i32 — final-abort cause tally
-    commits_fault: jax.Array  # i32 — commits while >=1 DS was down
+    commits_fault: jax.Array  # i32 — commits while >=1 DS was unreachable
     # hot-record footprint: fixed-capacity hash table [C+1] (+1 = scratch row).
     # (2PL lock state needs no table: it is derived exactly from the op arrays,
     #  since every held/waited lock belongs to exactly one in-flight op.)
@@ -385,6 +482,8 @@ def init_state(
     dyn: DynProto | None = None,
     lel_scale_milli=None,
     faults=None,
+    replica_tau=None,
+    repl_lag_us=0,
 ) -> SimState:
     T, K, D, N = (cfg.terminals, cfg.max_ops, cfg.num_ds, cfg.bank_txns)
     F = cfg.max_faults
@@ -395,9 +494,20 @@ def init_state(
         dyn = dyn_from_proto(cfg.proto)
     if lel_scale_milli is None:
         lel_scale_milli = cfg.proto.lel_scale_milli
+    if replica_tau is None:
+        replica_tau = jnp.full((D,), INF_US, i32)
     if faults is None:
         faults = pad_faults(None, F)
-    faults = jnp.asarray(faults, i32).reshape(F, 3)
+    faults = jnp.asarray(faults, i32)
+    if faults.shape[-1] != FAULT_COLS:  # legacy [F,3] crash schedules
+        faults = _widen_faults(faults.reshape(F, -1))
+    faults = faults.reshape(F, FAULT_COLS)
+    # failure detection lag: crash/partition events fire (and cascade) only
+    # detect_delay_us after the scheduled start; degrades are physical link
+    # changes and shift nothing. End timestamps are never shifted.
+    f_start, f_kind = faults[:, 0], faults[:, 1]
+    detect = jnp.where(f_kind == KIND_DEGRADE, 0, dyn.detect_delay_us)
+    f_first = jnp.where(f_start < INF_US, f_start + detect, f_start)
     # ramp terminals in over 2ms to avoid a synchronized start
     start = (jnp.arange(T, dtype=i32) * 2000) // max(T, 1)
     return SimState(
@@ -427,11 +537,24 @@ def init_state(
         sub_lel=jnp.zeros((T, D), i32),
         first_lock=jnp.full((T, D), INF_US, i32),
         rd_done=jnp.zeros((T, D), bool),
-        fault_ds=faults[:, 1],
-        fault_recover=faults[:, 2],
-        fault_time=faults[:, 0],
+        fault_ds=faults[:, 2],
+        fault_recover=faults[:, 4],
+        fault_time=f_first,
         fault_stage=jnp.zeros((F,), jnp.int8),
+        fault_kind=f_kind,
+        fault_peer=faults[:, 3],
+        fault_sev=faults[:, 5],
         ds_down=jnp.zeros((D,), bool),
+        mw_heal=jnp.zeros((D,), i32),
+        ds_heal=jnp.zeros((D, D), i32),
+        tau_mw_eff=jnp.asarray(tau_true_us, i32),
+        tau_ds_eff=jnp.asarray(tau_ds_us, i32),
+        repl_tau=jnp.asarray(replica_tau, i32),
+        repl_lag_us=jnp.asarray(repl_lag_us, i32),
+        on_repl=jnp.zeros((T, D), bool),
+        stale_reads=i32(0),
+        failovers=i32(0),
+        max_stale_us=i32(0),
         hb_time=jnp.full((D,), INF_US, i32),
         hb_count=jnp.zeros((D,), i32),
         down_since=jnp.zeros((D,), i32),
@@ -482,6 +605,8 @@ def init_state_world(cfg: SimConfig, world: WorldSpec) -> SimState:
         dyn=world.dyn,
         lel_scale_milli=world.lel_scale_milli,
         faults=world.faults,
+        replica_tau=world.replica_tau,
+        repl_lag_us=world.repl_lag_us,
     )
 
 
@@ -509,9 +634,50 @@ def _salt(s: SimState, a: int) -> jax.Array:
 
 def _exec_us(cfg: SimConfig, s: SimState, d: jax.Array) -> jax.Array:
     """Per-op execution time at data source d (scalar or any index array);
-    ScalarDB-style middleware CC pays an extra DM round trip per statement."""
+    ScalarDB-style middleware CC pays an extra DM round trip per statement
+    (at the effective — possibly degraded — link RTT)."""
     base = s.dyn.exec_us * s.exec_scale_milli[d] // 1000
-    return base + jnp.where(s.dyn.middleware_cc, s.tau_true[d], 0)
+    return base + jnp.where(s.dyn.middleware_cc, s.tau_mw_eff[d], 0)
+
+
+def _mw_send(s: SimState, on_r: jax.Array, d: jax.Array, t0: jax.Array):
+    """Effective (departure base, link RTT) for a middleware<->d message.
+
+    Elementwise over any broadcastable shapes; every step mode and the window
+    plan share this one formula. `on_r` marks a subtxn served by d's replica
+    (replica links are never severed or degraded in this model). A message on
+    a severed primary link departs — equivalently, is delivered — at the heal
+    time and then resolves through the ordinary timeout/retry machinery. In
+    clean states this is exactly (t0, tau_true[d])."""
+    tau = jnp.where(on_r, s.repl_tau[d], s.tau_mw_eff[d])
+    base = jnp.where(~on_r & (s.mw_heal[d] > t0), s.mw_heal[d], t0)
+    return base, tau
+
+
+def _mw_link(s: SimState, on_r: jax.Array, d: jax.Array, t0: jax.Array):
+    """`_mw_send`, statically reduced to the pristine (t0, tau_true[d]) when
+    the config carries no fault schedule — fault-free configs compile the
+    exact link-state-free program."""
+    if s.fault_time.shape[0]:
+        return _mw_send(s, on_r, d, t0)
+    return t0, s.tau_true[d]
+
+
+def _ds_send(s: SimState, a: jax.Array, b: jax.Array, t0: jax.Array):
+    """Effective (departure base, link RTT) for a geo-agent a->b mesh message.
+
+    A severed mesh link holds the message until its heal time (`ds_heal`
+    self-expires: stale heal stamps lie in the past and the max is a no-op);
+    DEGRADE scales the RTT via `tau_ds_eff`."""
+    return jnp.maximum(t0, s.ds_heal[a, b]), s.tau_ds_eff[a, b]
+
+
+def _unreachable(s: SimState) -> jax.Array:
+    """[D] bool — data source crashed OR partitioned from the middleware.
+
+    The reachability mask: heartbeat probes, the availability charge and
+    admission fail-fast/failover all gate on this, not on liveness alone."""
+    return s.ds_down | (s.mw_heal > s.now)
 
 
 def _round_done_transition(

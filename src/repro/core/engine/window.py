@@ -29,10 +29,13 @@ Window stoppers (slot-accurate read/write sets — see docs/architecture.md):
 * at most `K_EWMA` fan-ins per data source (the latency monitor composes
   that many exact EWMA applications per window);
 * a release sharing its (terminal, DS) with an earlier op event;
-* fault-injection events (data-source crash/recovery and heartbeat probes,
+* fault-schedule events (typed crash/partition/degrade starts and ends,
   present only when ``SimConfig.max_faults > 0``) are always pinned: a due
   one stops the window at itself (stop reason `fault`) and runs through the
-  sequential crash-cascade handler.
+  sequential fault handler. Heartbeat probes, by contrast, are conflict-free
+  (they write only their own counter/timer and read link state no window
+  event can change) and drain inside windows like any other event — their
+  re-arm time enters the running-min "scheduled" rule.
 
 Every windowed event keeps the iteration number (hash salt) and timestamp it
 would have had sequentially, so drained runs stay bitwise-identical to
@@ -87,6 +90,7 @@ from repro.core.engine.state import (
     SimState,
     _delay_salted,
     _exec_us,
+    _mw_send,
     _round_done_transition,
     _times_flat,
 )
@@ -198,6 +202,8 @@ class _PlanVals(NamedTuple):
     win_term: jax.Array  # [T] window membership
     win_sub: jax.Array  # [T,D]
     win_op: jax.Array  # [T,K]
+    win_hb: jax.Array  # [D] in-window heartbeat probes (zeros when F == 0)
+    hb_fire: jax.Array  # [D] probe fires (target unreachable at its slot time)
     n_win: jax.Array  # scalar: events in the maximal window
     use: jax.Array  # scalar: window holds >= 2 events
     t_last: jax.Array  # scalar: timestamp of the window's last event
@@ -312,6 +318,15 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     tau_row = s.tau_true[None, :]  # [1,D]
     d_ids = jnp.arange(D, dtype=i32)
     kk = jnp.arange(K, dtype=i32)
+    # middleware<->DS link per (t, d): heal-deferred send base + effective
+    # (replica / degraded) RTT. Link state — mw_heal/tau_mw_eff/repl routing —
+    # cannot change inside a window (fault events are pinned, txn starts and
+    # finishes are non-drainable), so the per-slot precomputation matches the
+    # sequential `_mw_link` call each handler would make at its own `now`.
+    if F:
+        link_td = lambda t0: _mw_send(s, s.on_repl, d_ids[None, :], t0)
+    else:
+        link_td = lambda t0: (t0, tau_row)
 
     # ---- op events: candidate-query lock decisions ------------------------
     # (pre-state views are exact: the window never batches two events
@@ -371,7 +386,8 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     time_rd = jnp.max(jnp.where(rd3, evt_op[:, :, None], 0), axis=1)
     iters_rd = jnp.max(jnp.where(rd3, iters_op[:, :, None], 0), axis=1)
     salt_td = iters_rd * _SALT_MUL + jnp.int32(37)
-    reply_t = time_rd + _delay_salted(s.jitter_milli, tau_row, salt_td)
+    rbase, rtau = link_td(time_rd)
+    reply_t = rbase + _delay_salted(s.jitter_milli, rtau, salt_td)
     rmax_td = jnp.max(
         jnp.where(opn[:, :, None] & oh_d, s.op_round[:, :, None].astype(i32), -1),
         axis=1,
@@ -388,7 +404,8 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
 
     # ---- sub dispatch (DM -> DS statements) -------------------------------
     arr_salt = iters_sub * _SALT_MUL + jnp.int32(41)
-    arrival_td = evt_sub + _delay_salted(s.jitter_milli, tau_row, arr_salt)
+    abase, atau = link_td(evt_sub)
+    arrival_td = abase + _delay_salted(s.jitter_milli, atau, arr_salt)
     sched_at_op = jnp.take_along_axis(cat_sched, d_of, axis=1)  # [T,K]
     c_ops = sched_at_op & (st == OP_PENDING) & same_round
     cand3 = c_ops[:, :, None] & oh_d
@@ -398,7 +415,8 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     # ---- DS-side prepare command / WAL-flushed vote -----------------------
     prep_time = evt_sub + s.dyn.log_flush_us
     vote_salt = iters_sub * _SALT_MUL + jnp.int32(43)
-    vote_t = evt_sub + _delay_salted(s.jitter_milli, tau_row, vote_salt)
+    vbase, vtau = link_td(evt_sub)
+    vote_t = vbase + _delay_salted(s.jitter_milli, vtau, vote_salt)
 
     # ---- DM-side fan-ins: slot-accurate read/write sets -------------------
     # A fan-in at (t, j) writes only its own slot (+ rd_done[t, j] and the
@@ -448,25 +466,29 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     log_t_j = gate_j & dec_l_j & ~dec_c_j & ~dec_p_j
     done_ack_j = cat_ack & jnp.all(~inv3 | (sta3 == SUB_DONE), axis=2)
     done_abk_j = cat_abort_ack & jnp.all(~inv3 | (sta3 == SUB_ABORTED), axis=2)
+    if F:
+        b3, r3 = _mw_send(
+            s, s.on_repl[:, None, :], d_ids[None, None, :], evt_sub[:, :, None]
+        )
+    else:
+        b3, r3 = evt_sub[:, :, None], tau_row[None]
     salt_dmc3 = iters_sub[:, :, None] * _SALT_MUL + jnp.int32(11) + d_ids[None, None, :]
-    dt_commit3 = evt_sub[:, :, None] + _delay_salted(
-        s.jitter_milli, tau_row[None], salt_dmc3
-    )
+    dt_commit3 = b3 + _delay_salted(s.jitter_milli, r3, salt_dmc3)
     salt_dmp3 = iters_sub[:, :, None] * _SALT_MUL + jnp.int32(13) + d_ids[None, None, :]
-    dt_prepare3 = evt_sub[:, :, None] + _delay_salted(
-        s.jitter_milli, tau_row[None], salt_dmp3
-    )
+    dt_prepare3 = b3 + _delay_salted(s.jitter_milli, r3, salt_dmp3)
     log_term_j = evt_sub + s.dyn.log_flush_us
 
     # ---- terminal commit-log flush (broadcast) ----------------------------
     salt_e = iters_term[:, None] * _SALT_MUL + jnp.int32(31) + d_ids[None, :]
-    dt_log = evt_term[:, None] + _delay_salted(s.jitter_milli, tau_row, salt_e)
+    lbase, ltau = link_td(evt_term[:, None])
+    dt_log = lbase + _delay_salted(s.jitter_milli, ltau, salt_e)
 
     # ---- DS-side commit apply / peer-abort release ------------------------
     f_at_op = jnp.take_along_axis(f_cat, d_of, axis=1)  # [T,K]
     cancel_cat = opn & f_at_op  # ops cancelled (this IS the release)
     ack_salt = iters_sub * _SALT_MUL + jnp.where(cat_commit, 47, 53)
-    ack_t = evt_sub + _delay_salted(s.jitter_milli, tau_row, ack_salt)
+    kbase, ktau = link_td(evt_sub)
+    ack_t = kbase + _delay_salted(s.jitter_milli, ktau, ack_salt)
     # FIFO grant order matters only if someone queues on a released key —
     # such a release is not drainable (the grants would need exact ordering).
     # Releases live at sub candidates, so the waiter probe runs on compact
@@ -634,15 +656,31 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     )
     n_flat = jnp.concatenate([n_term, n_sub.reshape(-1), n_op.reshape(-1)])
     if F:
-        # fault/heartbeat tails: pinned, schedule nothing, conflict with
-        # nothing — a due one simply stops the window at itself
+        # fault-schedule tails: pinned, schedule nothing, conflict with
+        # nothing — a due one simply stops the window at itself. Heartbeat
+        # tails are conflict-free and DRAIN: a probe writes only its own
+        # counter/timer and reads reachability state no window event can
+        # change, so its only window interaction is the re-arm time entering
+        # the running-min "scheduled" rule.
         zfd = jnp.zeros((F + D,), bool)
         conf_key = jnp.concatenate([conf_key, zfd])
         conf_row = jnp.concatenate([conf_row, zfd])
         conf_col = jnp.concatenate([conf_col, zfd])
         conf_rel = jnp.concatenate([conf_rel, zfd])
-        pinned_flat = jnp.concatenate([pinned_flat, jnp.ones((F + D,), bool)])
-        n_flat = jnp.concatenate([n_flat, jnp.zeros((F + D,), i32)])
+        pinned_flat = jnp.concatenate(
+            [pinned_flat, jnp.ones((F,), bool), jnp.zeros((D,), bool)]
+        )
+        # a firing probe re-arms at its slot time + interval; a non-firing
+        # (or disarmed) one schedules nothing
+        hb_fire = s.ds_down | (s.mw_heal > s.hb_time)
+        n_hb = jnp.where(
+            hb_fire & (s.hb_time < INF_US),
+            s.hb_time + s.dyn.hb_interval_us,
+            INF_US,
+        )
+        n_flat = jnp.concatenate([n_flat, jnp.zeros((F,), i32), n_hb])
+    else:
+        hb_fire = jnp.zeros((D,), bool)
     conflict = conf_key | conf_row | conf_col | conf_rel
     horizon_i = jnp.int32(cfg.horizon_us)
     code = jnp.where(
@@ -667,10 +705,14 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
         ),
     ).astype(i32)
     if F:
-        # distinguish fault/heartbeat stoppers from ordinary non-drainable
-        # events (horizon stays dominant)
-        tail_flat = jnp.arange(M, dtype=i32) >= M0
-        code = jnp.where((flat < horizon_i) & tail_flat, STOP_FAULT, code)
+        # distinguish fault-schedule stoppers from ordinary non-drainable
+        # events (horizon stays dominant). Heartbeat slots are unpinned and
+        # keep the generic codes — a probe that ends a window does so via the
+        # ordinary running-min/`scheduled` machinery, and the per-stopper
+        # telemetry proves the drain (mean-window ratchet guard).
+        idx_flat = jnp.arange(M, dtype=i32)
+        fault_flat = (idx_flat >= M0) & (idx_flat < M0 + F)
+        code = jnp.where((flat < horizon_i) & fault_flat, STOP_FAULT, code)
     if cfg.lockstep:
         # candidate-space equivalent of the cummin prefix: W-element gathers
         # plus a [W, W] triangular running min — no scatters, no scans
@@ -703,6 +745,7 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     win_term = pos_term < n_win
     win_sub = pos_sub < n_win
     win_op = pos_op < n_win
+    win_hb = (pos[M0 + F :] < n_win) if F else jnp.zeros((D,), bool)
     use = n_win >= 2
 
     return _PlanVals(
@@ -764,6 +807,8 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
         win_term=win_term,
         win_sub=win_sub,
         win_op=win_op,
+        win_hb=win_hb,
+        hb_fire=hb_fire,
         n_win=n_win,
         use=use,
         t_last=t_last,

@@ -64,9 +64,14 @@ class ProtocolConfig:
     # benchbase semantics: an aborted transaction is recorded and the terminal
     # moves on to the next one (retries only when explicitly configured)
     max_retries: int = 0
-    # heartbeat probe period while a data source is crashed (fault injection;
-    # probes are deterministic liveness checks — see docs/architecture.md)
+    # heartbeat probe period while a data source is unreachable (fault
+    # injection; probes are deterministic reachability checks — see
+    # docs/architecture.md)
     hb_interval_us: int = 500_000
+    # failure-detection delay: a crash/partition only takes effect (and the
+    # cascade/deferral fires) this long after the scheduled fault start, so
+    # the fault event no longer doubles as the detection point
+    detect_delay_us: int = 0
 
 
 SSP = ProtocolConfig(

@@ -30,6 +30,7 @@ from repro.core.engine.state import (
     CAUSE_CRASH,
     CAUSE_EXHAUSTED,
     INF_US,
+    KIND_CRASH,
 )
 from repro.core.netmodel import make_net_params
 
@@ -125,6 +126,8 @@ class TestFaultFreePreservation:
         sf = sf._replace(
             fault_ds=s0.fault_ds, fault_recover=s0.fault_recover,
             fault_time=s0.fault_time, fault_stage=s0.fault_stage,
+            fault_kind=s0.fault_kind, fault_peer=s0.fault_peer,
+            fault_sev=s0.fault_sev,
         )
         _assert_state_bitwise(sf, s0)
         assert np.all(np.asarray(sf.ds_down) == False)  # noqa: E712
@@ -347,7 +350,8 @@ class TestGridFaultValidation:
             preset="geotp", faults=[[(10, 0, 20)], [(30, 1, 40)]]
         )
         assert len(swept) == 2
-        assert swept.cells[1]["faults"] == ((30, 1, 40),)
+        # legacy triples are normalized to typed 6-column rows at validation
+        assert swept.cells[1]["faults"] == ((30, KIND_CRASH, 1, 1, 40, 0),)
 
     def test_faults_are_not_tabulation_labels(self):
         g = Grid.cross(preset="geotp", faults=((10, 0, 20),), theta=0.9)

@@ -1,0 +1,387 @@
+"""Link-level fault model: partitions, degrades, replica failover.
+
+Acceptance invariants of the typed-fault tentpole:
+
+1. **PR-6 preservation** — a legacy crash-triple schedule and its widened
+   typed 6-column form produce bitwise-identical trajectories on every
+   preset, and a fault-free config still compiles the link-state-free
+   program (covered shape-wise by tests/core/test_faults.py).
+2. **Mode interchangeability** — partition-heavy and degrade-heavy
+   schedules (with replica failover live) are bitwise-identical across all
+   four step modes (drain x lockstep).
+3. **Partition semantics** — a severed middleware link defers in-flight
+   statements to the heal time instead of crash-aborting them, heartbeat
+   probes gate on reachability (they fire while the DS is alive but
+   partitioned), and the per-link downtime/availability arithmetic is exact
+   for deterministic schedules.
+4. **Replica failover** — read-only footprints at an unreachable DS fail
+   over to its replica recording stale reads and the staleness window;
+   writes (or replica-less DSs) keep the fail-fast CAUSE_CRASH path.
+5. **Heartbeat drain** — heartbeat probes are conflict-free window events
+   (no longer window-pinning); only fault rows keep the `fault` stopper.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, protocol, workloads
+from repro.core.engine.api import Grid
+from repro.core.engine.apply import _drainable_due
+from repro.core.engine.state import (
+    CAUSE_CRASH,
+    INF_US,
+    KIND_CRASH,
+    KIND_DEGRADE,
+    KIND_PARTITION,
+    MW,
+    STOP_REASONS,
+    _times_flat,
+    init_state,
+)
+from repro.core.engine.metrics import drain_stats
+from repro.core.netmodel import make_net_params
+
+from test_faults import (  # reuse the crash-suite fixtures verbatim
+    D,
+    RTT,
+    _assert_state_bitwise,
+    _bank,
+    _cfg,
+    _fingerprint,
+)
+
+REPLICA_TAU = (60_000, 60_000)  # both data sources carry a 60ms replica
+REPL_LAG_US = 250_000
+
+# mw partition (ds0), mw degrade (ds1, 5x RTT), mesh partition — all three
+# typed kinds inside the 2s horizon. The cut is long (1s): in-flight
+# statements defer to the heal time, so failovers need admissions *during*
+# the cut, which only happen once the pre-cut txns have drained out.
+PART_HEAVY = (
+    (200_000, KIND_PARTITION, MW, 0, 1_200_000, 0),
+    (1_300_000, KIND_DEGRADE, MW, 1, 1_800_000, 5_000),
+    (1_400_000, KIND_PARTITION, 0, 1, 1_900_000, 0),
+)
+
+# degrade-heavy: both mw links and the mesh link inflated, no severing
+DEGRADE_HEAVY = (
+    (100_000, KIND_DEGRADE, MW, 0, 900_000, 8_000),
+    (300_000, KIND_DEGRADE, 0, 1, 1_200_000, 4_000),
+    (1_000_000, KIND_DEGRADE, MW, 1, 1_900_000, 6_000),
+)
+
+
+def _run(faults, drain, lockstep, preset="geotp", replica_tau=REPLICA_TAU):
+    bank = _bank()
+    net = make_net_params(RTT)
+    cfg = _cfg(preset, drain=drain, lockstep=lockstep, max_faults=len(faults))
+    return engine.simulate(
+        cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30, faults=faults,
+        replica_tau=replica_tau, repl_lag_us=REPL_LAG_US,
+    )
+
+
+class TestLegacyTripleEquivalence:
+    """PR-6 crash schedules keep their exact trajectories as typed rows."""
+
+    @pytest.mark.parametrize("preset", sorted(protocol.PRESETS))
+    def test_triples_match_their_widened_rows(self, preset):
+        bank = _bank()
+        net = make_net_params(RTT)
+        cfg = _cfg(preset, max_faults=2)
+        triples = ((100_000, 0, 400_000), (600_000, 1, 1_300_000))
+        widened = tuple(
+            (t0, KIND_CRASH, ds, ds, t1, 0) for t0, ds, t1 in triples
+        )
+        sa, ma = engine.simulate(
+            cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30, faults=triples
+        )
+        sb, mb = engine.simulate(
+            cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30, faults=widened
+        )
+        assert ma == mb
+        assert _fingerprint(sa, ma) == _fingerprint(sb, mb)
+        _assert_state_bitwise(sa, sb)
+
+
+class TestPartitionBitwiseAcrossModes:
+    """Typed schedules, four step modes, one trajectory."""
+
+    def test_partition_heavy_matches_across_all_modes(self):
+        ref_s, ref_m = _run(PART_HEAVY, drain=False, lockstep=False)
+        # the schedule actually bit: replica failovers with stale reads, and
+        # heartbeat probes while partitioned
+        assert int(np.asarray(ref_s.failovers)) > 0
+        assert int(np.asarray(ref_s.stale_reads)) > 0
+        assert int(np.sum(np.asarray(ref_s.hb_count))) > 0
+        assert ref_m["noops"] == 0
+        for drain, lockstep in ((True, False), (False, True), (True, True)):
+            st, m = _run(PART_HEAVY, drain=drain, lockstep=lockstep)
+            assert m == ref_m, (drain, lockstep)
+            assert _fingerprint(st, m) == _fingerprint(ref_s, ref_m)
+            _assert_state_bitwise(st, ref_s)
+            assert int(np.asarray(st.failovers)) == int(
+                np.asarray(ref_s.failovers)
+            )
+            assert int(np.asarray(st.max_stale_us)) == int(
+                np.asarray(ref_s.max_stale_us)
+            )
+
+    def test_degrade_heavy_matches_across_all_modes(self):
+        ref_s, ref_m = _run(DEGRADE_HEAVY, drain=False, lockstep=False)
+        # pure degrades: nothing unreachable, nothing crashed, yet the
+        # trajectory must differ from the fault-free one (latency inflation
+        # is observed by the EWMA and re-planned around)
+        assert np.all(~np.asarray(ref_s.ds_down))
+        assert int(np.sum(np.asarray(ref_s.down_us))) == 0
+        clean_s, clean_m = _run(
+            tuple((INF_US, KIND_CRASH, 0, 0, INF_US, 0) for _ in range(3)),
+            drain=False, lockstep=False,
+        )
+        assert clean_m != ref_m
+        assert clean_m["avg_latency_ms"] < ref_m["avg_latency_ms"]
+        for drain, lockstep in ((True, False), (False, True), (True, True)):
+            st, m = _run(DEGRADE_HEAVY, drain=drain, lockstep=lockstep)
+            assert m == ref_m, (drain, lockstep)
+            assert _fingerprint(st, m) == _fingerprint(ref_s, ref_m)
+            _assert_state_bitwise(st, ref_s)
+
+
+class TestPartitionSemantics:
+    """Reachability, deferral and exact downtime arithmetic."""
+
+    def test_heartbeats_fire_while_partitioned_ds_alive(self):
+        # regression for liveness-gated probes: the DS never crashes, yet
+        # the middleware cannot reach it — probes and the availability
+        # charge must follow reachability
+        faults = ((100_000, KIND_PARTITION, MW, 0, 1_900_000, 0),) + tuple(
+            (INF_US, KIND_CRASH, 0, 0, INF_US, 0) for _ in range(2)
+        )
+        st, m = _run(faults, drain=True, lockstep=False)
+        assert np.all(~np.asarray(st.ds_down))  # alive throughout
+        hb = np.asarray(st.hb_count)
+        assert hb[0] > 0 and hb[1] == 0  # probes only on the cut link
+        d = drain_stats(st, horizon_us=2_000_000)
+        assert d["availability"] < 1.0
+
+    def test_exact_per_link_downtime_and_availability(self):
+        faults = (
+            (100_000, KIND_PARTITION, MW, 0, 400_000, 0),  # 300ms cut
+            (600_000, KIND_CRASH, 1, 1, 900_000, 0),  # 300ms crash
+            (1_500_000, KIND_PARTITION, MW, 0, 5_000_000, 0),  # open cut
+        )
+        st, m = _run(faults, drain=True, lockstep=False)
+        d = drain_stats(st, horizon_us=2_000_000)
+        # closed spells land in down_us; the open partition is charged up to
+        # the horizon by drain_stats even though ds0 never crashed
+        assert d["link_downtime_us"] == [300_000 + 500_000, 300_000]
+        assert d["availability"] == round(
+            1.0 - (800_000 + 300_000) / (2 * 2_000_000), 6
+        )
+
+    def test_partition_defers_instead_of_crash_aborting(self):
+        # same cut expressed as a crash vs a partition: the crash kills the
+        # in-flight work (CAUSE_CRASH) while the partition defers + fails
+        # over, so the partition run must commit strictly more
+        cut = (200_000, 0, 1_800_000)
+        crash_s, crash_m = _run(
+            (cut,) + tuple((INF_US, 0, INF_US) for _ in range(2)),
+            drain=True, lockstep=False,
+        )
+        part_s, part_m = _run(
+            ((200_000, KIND_PARTITION, MW, 0, 1_800_000, 0),) + tuple(
+                (INF_US, KIND_CRASH, 0, 0, INF_US, 0) for _ in range(2)
+            ),
+            drain=True, lockstep=False,
+        )
+        crash_aborts = int(np.asarray(crash_s.ab_cause)[CAUSE_CRASH])
+        part_aborts = int(np.asarray(part_s.ab_cause)[CAUSE_CRASH])
+        assert crash_aborts > 0
+        assert part_aborts < crash_aborts
+        assert part_m["aborts"] < crash_m["aborts"]
+        assert int(np.asarray(part_s.failovers)) > 0
+
+
+class TestReplicaFailover:
+    """Stale reads, staleness windows and the write fail-fast path."""
+
+    FAULTS = ((300_000, KIND_PARTITION, MW, 0, 1_700_000, 0),) + tuple(
+        (INF_US, KIND_CRASH, 0, 0, INF_US, 0) for _ in range(2)
+    )
+
+    def test_read_only_bank_fails_over_without_crash_aborts(self):
+        cfg_w = workloads.YCSBConfig(
+            num_ds=D, records_per_node=2000, ops_per_txn=4, dist_ratio=0.5,
+            theta=0.9, read_frac=1.0, seed=0,
+        )
+        bank = workloads.make_ycsb_bank(cfg_w, terminals=8, txns_per_terminal=32)
+        net = make_net_params(RTT)
+        cfg = _cfg("geotp", drain=True, max_faults=3)
+        st, m = engine.simulate(
+            cfg, bank, net.tau_dm, net.tau_ds, jitter_milli=30,
+            faults=self.FAULTS, replica_tau=REPLICA_TAU,
+            repl_lag_us=REPL_LAG_US,
+        )
+        # every admission that hit the cut DS failed over; none fail-fasted
+        assert int(np.asarray(st.ab_cause)[CAUSE_CRASH]) == 0
+        fo = int(np.asarray(st.failovers))
+        sr = int(np.asarray(st.stale_reads))
+        assert fo > 0
+        assert sr >= fo  # each failed-over subtxn serves >= 1 read statement
+        # staleness = outage age at dispatch + replication lag: bounded below
+        # by the lag itself and above by the full outage + lag
+        mx = int(np.asarray(st.max_stale_us))
+        assert REPL_LAG_US < mx <= (1_700_000 - 300_000) + REPL_LAG_US
+
+    def test_no_replica_keeps_fail_fast(self):
+        st, m = _run(self.FAULTS, drain=True, lockstep=False,
+                     replica_tau=(INF_US, INF_US))
+        assert int(np.asarray(st.failovers)) == 0
+        assert int(np.asarray(st.stale_reads)) == 0
+        assert int(np.asarray(st.max_stale_us)) == 0
+        assert int(np.asarray(st.ab_cause)[CAUSE_CRASH]) > 0
+
+    def test_writes_at_cut_ds_do_not_fail_over(self):
+        # default bank carries writes: any footprint writing at the cut DS
+        # must fail fast even though a replica exists
+        st, m = _run(self.FAULTS, drain=True, lockstep=False)
+        assert int(np.asarray(st.failovers)) > 0
+        assert int(np.asarray(st.ab_cause)[CAUSE_CRASH]) > 0
+
+
+class TestHeartbeatWindowDrain:
+    """Heartbeat probes drain inside windows; fault rows stay pinned."""
+
+    def test_due_heartbeat_no_longer_pins(self):
+        net = make_net_params(RTT)
+        cfg = _cfg("geotp", max_faults=1)
+        s = init_state(
+            cfg, net.tau_dm, net.tau_ds, jitter_milli=0,
+            faults=((INF_US, KIND_CRASH, 0, 0, INF_US, 0),),
+        )
+        t0 = int(np.min(np.asarray(_times_flat(s))))
+        # a due heartbeat alone must not force the sequential step...
+        s_hb = s._replace(hb_time=s.hb_time.at[0].set(t0 - 1))
+        assert bool(_drainable_due(s_hb))
+        # ...while a due fault row still does
+        s_f = s._replace(fault_time=s.fault_time.at[0].set(t0 - 1))
+        assert not bool(_drainable_due(s_f))
+
+    def test_fault_stopper_counts_only_fault_rows(self):
+        st, m = _run(PART_HEAVY, drain=True, lockstep=False)
+        d = drain_stats(st, horizon_us=2_000_000)
+        stops = d["window_stops"]
+        assert set(stops) == set(STOP_REASONS)
+        # pinned fault rows still cut windows (a pending row can cut several
+        # on the approach to its timestamp), while heartbeat probes drain —
+        # the sequential path only carries the 6 fault start/end transitions
+        # plus whatever the stoppers force, so windows keep forming
+        assert stops["fault"] > 0
+        assert d["drained_events"] > 0 and d["mean_window_len"] >= 2.0
+
+
+class TestTypedGridValidation:
+    """Construction-time validation of typed rows, with cell indices."""
+
+    def test_unknown_kind(self):
+        with pytest.raises(ValueError, match=r"cell 0.*row 0.*unknown kind=7"):
+            Grid([{"preset": "ssp", "faults": ((10, 7, MW, 0, 20, 0),)}])
+
+    def test_endpoint_a_out_of_range(self):
+        with pytest.raises(ValueError, match=r"cell 0.*row 0.*endpoint_a=-3"):
+            Grid([{
+                "preset": "ssp",
+                "faults": ((10, KIND_PARTITION, -3, 0, 20, 0),),
+            }])
+
+    def test_endpoint_b_out_of_range(self):
+        with pytest.raises(
+            ValueError, match=r"cell 0.*row 0.*endpoint_b=9, out of range"
+        ):
+            Grid([{
+                "preset": "ssp",
+                "faults": ((10, KIND_PARTITION, MW, 9, 20, 0),),
+            }])
+
+    def test_self_link(self):
+        with pytest.raises(ValueError, match=r"cell 0.*row 0.*to itself"):
+            Grid([{
+                "preset": "ssp",
+                "faults": ((10, KIND_DEGRADE, 1, 1, 20, 2000),),
+            }])
+
+    def test_end_not_after_start(self):
+        with pytest.raises(
+            ValueError, match=r"cell 0.*row 0 ends at 10us.*not after"
+        ):
+            Grid([{
+                "preset": "ssp",
+                "faults": ((10, KIND_PARTITION, MW, 0, 10, 0),),
+            }])
+
+    def test_degrade_needs_positive_severity(self):
+        with pytest.raises(ValueError, match=r"cell 0.*row 0.*severity=0"):
+            Grid([{
+                "preset": "ssp",
+                "faults": ((10, KIND_DEGRADE, MW, 0, 20, 0),),
+            }])
+
+    def test_overlap_on_one_mw_link(self):
+        with pytest.raises(
+            ValueError, match=r"cell 0.*rows 0 and 1 overlap on link=0"
+        ):
+            Grid([{
+                "preset": "ssp",
+                "faults": (
+                    (10, KIND_PARTITION, MW, 0, 50, 0),
+                    (20, KIND_DEGRADE, MW, 0, 60, 2000),
+                ),
+            }])
+
+    def test_overlap_mesh_link_is_undirected(self):
+        with pytest.raises(
+            ValueError, match=r"cell 0.*rows 0 and 1 overlap on link=0<->1"
+        ):
+            Grid([{
+                "preset": "ssp",
+                "faults": (
+                    (10, KIND_PARTITION, 0, 1, 50, 0),
+                    (20, KIND_PARTITION, 1, 0, 60, 0),
+                ),
+            }])
+
+    def test_crash_occupies_its_mw_link(self):
+        with pytest.raises(ValueError, match=r"cell 0.*rows 0 and 1 overlap"):
+            Grid([{
+                "preset": "ssp",
+                "faults": (
+                    (10, KIND_CRASH, 0, 0, 50, 0),
+                    (20, KIND_PARTITION, MW, 0, 60, 0),
+                ),
+            }])
+        # disjoint intervals on the same link are fine
+        g = Grid([{
+            "preset": "ssp",
+            "faults": (
+                (10, KIND_CRASH, 0, 0, 50, 0),
+                (50, KIND_PARTITION, MW, 0, 60, 0),
+            ),
+        }])
+        assert g.max_faults == 2
+
+    def test_replica_tau_length_checked(self):
+        with pytest.raises(ValueError, match=r"cell 0: replica_tau has 3"):
+            Grid([{"preset": "ssp", "replica_tau": (10, 20, 30)}])
+
+    def test_replica_axes_reach_the_world(self):
+        g = Grid([{
+            "preset": "geotp",
+            "rtt_ms": RTT,
+            "replica_tau": REPLICA_TAU,
+            "repl_lag_us": REPL_LAG_US,
+            "faults": ((10, KIND_PARTITION, MW, 0, 20, 0),),
+        }])
+        w = g.world(0)
+        assert tuple(np.asarray(w.replica_tau)) == REPLICA_TAU
+        assert int(np.asarray(w.repl_lag_us)) == REPL_LAG_US
+        assert "replica_tau" not in g.labels(0)
