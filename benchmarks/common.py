@@ -88,6 +88,7 @@ def run_sweep(
     horizon_s: float = 10.0,
     warmup_s: float = 2.0,
     strategy: str = "auto",
+    mesh_devices: int | None = None,
     record: bool = True,
 ) -> engine.RunResult:
     """Run a grid of cells as one batched device call; returns a RunResult.
@@ -101,13 +102,16 @@ def run_sweep(
            labels into `RunResult.rows()` (theta, level, ...).
     bank:  Bank shared by every cell, or None with `banks` given.
     banks: optional per-cell Bank list (same shapes); batched over the sweep.
+    strategy: placement strategy ("map" / "vmap" / "mesh" / "auto") — see the
+           `engine.placement` strategy table; "mesh" shards the grid's
+           leading axis across `mesh_devices` devices (default: all visible).
     """
     grid = engine.Grid(cells, banks=banks)
     b0 = banks[0] if banks is not None else bank
     sim = engine.Simulator.from_bank(
         b0, terminals=terminals, horizon_s=horizon_s, warmup_s=warmup_s
     )
-    res = sim.run_grid(grid, bank, strategy=strategy)
+    res = sim.run_grid(grid, bank, strategy=strategy, mesh_devices=mesh_devices)
     for c, m in zip(cells, res.metrics):
         m["preset"] = c["preset"]
         # per-cell cost is amortized in a batched sweep; keep wall_s in the

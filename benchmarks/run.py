@@ -17,6 +17,15 @@ telemetry), and acts as a guard: it fails if map events/sec drops more than
 rate (the silent drain-disabled downgrade this telemetry used to hide), or
 if either fault schedule fails to inject real downtime, to recover, or to
 fail reads over to the replica.
+
+`--smoke --strategy mesh` runs the same grid once under the mesh placement
+strategy (the grid's leading axis sharded across every visible jax device via
+`shard_map` — force CPU devices with
+`XLA_FLAGS=--xla_force_host_platform_device_count=8`), merges
+`events_per_sec_mesh` / `strategy_resolved_mesh` / `mesh_devices` into the
+existing smoke record without touching the stored single-device baselines,
+and fails unless more than one device was visible and every cell committed
+(a dead sharded lane means padding leaked or sharded init broke).
 """
 
 from __future__ import annotations
@@ -481,6 +490,95 @@ def smoke() -> int:
     return 0
 
 
+def smoke_mesh() -> int:
+    """The smoke fig5 grid under the mesh placement strategy.
+
+    Shards the grid's leading axis across every visible jax device
+    (`engine.placement` strategy "mesh"; force N CPU devices with
+    `XLA_FLAGS=--xla_force_host_platform_device_count=N`). The 16-cell grid
+    on 8 devices exercises the even split; correctness is covered by
+    tests/core/test_placement.py (mesh is bitwise-identical to map per
+    cell) — this step records throughput and guards liveness:
+
+    * fails when only one device is visible (the forced-multi-device CI env
+      did not take effect, so nothing was actually sharded), and
+    * fails unless every cell commits (a dead sharded lane means padding
+      leaked into real lanes or the sharded init broke).
+
+    The mesh keys are MERGED into the stored smoke record — the
+    single-device baselines (`events_per_sec_batched`, `mean_window_len`,
+    ...) are never clobbered by this step.
+    """
+    import jax
+
+    from benchmarks import common
+
+    t_all = time.time()
+    banks = {
+        sd: common.ycsb_bank(SMOKE_T, theta=0.9, dist_ratio=0.2, seed=sd)
+        for sd in SMOKE_SEEDS
+    }
+    cells, cell_banks = [], []
+    for sd in SMOKE_SEEDS:
+        for preset in SMOKE_PRESETS:
+            cells.append(dict(preset=preset, seed=sd))
+            cell_banks.append(banks[sd])
+
+    jax.clear_caches()
+    t0 = time.time()
+    res = common.run_sweep(
+        "smoke_fig5_mesh",
+        cells,
+        None,
+        SMOKE_T,
+        banks=cell_banks,
+        horizon_s=SMOKE_HORIZON_S,
+        warmup_s=SMOKE_WARMUP_S,
+        strategy="mesh",
+    )
+    wall = time.time() - t0
+    eps_mesh = res.events / max(wall, 1e-9)
+    d = res.drain
+    print(
+        f"[smoke] mesh: {len(cells)} worlds on {res.mesh_devices} devices, "
+        f"{res.events} events, {wall:.1f}s (incl compile) -> "
+        f"{eps_mesh:.0f} events/sec (strategy_resolved={res.strategy_resolved}, "
+        f"drain hit {d['drain_hit_rate']:.1%}, mean window "
+        f"{d['mean_window_len']:.2f})"
+    )
+
+    # merge — never clobber the stored single-device baselines
+    entry = dict(common.load_bench().get("smoke", {}))
+    entry.update(
+        {
+            "events_mesh": res.events,
+            "wall_mesh_s": round(wall, 2),
+            "events_per_sec_mesh": round(eps_mesh, 1),
+            "strategy_resolved_mesh": res.strategy_resolved,
+            "mesh_devices": res.mesh_devices,
+            "wall_mesh_total_s": round(time.time() - t_all, 2),
+        }
+    )
+    commits = [m["commits"] for m in res.metrics]
+    if res.mesh_devices < 2:
+        print(
+            f"[smoke] MESH REGRESSION: only {res.mesh_devices} device visible "
+            f"— nothing was sharded; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        )
+        return 1
+    if any(c == 0 for c in commits):
+        print(
+            f"[smoke] MESH REGRESSION: commits={commits} — a sharded lane "
+            f"went dead (padding leaked into a real lane or sharded init broke)"
+        )
+        common.record_smoke(entry)
+        return 1
+    common.record_smoke(entry)
+    print(f"[smoke] OK: recorded mesh smoke in {common.BENCH_FILE}")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-size sweeps")
@@ -491,10 +589,18 @@ def main():
         action="store_true",
         help="fast batched fig5 grid + events/sec perf-regression guard",
     )
+    ap.add_argument(
+        "--strategy",
+        default=None,
+        choices=("mesh",),
+        help="with --smoke: run the grid under one forced placement strategy "
+        "(mesh shards the grid across every visible jax device; force CPU "
+        "devices with XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+    )
     args = ap.parse_args()
 
     if args.smoke:
-        return smoke()
+        return smoke_mesh() if args.strategy == "mesh" else smoke()
 
     if not args.validate_only:
         from benchmarks import figures

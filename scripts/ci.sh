@@ -27,6 +27,11 @@
 # that a partition-heavy typed schedule (asymmetric middleware cut +
 # degraded link) records real downtime AND replica failovers serving stale
 # reads. Guard semantics: docs/benchmarks.md.
+#
+# A second smoke step re-runs the grid under the mesh placement strategy with
+# 8 forced host CPU devices (XLA_FLAGS=--xla_force_host_platform_device_count)
+# and records events_per_sec_mesh into the bench JSON — it fails unless the
+# devices actually materialized and every sharded cell committed.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -48,6 +53,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if grep -RInE "(^|[^a-zA-Z_.])((import|from) +(benchmarks|repro\.serving)|from +repro +import +[a-zA-Z_, ]*\bserving\b)" \
         src/repro/core/engine/; then
     echo "[ci] LAYERING VIOLATION: engine package imports benchmarks/serving"
+    exit 1
+fi
+# The placement layer may depend on exactly two leaves outside repro.core:
+# repro.dist.sharding (worlds NamedSharding rules) and repro.launch.mesh
+# (the 1-D worlds mesh builder). Anything else from dist/launch is a cycle
+# waiting to happen (those packages build ON the engine's sweep records).
+if grep -RInE "(import|from) +repro\.(dist|launch)" src/repro/core/engine/ \
+        | grep -vE "repro\.(dist\.sharding|launch\.mesh)\b"; then
+    echo "[ci] LAYERING VIOLATION: engine may import only repro.dist.sharding / repro.launch.mesh"
     exit 1
 fi
 python -c "
@@ -103,4 +117,23 @@ grep -Eq "\[smoke\] partitions: .*availability 0\.[0-9]+, failovers [1-9][0-9]*,
     echo "[ci] smoke did not run the partition-heavy schedule (or failover path went dead)"
     exit 1
 }
+
+# Forced-multi-device mesh smoke: shard the same grid over 8 host CPU
+# devices (strategy "mesh"); the step itself fails if <2 devices materialize
+# or any sharded cell reports zero commits. Assert the sharded run reported
+# and that events_per_sec_mesh landed in the bench JSON.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.run --smoke --strategy mesh | tee /tmp/smoke_mesh.out
+grep -Eq "\[smoke\] mesh: .* on [2-9][0-9]* devices, .*events/sec" /tmp/smoke_mesh.out || {
+    echo "[ci] mesh smoke did not report sharded events/sec"
+    exit 1
+}
+python -c "
+from benchmarks import common
+smoke = common.load_bench().get('smoke', {})
+assert smoke.get('events_per_sec_mesh', 0) > 0, 'events_per_sec_mesh missing'
+assert smoke.get('mesh_devices', 0) > 1, f'mesh_devices={smoke.get(\"mesh_devices\")}'
+assert smoke.get('strategy_resolved_mesh') == 'mesh', smoke.get('strategy_resolved_mesh')
+print('[ci] mesh smoke recorded:', smoke['events_per_sec_mesh'], 'events/sec on', smoke['mesh_devices'], 'devices')
+"
 echo "[ci] OK"

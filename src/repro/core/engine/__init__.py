@@ -17,7 +17,10 @@ state machine and decomposed into a package:
     window.py    windowed-drain planner (candidate ranks, stoppers, prefix)
     apply.py     masked window application + the map-lane drain step
     fused.py     fused plan+omnibus windowed drain (lockstep/vmap hot path)
-    batch.py     run loop, simulate / simulate_batch sweep entry points
+    batch.py     run loop, simulate single-world entry point
+    placement.py execution placement layer: map / vmap / mesh strategies,
+                 the auto decision table, shard_map grid sharding over a
+                 1-D "worlds" jax mesh (simulate_batch lives here)
     metrics.py   host-side summaries, drain telemetry, latency CDFs
     api.py       the public facade: Simulator + Grid + RunResult
 
@@ -142,8 +145,17 @@ from repro.core.engine.batch import (
     simulate,
     simulate_batch,
     _run_jit,
-    _sim_batch_fresh,
     _sim_world_fresh,
+)
+from repro.core.engine.placement import (
+    STRATEGIES,
+    mesh_device_count,
+    placement_cfg,
+    resolve_strategy,
+    _batch_over,
+    _mesh_over,
+    _run_batch,
+    _sim_batch_fresh,
 )
 from repro.core.engine.metrics import (
     drain_stats,

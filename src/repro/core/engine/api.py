@@ -43,8 +43,13 @@ import jax.numpy as jnp
 from repro.core.netmodel import PAPER_RTT_MS
 from repro.core.protocol import PRESETS, ProtocolConfig
 
-from repro.core.engine.batch import _run_jit, _sim_world_fresh, simulate_batch
+from repro.core.engine.batch import _run_jit, _sim_world_fresh
 from repro.core.engine.metrics import drain_stats, summarize, world_index
+from repro.core.engine.placement import (
+    mesh_device_count,
+    resolve_strategy,
+    simulate_batch,
+)
 from repro.core.engine.state import (
     FAULT_COLS,
     INF_US,
@@ -540,6 +545,11 @@ class RunResult:
     bank: Any = None
     bank_batched: bool = False
     batched: bool = True
+    # what the placement layer actually ran: the concrete strategy "auto"
+    # resolved to (map / vmap / mesh) and the mesh device count (1 off-mesh)
+    # — recorded in .save so BENCH entries distinguish map/vmap/mesh runs
+    strategy_resolved: str = ""
+    mesh_devices: int = 1
 
     # ---- accessors --------------------------------------------------------
 
@@ -587,10 +597,12 @@ class RunResult:
         events_per_sec/strategy/horizon_s + drain telemetry) so stored
         baselines and the smoke-guard comparisons keep working, plus the jax
         runtime environment keys, the per-stopper window-termination counts,
-        whether the fused lockstep plan ran, and the fault telemetry
-        (availability / abort-cause breakdown / commits during outages /
-        per-link downtime / replica failovers + stale reads — see
-        docs/benchmarks.md).
+        whether the fused lockstep plan ran, the *resolved* placement
+        (`strategy_resolved` / `mesh_devices` — `strategy` stays the
+        requested string, so "auto" entries still say what actually ran),
+        and the fault telemetry (availability / abort-cause breakdown /
+        commits during outages / per-link downtime / replica failovers +
+        stale reads — see docs/benchmarks.md).
         """
         d = self.drain
         entry = {
@@ -600,6 +612,8 @@ class RunResult:
             "wall_s": round(self.wall_s, 2),
             "events_per_sec": round(self.events / max(self.wall_s, 1e-9), 1),
             "strategy": self.strategy,
+            "strategy_resolved": self.strategy_resolved or self.strategy,
+            "mesh_devices": self.mesh_devices,
             "horizon_s": self.cfg.horizon_us / 1e6,
             "drain_hit_rate": d["drain_hit_rate"],
             "mean_window_len": d["mean_window_len"],
@@ -739,14 +753,27 @@ class Simulator:
             bank=bank,
             bank_batched=False,
             batched=False,
+            strategy_resolved="map",
+            mesh_devices=1,
         )
 
-    def run_grid(self, grid: Grid, bank=None, *, strategy: str = "auto") -> RunResult:
+    def run_grid(
+        self,
+        grid: Grid,
+        bank=None,
+        *,
+        strategy: str = "auto",
+        mesh_devices: int | None = None,
+    ) -> RunResult:
         """Run every cell of a Grid as ONE batched device call.
 
         `bank` is shared by every cell unless the Grid carries per-cell banks.
-        Bitwise-identical to per-cell `run` for both strategies (asserted in
-        tests/core/test_api.py).
+        `strategy` picks the placement — "map" / "vmap" / "mesh" (grid cells
+        sharded over a 1-D jax device mesh) / "auto" (resolved by
+        `placement.resolve_strategy`); `mesh_devices` optionally caps the
+        mesh device count (default: every visible device). All strategies are
+        bitwise-identical per cell to per-cell `run` (asserted in
+        tests/core/test_api.py and tests/core/test_placement.py).
         """
         if grid.num_ds != self.cfg.num_ds:
             raise ValueError(
@@ -762,9 +789,16 @@ class Simulator:
         self._check_bank(bank, batched=bank_batched)
         worlds = grid.worlds()
         cfg = self._cfg_for(worlds.faults)
+        resolved = resolve_strategy(strategy)
+        ndev = mesh_device_count(resolved, mesh_devices)
         t0 = time.time()
         states, metrics = simulate_batch(
-            cfg, bank, worlds, bank_batched=bank_batched, strategy=strategy
+            cfg,
+            bank,
+            worlds,
+            bank_batched=bank_batched,
+            strategy=resolved,
+            mesh_devices=ndev,
         )
         wall = time.time() - t0
         for i, m in enumerate(metrics):
@@ -779,6 +813,8 @@ class Simulator:
             bank=bank,
             bank_batched=bank_batched,
             batched=True,
+            strategy_resolved=resolved,
+            mesh_devices=ndev,
         )
 
     def resume(
@@ -788,13 +824,17 @@ class Simulator:
         horizon_s: float | None = None,
         warmup_s: float | None = None,
         strategy: str | None = None,
+        mesh_devices: int | None = None,
     ) -> RunResult:
         """Continue a finished run's states (batched continuations donate the
-        state buffers — `result.states` must not be reused afterwards).
+        state buffers — `result.states` must not be reused afterwards; mesh
+        continuations re-place the donated states on the worlds mesh).
 
         `horizon_s` extends the absolute horizon (a continuation with the old
         horizon is a no-op: every pending event already lies beyond it);
-        `warmup_s` re-gates the metric warmup for the continued span.
+        `warmup_s` re-gates the metric warmup for the continued span. The
+        placement defaults to the original run's: same requested strategy,
+        same mesh device count.
         """
         cfg = result.cfg
         # round, don't truncate: horizon_s often arrives as now/1e6 + delta,
@@ -804,6 +844,10 @@ class Simulator:
         if warmup_s is not None:
             cfg = dataclasses.replace(cfg, warmup_us=round(warmup_s * 1e6))
         strategy = strategy if strategy is not None else result.strategy
+        resolved = resolve_strategy(strategy)
+        if mesh_devices is None and resolved == "mesh" and result.mesh_devices > 1:
+            mesh_devices = result.mesh_devices
+        ndev = mesh_device_count(resolved, mesh_devices)
         t0 = time.time()
         if result.batched:
             states, metrics = simulate_batch(
@@ -812,12 +856,14 @@ class Simulator:
                 None,  # worlds unused on the continuation path
                 bank_batched=result.bank_batched,
                 states=result.states,
-                strategy=strategy,
+                strategy=resolved,
+                mesh_devices=ndev,
             )
         else:
             states = _run_jit(cfg, result.bank, result.states)
             states = jax.block_until_ready(states)
             metrics = [summarize(cfg, states)]
+            resolved, ndev = "map", 1
         wall = time.time() - t0
         return RunResult(
             cfg=cfg,
@@ -829,4 +875,6 @@ class Simulator:
             bank=result.bank,
             bank_batched=result.bank_batched,
             batched=result.batched,
+            strategy_resolved=resolved,
+            mesh_devices=ndev,
         )

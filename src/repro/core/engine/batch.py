@@ -1,14 +1,14 @@
-"""Run loop and multi-world sweep entry points.
+"""Run loop and single-world entry points.
 
 `run` drives one of the four step modes to the horizon inside a
-`lax.while_loop`; `simulate`/`simulate_batch` are the jit-cached single-world
-and batched entry points (map/vmap/auto strategies, donated continuation
-states). The `api.Simulator` facade builds on these.
+`lax.while_loop`; `simulate` is the jit-cached single-world entry point.
+Multi-world sweeps live in `placement` (the map/vmap/mesh strategy layer —
+`simulate_batch` below is a thin legacy alias into it); the `api.Simulator`
+facade builds on both.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.workloads import Bank
 
-from repro.core.engine.metrics import summarize, summarize_batch
+from repro.core.engine.metrics import summarize
 from repro.core.engine.omni import _omni_step
 from repro.core.engine.state import (
     SimConfig,
@@ -91,40 +91,10 @@ def simulate(
 
 
 # ---------------------------------------------------------------------------
-# multi-world sweeps
+# multi-world sweeps — the strategy dispatch moved to `placement` (the
+# map/vmap/mesh execution-placement layer); this alias keeps the historical
+# `engine.simulate_batch` / `batch.simulate_batch` entry point working.
 # ---------------------------------------------------------------------------
-
-
-def _batch_over(one, bank, xs, bank_axis, strategy):
-    """Map `one(bank_lane, x_lane)` over a world batch.
-
-    strategy "vmap" runs lanes in lockstep through the branchless windowed
-    drain (`_omni_window`) — one fused pass per iteration, no switch/cond, so
-    the window plan amortizes across lanes (the accelerator path); "map" runs
-    lanes sequentially inside ONE compiled call (scalar control flow takes
-    the window plan's cond-gated route and per-world cost stays flat as the
-    grid widens — the fastest CPU strategy).
-    """
-    if strategy == "vmap":
-        return jax.vmap(one, in_axes=(bank_axis, 0))(bank, xs)
-    if bank_axis is None:
-        return jax.lax.map(lambda x: one(bank, x), xs)
-    return jax.lax.map(lambda bx: one(*bx), (bank, xs))
-
-
-@functools.partial(jax.jit, static_argnums=(0, 3, 4))
-def _sim_batch_fresh(cfg: SimConfig, bank: Bank, worlds: WorldSpec, bank_axis, strategy):
-    def one(b, w):
-        return run(cfg, b, init_state_world(cfg, w))
-
-    return _batch_over(one, bank, worlds, bank_axis, strategy)
-
-
-@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(2,))
-def _run_batch(cfg: SimConfig, bank: Bank, states: SimState, bank_axis, strategy):
-    return _batch_over(
-        lambda b, st: run(cfg, b, st), bank, states, bank_axis, strategy
-    )
 
 
 def simulate_batch(
@@ -135,34 +105,18 @@ def simulate_batch(
     bank_batched: bool = False,
     states: SimState | None = None,
     strategy: str = "auto",
+    mesh_devices: int | None = None,
 ):
-    """Run a batch of worlds as one batched device call.
+    """Run a batch of worlds as one batched device call — see
+    `placement.simulate_batch` (strategies: map / vmap / mesh / auto)."""
+    from repro.core.engine import placement
 
-    cfg:    shared static config (shapes/horizon); `cfg.proto` only provides
-            defaults — the per-world knobs come from `worlds.dyn`.
-    bank:   one Bank shared by every world, or (bank_batched=True) a Bank
-            whose leaves carry a leading [B] axis (e.g. per-seed workloads).
-    worlds: WorldSpec with a leading [B] axis on every leaf (`stack_worlds`).
-    strategy: "vmap" (lockstep lanes), "map" (sequential lanes, one compile,
-            one device call) or "auto" (vmap on TPU/GPU, map on CPU).
-
-    Returns (final_states [B-batched], list of B metric dicts). Fresh runs
-    fuse init+run into one compiled call; continuation runs (states given)
-    donate the incoming state buffer, so sweeps of any size reuse memory.
-    """
-    if strategy == "auto":
-        strategy = "vmap" if jax.default_backend() in ("tpu", "gpu") else "map"
-    if strategy == "vmap":
-        # lockstep lanes execute every lax.switch/cond branch per iteration;
-        # the branchless omnibus/window steps are strictly cheaper there.
-        # cfg.drain is honored: lockstep lanes route through `_omni_window`
-        # (windowed drain, branchless select) instead of being silently
-        # downgraded to drain=False as before — vmap runs now report a real
-        # drain hit rate. Bitwise-identical trajectories either way.
-        cfg = dataclasses.replace(cfg, lockstep=True)
-    bank_axis = 0 if bank_batched else None
-    if states is None:
-        states = _sim_batch_fresh(cfg, bank, worlds, bank_axis, strategy)
-    else:
-        states = _run_batch(cfg, bank, states, bank_axis, strategy)
-    return states, summarize_batch(cfg, states)
+    return placement.simulate_batch(
+        cfg,
+        bank,
+        worlds,
+        bank_batched=bank_batched,
+        states=states,
+        strategy=strategy,
+        mesh_devices=mesh_devices,
+    )

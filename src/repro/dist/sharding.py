@@ -11,7 +11,39 @@ from __future__ import annotations
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import data_axes
+from repro.launch.mesh import WORLDS_AXIS, data_axes
+
+
+# ---------------------------------------------------------------------------
+# engine world-batch sharding (the `strategy="mesh"` placement rules)
+# ---------------------------------------------------------------------------
+
+
+def worlds_pspec(batched: bool = True) -> P:
+    """PartitionSpec for one engine batch leaf: leading [B] axis over the
+    1-D "worlds" mesh; unbatched (shared) leaves replicate. Worlds are
+    independent, so leading-axis sharding is the complete rule set — no
+    inner dim of `WorldSpec`/`Bank`/`SimState` ever crosses a device."""
+    return P(WORLDS_AXIS) if batched else P()
+
+
+def world_shardings(mesh: Mesh, tree, batched: bool = True):
+    """NamedSharding tree for a stacked engine pytree (WorldSpec / Bank /
+    SimState): every leaf sharded on its leading batch dim over "worlds"
+    (replicated when ``batched=False`` — e.g. a Bank shared by all cells)."""
+    import jax
+
+    sh = NamedSharding(mesh, worlds_pspec(batched))
+    return jax.tree_util.tree_map(lambda _: sh, tree)
+
+
+def place_worlds(tree, mesh: Mesh, batched: bool = True):
+    """Pin a stacked engine pytree onto the worlds mesh (usable under jit:
+    `with_sharding_constraint` so the compiler materializes the leading-axis
+    layout before `shard_map` consumes it)."""
+    import jax
+
+    return jax.lax.with_sharding_constraint(tree, world_shardings(mesh, tree, batched))
 
 
 def train_rules(mesh: Mesh) -> dict:

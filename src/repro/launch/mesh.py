@@ -18,10 +18,57 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(model_axis: int = 1):
-    """Whatever this host actually has — used by examples and tests."""
+    """Whatever this host actually has — used by examples and tests.
+
+    Raises with the actual counts when the host's device count is not a
+    multiple of ``model_axis`` (instead of the bare XLA shape error a
+    non-factoring ``(n // model_axis, model_axis)`` mesh used to produce).
+    """
     n = len(jax.devices())
-    model_axis = max(1, min(model_axis, n))
+    if model_axis < 1:
+        raise ValueError(f"make_local_mesh: model_axis must be >= 1, got {model_axis}")
+    if n % model_axis:
+        raise ValueError(
+            f"make_local_mesh: {n} local device(s) cannot form a "
+            f"(data={n // model_axis}, model={model_axis}) mesh — "
+            f"device_count % model_axis must be 0 (got {n} % {model_axis} "
+            f"= {n % model_axis}); pick a model_axis that divides {n}"
+        )
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+WORLDS_AXIS = "worlds"
+
+
+def make_worlds_mesh(num_devices: int | None = None):
+    """1-D mesh over independent simulation worlds — the engine's scale-out
+    axis (`strategy="mesh"`): grid cells shard on their leading batch dim
+    with zero cross-device communication.
+
+    ``num_devices`` takes the first N local devices (default: all of them).
+    Examples::
+
+        mesh = make_worlds_mesh()          # all devices, axis ("worlds",)
+        mesh.shape                         # {'worlds': jax.device_count()}
+        mesh = make_worlds_mesh(4)         # first 4 devices only
+        P(WORLDS_AXIS)                     # leading-axis PartitionSpec
+
+    Under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` a CPU-only
+    host exposes 8 devices, so the mesh path is exercisable (and CI-tested)
+    without accelerators.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else num_devices
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"make_worlds_mesh: asked for {n} devices, host has "
+            f"{len(devices)}"
+        )
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]), (WORLDS_AXIS,))
 
 
 def data_axes(mesh) -> tuple:

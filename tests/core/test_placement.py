@@ -1,0 +1,284 @@
+"""Placement-layer tests: the map/vmap/mesh strategy table and the mesh
+(`shard_map`) execution path.
+
+1. `resolve_strategy` is THE decision table — unit-tested point by point
+   (mesh when >1 device, vmap on a single accelerator, map on single-host
+   CPU, explicit pass-through, unknown raises) without faking devices.
+2. `strategy="mesh"` is bitwise-identical per cell to `strategy="map"`:
+   asserted in a subprocess forced to 8 host CPU devices
+   (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), including a
+   non-divisible grid (5 cells on a 4-device mesh) whose padding lanes must
+   never leak into metrics/drain telemetry, and a mesh `.resume` round-trip.
+3. `RunResult.save` records the resolved strategy and mesh shape alongside
+   the requested one (``"auto"`` is preserved in ``strategy``).
+4. `launch.mesh` raises with actual counts on non-divisible device splits.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import engine, workloads
+from repro.core.engine import (
+    STRATEGIES,
+    Grid,
+    Simulator,
+    mesh_device_count,
+    placement_cfg,
+    resolve_strategy,
+)
+from repro.launch import mesh as launch_mesh
+
+T, K, D, N = 8, 4, 2, 32
+RTT = (10.0, 100.0)
+
+
+def _bank(seed=0):
+    cfg_w = workloads.YCSBConfig(
+        num_ds=D, records_per_node=2000, ops_per_txn=K, dist_ratio=0.5,
+        theta=0.9, seed=seed,
+    )
+    return workloads.make_ycsb_bank(cfg_w, terminals=T, txns_per_terminal=N)
+
+
+class TestDecisionTable:
+    """`resolve_strategy` point by point — the `auto` contract."""
+
+    @pytest.mark.parametrize("n", [2, 4, 8])
+    @pytest.mark.parametrize("backend", ["cpu", "gpu", "tpu"])
+    def test_auto_is_mesh_on_multiple_devices(self, n, backend):
+        # any extra device is a free lane multiplier, whatever the backend
+        assert resolve_strategy("auto", device_count=n, backend=backend) == "mesh"
+
+    @pytest.mark.parametrize("backend", ["gpu", "tpu"])
+    def test_auto_is_vmap_on_single_accelerator(self, backend):
+        assert resolve_strategy("auto", device_count=1, backend=backend) == "vmap"
+
+    def test_auto_is_map_on_single_host_cpu(self):
+        assert resolve_strategy("auto", device_count=1, backend="cpu") == "map"
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_explicit_strategy_passes_through(self, strategy):
+        # an explicit choice is never second-guessed by the device census
+        assert resolve_strategy(strategy, device_count=8, backend="tpu") == strategy
+        assert resolve_strategy(strategy, device_count=1, backend="cpu") == strategy
+
+    def test_unknown_strategy_raises(self):
+        with pytest.raises(ValueError, match="pmap"):
+            resolve_strategy("pmap")
+
+    def test_mesh_device_count(self):
+        # off-mesh strategies place on one device; mesh defaults to every
+        # visible device and honors an explicit override (a static jit arg,
+        # so each count compiles its own program)
+        assert mesh_device_count("map") == 1
+        assert mesh_device_count("vmap", mesh_devices=4) == 1
+        assert mesh_device_count("mesh", mesh_devices=4) == 4
+        import jax
+
+        assert mesh_device_count("mesh") == jax.device_count()
+
+    def test_placement_cfg_lockstep_only_for_vmap(self):
+        sim = Simulator.from_bank(_bank(), horizon_s=0.1)
+        assert placement_cfg(sim.cfg, "vmap").lockstep
+        assert placement_cfg(sim.cfg, "map") == sim.cfg
+        assert placement_cfg(sim.cfg, "mesh") == sim.cfg
+
+
+class TestWorldsMesh:
+    def test_local_mesh_raises_with_actual_counts(self):
+        import jax
+
+        n = jax.device_count()
+        with pytest.raises(ValueError, match=f"{n}.*{n + 1}"):
+            launch_mesh.make_local_mesh(model_axis=n + 1)
+
+    def test_worlds_mesh_bounds(self):
+        import jax
+
+        m = launch_mesh.make_worlds_mesh()
+        assert m.axis_names == (launch_mesh.WORLDS_AXIS,)
+        assert m.shape[launch_mesh.WORLDS_AXIS] == jax.device_count()
+        with pytest.raises(ValueError):
+            launch_mesh.make_worlds_mesh(0)
+        with pytest.raises(ValueError):
+            launch_mesh.make_worlds_mesh(jax.device_count() + 1)
+
+
+class TestResultRecordsPlacement:
+    def test_save_records_resolved_strategy_and_mesh_shape(self, tmp_path):
+        # the requested strategy ("auto") is preserved; the record also says
+        # what actually ran and on how many devices
+        bank = _bank()
+        sim = Simulator.from_bank(bank, horizon_s=0.1, warmup_s=0.0)
+        res = sim.run_grid(Grid([dict(preset="ssp", rtt_ms=RTT)]), bank,
+                           strategy="auto")
+        assert res.strategy == "auto"
+        assert res.strategy_resolved == resolve_strategy("auto")
+        assert res.mesh_devices == mesh_device_count(res.strategy_resolved)
+        entry = res.save("placement_test", path=tmp_path / "BENCH.json")
+        assert entry["strategy"] == "auto"
+        assert entry["strategy_resolved"] == res.strategy_resolved
+        assert entry["mesh_devices"] == res.mesh_devices
+
+    def test_single_world_run_is_map_on_one_device(self):
+        bank = _bank()
+        sim = Simulator.from_bank(bank, horizon_s=0.1, warmup_s=0.0)
+        res = sim.run(engine.make_world("ssp", RTT), bank)
+        assert (res.strategy_resolved, res.mesh_devices) == ("map", 1)
+
+
+# ---------------------------------------------------------------------------
+# mesh == map bitwise, under 8 forced host CPU devices (subprocess: the
+# device count is fixed at jax import, so the running test process can't
+# retarget itself)
+# ---------------------------------------------------------------------------
+
+_MESH_ENV_PRELUDE = """
+import jax, numpy as np
+from repro.core import engine, workloads
+from repro.core.engine import Grid, Simulator
+
+assert jax.device_count() == 8, jax.device_count()
+
+def bank(seed=0):
+    return workloads.make_ycsb_bank(
+        workloads.YCSBConfig(num_ds=2, records_per_node=2000, ops_per_txn=4,
+                             dist_ratio=0.5, theta=0.9, seed=seed),
+        terminals=8, txns_per_terminal=32)
+
+def bitwise(sa, sb):
+    fa = jax.tree_util.tree_flatten_with_path(sa)[0]
+    fb = jax.tree_util.tree_flatten_with_path(sb)[0]
+    assert len(fa) == len(fb)
+    for (path, a), (_, b) in zip(fa, fb):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=jax.tree_util.keystr(path))
+
+def metrics_equal(ms_a, ms_b):
+    assert len(ms_a) == len(ms_b)
+    for i, (ma, mb) in enumerate(zip(ms_a, ms_b)):
+        assert set(ma) == set(mb), i
+        for k in ma:
+            va, vb = ma[k], mb[k]
+            assert va == vb or (va != va and vb != vb), (i, k, va, vb)
+
+RTT = (10.0, 100.0)
+"""
+
+
+def _run_forced_8dev(body: str) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    # engine/__init__.py -> parents: [0]=engine [1]=core [2]=repro [3]=src
+    # [4]=repo root (benchmarks/ lives there as a namespace package)
+    root = pathlib.Path(engine.__file__).parents[4]
+    env["PYTHONPATH"] = (
+        str(root / "src") + os.pathsep + str(root)
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    subprocess.run(
+        [sys.executable, "-c", _MESH_ENV_PRELUDE + textwrap.dedent(body)],
+        check=True,
+        cwd=str(root),
+        env=env,
+    )
+
+
+class TestMeshBitwise:
+    def test_mesh_matches_map_padding_and_resume(self):
+        # one subprocess, three assertions (amortizes the 8-device startup):
+        # (a) auto resolves to mesh at 8 devices and a 3-cell grid padded to
+        #     8 lanes is bitwise-identical to strategy="map";
+        # (b) 5 cells on a forced 4-device mesh (non-divisible -> padded to
+        #     8 lanes, 3 of them dead weight) keep metrics AND drain
+        #     telemetry identical to map — pad lanes never leak out;
+        # (c) a mesh run resumed to a longer horizon equals the map resume
+        #     bitwise (donated sharded states re-enter the sharded program).
+        _run_forced_8dev(
+            """
+            b = bank()
+            sim = Simulator.from_bank(b, horizon_s=0.5, warmup_s=0.0)
+            grid3 = Grid([
+                dict(preset='ssp', rtt_ms=RTT, jitter_milli=0),
+                dict(preset='geotp', rtt_ms=RTT, jitter_milli=30, seed=1),
+                dict(preset='chiller', rtt_ms=(20.0, 80.0), jitter_milli=0),
+            ])
+            rm = sim.run_grid(grid3, b, strategy='map')
+            ra = sim.run_grid(grid3, b, strategy='auto')
+            assert (ra.strategy, ra.strategy_resolved, ra.mesh_devices) == \\
+                ('auto', 'mesh', 8), (ra.strategy_resolved, ra.mesh_devices)
+            bitwise(rm.states, ra.states)
+            metrics_equal(rm.metrics, ra.metrics)
+            assert rm.drain == ra.drain
+
+            grid5 = Grid.zipped(preset='ssp', rtt_ms=(RTT,), seed=(0, 1, 2, 3, 4))
+            simh = Simulator.from_bank(b, horizon_s=0.25, warmup_s=0.0)
+            rm5 = simh.run_grid(grid5, b, strategy='map')
+            rx5 = simh.run_grid(grid5, b, strategy='mesh', mesh_devices=4)
+            assert rx5.mesh_devices == 4 and len(rx5.metrics) == 5
+            bitwise(rm5.states, rx5.states)
+            metrics_equal(rm5.metrics, rx5.metrics)
+            assert rm5.drain == rx5.drain
+
+            rm1 = simh.resume(rm5, horizon_s=0.5)
+            rx1 = simh.resume(rx5, horizon_s=0.5)
+            assert (rx1.strategy_resolved, rx1.mesh_devices) == ('mesh', 4)
+            bitwise(rm1.states, rx1.states)
+            metrics_equal(rm1.metrics, rx1.metrics)
+            print('mesh bitwise OK')
+            """
+        )
+
+    @pytest.mark.slow
+    def test_batched_banks_shard_with_the_worlds(self):
+        # per-cell banks carry the same leading [B] axis: both pytrees shard
+        # on "worlds" and the result still matches map bitwise
+        _run_forced_8dev(
+            """
+            banks = [bank(s) for s in (0, 1, 2)]
+            cells = [dict(preset=p, rtt_ms=RTT) for p in ('ssp', 'geotp', 'chiller')]
+            grid = Grid(cells, banks=banks)
+            sim = Simulator.from_bank(banks[0], horizon_s=0.5, warmup_s=0.0)
+            rm = sim.run_grid(grid, strategy='map')
+            rx = sim.run_grid(grid, strategy='mesh')
+            assert rx.mesh_devices == 8
+            bitwise(rm.states, rx.states)
+            metrics_equal(rm.metrics, rx.metrics)
+            print('batched-bank mesh OK')
+            """
+        )
+
+    @pytest.mark.slow
+    def test_mesh_matches_map_on_full_smoke_grid(self):
+        # the exact 16-cell smoke fig5 grid (presets x seeds, per-seed
+        # banks) — the surface benchmarks.run --smoke --strategy mesh ships
+        _run_forced_8dev(
+            """
+            from benchmarks.run import SMOKE_PRESETS, SMOKE_SEEDS
+            banks = {sd: workloads.make_ycsb_bank(
+                workloads.YCSBConfig(num_ds=4, records_per_node=1_000_000,
+                                     ops_per_txn=5, dist_ratio=0.2, theta=0.9,
+                                     seed=sd), 32, 256)
+                for sd in SMOKE_SEEDS}
+            cells, cell_banks = [], []
+            for sd in SMOKE_SEEDS:
+                for preset in SMOKE_PRESETS:
+                    cells.append(dict(preset=preset, seed=sd))
+                    cell_banks.append(banks[sd])
+            grid = Grid(cells, banks=cell_banks)
+            sim = Simulator.from_bank(cell_banks[0], terminals=32,
+                                      horizon_s=1.0, warmup_s=0.5)
+            rm = sim.run_grid(grid, strategy='map')
+            rx = sim.run_grid(grid, strategy='mesh')
+            assert rx.mesh_devices == 8 and len(rx.metrics) == 16
+            bitwise(rm.states, rx.states)
+            metrics_equal(rm.metrics, rx.metrics)
+            assert rm.drain == rx.drain
+            print('smoke-grid mesh OK')
+            """
+        )
