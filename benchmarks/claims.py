@@ -1,0 +1,78 @@
+"""Shared claim-validation helpers for the paper-claim summary.
+
+`benchmarks.run.validate` checks every figure's qualitative claims against
+the JSON payloads under results/bench/. The per-figure validators all share
+the same boilerplate — load a figure's rows, index them by preset under some
+label filter, compare, record a (name, ok, detail) verdict — which used to
+live as closures inside `validate()`. It lives here so the fig16/fig17
+fault validators and the fig18 protocol head-to-head use one vocabulary,
+and so the helpers are unit-testable without running any sweep
+(tests/core/test_claims.py).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+class ClaimSet:
+    """Accumulates claim checks against one results directory.
+
+    `load(name)` reads `<results_dir>/<name>.json` (None when the figure has
+    not been run — validators skip silently, matching the historical
+    behavior); `add(name, ok, detail)` records one verdict. `checks` is the
+    list of (name, bool(ok), detail) triples the summary prints.
+    """
+
+    def __init__(self, results_dir="results/bench"):
+        self.dir = pathlib.Path(results_dir)
+        self.checks: list = []
+
+    def load(self, name: str):
+        f = self.dir / f"{name}.json"
+        return json.load(open(f)) if f.exists() else None
+
+    def add(self, name: str, ok, detail) -> None:
+        self.checks.append((name, bool(ok), detail))
+
+    @property
+    def n_ok(self) -> int:
+        return sum(ok for _, ok, _ in self.checks)
+
+
+def rows_by(rows, key: str = "preset", **filters) -> dict:
+    """Index rows by `key` after an equality filter on the other labels.
+
+    The figure payloads are flat lists of per-cell dicts; nearly every claim
+    starts by slicing one schedule/level/theta out and keying the survivors
+    by preset: ``rows_by(fig16, schedule="crashes")`` ->
+    ``{"ssp": row, "geotp": row}``. Later rows win on duplicate keys (the
+    payloads carry one row per (filter, key) combination).
+    """
+    out = {}
+    for r in rows:
+        if all(r.get(k) == v for k, v in filters.items()):
+            out[r[key]] = r
+    return out
+
+
+def values_over(rows, axis: str, value_key: str, **filters) -> list:
+    """The `value_key` series ordered by the `axis` label (filtered first).
+
+    For monotonicity claims: ``values_over(fig18_rows, "clock_skew_us",
+    "fast_rate", preset="tiga", rtt_scale=1.0)`` -> the fast-path rate as
+    the skew axis grows.
+    """
+    picked = [r for r in rows if all(r.get(k) == v for k, v in filters.items())]
+    return [r[value_key] for r in sorted(picked, key=lambda r: r[axis])]
+
+
+def ratio(num, den, eps: float = 1e-9) -> float:
+    """num/den with the zero-denominator guard every throughput claim uses."""
+    return num / max(den, eps)
+
+
+def non_increasing(series, tol: float = 0.0) -> bool:
+    """True when each element is <= its predecessor (+tol absolute slack)."""
+    return all(b <= a + tol for a, b in zip(series, series[1:]))

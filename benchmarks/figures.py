@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import run_sweep, save, summary_line, ycsb_bank
+from benchmarks.common import DEFAULT_RTT, run_sweep, save, summary_line, ycsb_bank
 from repro.core import engine, workloads
 
 QUICK_T = 48  # default terminals for sweeps
@@ -411,6 +411,62 @@ def fig17_partitions(quick=True):
     return out
 
 
+def fig18_protocols(quick=True):
+    """Protocol-zoo head-to-head: GeoTP vs FASTC vs TIGA vs OPTA vs SSP
+    across contention × RTT scale, with a synchronized-clock skew axis for
+    TIGA — WAN rounds per finished transaction (the commit-path cost each
+    design removes), fast-path commit rate, and the abort/latency tradeoff.
+
+    Runs with warmup 0 so the receive-side `wan_rounds` counter and the
+    commit/abort tallies cover the same span; `wan_per_txn` divides by
+    finished (committed + aborted) transactions, so in-flight tails at the
+    horizon only dilute all presets equally."""
+    out = []
+    scales = (0.5, 1.0) if quick else (0.5, 1.0, 2.0)
+    skews = (0, 100_000, 200_000)  # vs the tiga preset's 150 ms slack
+    cells, banks = [], []
+    for level, theta in (("uniform", 0.0), ("hotspot", 1.2)):
+        bank = ycsb_bank(QUICK_T, theta=theta, dist_ratio=0.5)
+        for scale in scales:
+            rtt = tuple(r * scale for r in DEFAULT_RTT)
+            for preset in ("ssp", "geotp", "fastc", "opta"):
+                cells.append(dict(preset=preset, rtt_ms=rtt, level=level,
+                                  rtt_scale=scale, clock_skew_us=0))
+                banks.append(bank)
+            for skew in skews:
+                cells.append(dict(preset="tiga", rtt_ms=rtt, level=level,
+                                  rtt_scale=scale, clock_skew_us=skew))
+                banks.append(bank)
+    res = run_sweep(
+        "fig18", cells, None, QUICK_T, banks=banks, horizon_s=8.0,
+        warmup_s=0.0,
+    )
+    for i, (c, m) in enumerate(zip(cells, res.metrics)):
+        d = engine.drain_stats(res.world(i), horizon_us=res.cfg.horizon_us)
+        finished = max(m["commits"] + m["aborts"], 1)
+        out.append(
+            dict(
+                level=c["level"], rtt_scale=c["rtt_scale"],
+                clock_skew_us=c["clock_skew_us"],
+                wan_rounds=d["wan_rounds"],
+                wan_per_txn=round(d["wan_rounds"] / finished, 3),
+                fast_commits=d["fast_commits"],
+                fast_rate=round(d["fast_commits"] / max(m["commits"], 1), 4),
+                **m,
+            )
+        )
+        print(
+            summary_line(
+                f"fig18 {c['level']} x{c['rtt_scale']} "
+                f"skew={c['clock_skew_us'] // 1000}ms {c['preset']}", m
+            )
+            + f" wan/txn={out[-1]['wan_per_txn']:5.2f}"
+            f" fast={out[-1]['fast_rate']:.0%}"
+        )
+    save("fig18_protocols", out)
+    return out
+
+
 ALL_FIGURES = [
     fig1_motivation,
     fig5_overall,
@@ -426,4 +482,5 @@ ALL_FIGURES = [
     fig15_multiregion,
     fig16_faults,
     fig17_partitions,
+    fig18_protocols,
 ]

@@ -12,11 +12,14 @@ into results/bench/BENCH_engine.json, compares against the seed engine
 fault schedule to completion (recording availability / abort-cause /
 goodput-during-fault telemetry) plus a partition-heavy typed schedule
 (asymmetric middleware cut + degraded link, recording failover / stale-read
-telemetry), and acts as a guard: it fails if map events/sec drops more than
-30% below the stored baseline, if the vmap path reports a zero drain hit
-rate (the silent drain-disabled downgrade this telemetry used to hide), or
-if either fault schedule fails to inject real downtime, to recover, or to
-fail reads over to the replica.
+telemetry), runs the protocol-zoo presets (SSP/GeoTP/FASTC/TIGA/OPTA)
+head-to-head recording per-protocol events/sec + WAN-round telemetry, and
+acts as a guard: it fails if map events/sec drops more than 30% below the
+stored baseline, if the vmap path reports a zero drain hit rate (the silent
+drain-disabled downgrade this telemetry used to hide), if either fault
+schedule fails to inject real downtime, to recover, or to fail reads over
+to the replica, or if FASTC's WAN rounds per finished txn are not strictly
+below SSP's on every protocol cell.
 
 `--smoke --strategy mesh` runs the same grid once under the mesh placement
 strategy (the grid's leading axis sharded across every visible jax device via
@@ -31,23 +34,22 @@ and fails unless more than one device was visible and every cell committed
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 import sys
 import time
 
 
 def validate(results_dir="results/bench") -> list:
     """Check the paper's qualitative claims against our measurements."""
-    checks = []
-    p = pathlib.Path(results_dir)
+    from benchmarks.claims import (
+        ClaimSet,
+        non_increasing,
+        ratio,
+        rows_by,
+        values_over,
+    )
 
-    def load(name):
-        f = p / f"{name}.json"
-        return json.load(open(f)) if f.exists() else None
-
-    def add(name, ok, detail):
-        checks.append((name, bool(ok), detail))
+    cs = ClaimSet(results_dir)
+    checks, load, add = cs.checks, cs.load, cs.add
 
     fig5 = load("fig5_overall")
     if fig5:
@@ -56,7 +58,7 @@ def validate(results_dir="results/bench") -> list:
         for T in sorted({r["terminals"] for r in ycsb}):
             by = {r["preset"]: r for r in ycsb if r["terminals"] == T}
             if "geotp" in by and "ssp" in by:
-                ratios.append(by["geotp"]["throughput_tps"] / max(by["ssp"]["throughput_tps"], 1e-9))
+                ratios.append(ratio(by["geotp"]["throughput_tps"], by["ssp"]["throughput_tps"]))
         add("fig5: GeoTP > SSP (YCSB, all terminal counts)", all(r > 1.0 for r in ratios),
             f"ratios={[round(r,2) for r in ratios]}")
         sdb = [r for r in ycsb if r["preset"] == "scalardb"]
@@ -86,7 +88,7 @@ def validate(results_dir="results/bench") -> list:
         for theta in sorted({r["theta"] for r in fig12}):
             by = {r["preset"]: r for r in fig12 if r["theta"] == theta}
             if "geotp" in by and "ssp" in by:
-                best = max(best, by["geotp"]["throughput_tps"] / max(by["ssp"]["throughput_tps"], 1e-9))
+                best = max(best, ratio(by["geotp"]["throughput_tps"], by["ssp"]["throughput_tps"]))
             if 0.5 <= theta <= 1.0 and all(k in by for k in ("ssp", "geotp-o1", "geotp-o1o2")):
                 order_ok.append(
                     by["ssp"]["throughput_tps"] <= by["geotp-o1"]["throughput_tps"] * 1.05
@@ -123,8 +125,8 @@ def validate(results_dir="results/bench") -> list:
 
     fig16 = load("fig16_faults")
     if fig16:
-        faulted = {r["preset"]: r for r in fig16 if r["schedule"] == "crashes"}
-        clean = {r["preset"]: r for r in fig16 if r["schedule"] == "fault-free"}
+        faulted = rows_by(fig16, schedule="crashes")
+        clean = rows_by(fig16, schedule="fault-free")
         if faulted and clean:
             add("fig16: injected outages show up in availability",
                 all(r["availability"] < 1.0 for r in faulted.values())
@@ -145,9 +147,9 @@ def validate(results_dir="results/bench") -> list:
 
     fig17 = load("fig17_partitions")
     if fig17:
-        parts = {r["preset"]: r for r in fig17 if r["schedule"] == "partitions"}
-        degr = {r["preset"]: r for r in fig17 if r["schedule"] == "degrades"}
-        clean = {r["preset"]: r for r in fig17 if r["schedule"] == "fault-free"}
+        parts = rows_by(fig17, schedule="partitions")
+        degr = rows_by(fig17, schedule="degrades")
+        clean = rows_by(fig17, schedule="fault-free")
         if parts and clean:
             add("fig17: partitions charge availability, fault-free does not",
                 all(r["availability"] < 1.0 for r in parts.values())
@@ -170,6 +172,41 @@ def validate(results_dir="results/bench") -> list:
                     degr["geotp"]["throughput_tps"]
                     >= degr["ssp"]["throughput_tps"],
                     {k: round(v["throughput_tps"]) for k, v in degr.items()})
+
+    fig18 = load("fig18_protocols")
+    if fig18:
+        axes = sorted({(r["level"], r["rtt_scale"]) for r in fig18})
+        # TIGA rows carry a swept skew axis; the other presets run at skew 0
+        fastc_ok, geotp_ok, fast_fires = [], [], []
+        for level, scale in axes:
+            by = rows_by(fig18, level=level, rtt_scale=scale, clock_skew_us=0)
+            fastc_ok.append(by["fastc"]["wan_per_txn"] < by["ssp"]["wan_per_txn"])
+            geotp_ok.append(by["geotp"]["wan_per_txn"] < by["ssp"]["wan_per_txn"])
+            fast_fires.append(by["fastc"]["fast_commits"] > 0)
+        add("fig18: FASTC co-coordinator commit cuts WAN rounds/txn below SSP (every cell)",
+            all(fastc_ok) and fastc_ok,
+            {f"{lv} x{sc}": (round(rows_by(fig18, level=lv, rtt_scale=sc, clock_skew_us=0)["fastc"]["wan_per_txn"], 2),
+                             round(rows_by(fig18, level=lv, rtt_scale=sc, clock_skew_us=0)["ssp"]["wan_per_txn"], 2))
+             for lv, sc in axes})
+        add("fig18: decentralized prepare (GeoTP) needs fewer WAN rounds/txn than coordinated SSP",
+            all(geotp_ok) and geotp_ok, f"{sum(geotp_ok)}/{len(geotp_ok)} cells")
+        add("fig18: FASTC fast path fires on every cell",
+            all(fast_fires) and fast_fires, f"{sum(fast_fires)}/{len(fast_fires)} cells")
+        tiga_ok, tiga_detail = [], {}
+        for level, scale in axes:
+            series = values_over(fig18, "clock_skew_us", "fast_rate",
+                                 preset="tiga", level=level, rtt_scale=scale)
+            tiga_ok.append(non_increasing(series, tol=0.02) and series[-1] < series[0])
+            tiga_detail[f"{level} x{scale}"] = [round(v, 2) for v in series]
+        add("fig18: TIGA single-round commit rate degrades as clock skew eats the slack",
+            all(tiga_ok) and tiga_ok, tiga_detail)
+        hot = rows_by(fig18, level="hotspot", rtt_scale=1.0, clock_skew_us=0)
+        if "opta" in hot and "ssp" in hot:
+            add("fig18: OPTA trades aborts for commit latency under contention (vs lock-wait SSP)",
+                hot["opta"]["abort_rate"] >= hot["ssp"]["abort_rate"]
+                and hot["opta"]["avg_latency_ms"] < hot["ssp"]["avg_latency_ms"],
+                dict(opta=(round(hot["opta"]["abort_rate"], 3), round(hot["opta"]["avg_latency_ms"])),
+                     ssp=(round(hot["ssp"]["abort_rate"], 3), round(hot["ssp"]["avg_latency_ms"]))))
 
     t1 = load("table1_heterogeneous")
     if t1:
@@ -206,6 +243,9 @@ SMOKE_PARTITIONS = (
     (800_000, 2, -1, 2, 2_000_000, 4_000),  # KIND_DEGRADE, MW<->ds2, 4x
 )
 SMOKE_REPLICAS = dict(replica_tau=(30_000,) * 4, repl_lag_us=500_000)
+# protocol-zoo head-to-head smoke: the commit-path presets measured by the
+# receive-side wan_rounds counter (docs/architecture.md protocol-zoo table)
+SMOKE_PROTOCOLS = ("ssp", "geotp", "fastc", "tiga", "opta")
 
 
 def smoke() -> int:
@@ -222,7 +262,10 @@ def smoke() -> int:
     * batched map throughput regresses >30% below the stored baseline (with
       the speedup-vs-seed escape hatch for slower hosts), or
     * the mean window length regresses below the stored baseline — the
-      slot-accurate stoppers must not silently coarsen back.
+      slot-accurate stoppers must not silently coarsen back, or
+    * the protocol-zoo head-to-head reports FASTC WAN rounds per finished
+      txn at or above SSP's on any cell — the co-coordinator commit must
+      actually remove the commit-broadcast round.
 
     There is no vmap/map events/sec floor on CPU: even fused, the lockstep
     window plan trades per-iteration matrix work for a while-loop trip cut,
@@ -365,6 +408,61 @@ def smoke() -> int:
         f"{d_part['max_staleness_us']}us), {wall_part:.1f}s (incl compile)"
     )
 
+    # protocol-zoo head-to-head: run the commit-path presets on the same
+    # bank (warmup 0 keeps the receive-side wan_rounds counter and the
+    # commit/abort tally on the same span) and guard the tentpole claim —
+    # FASTC's co-coordinator commit must land strictly fewer WAN rounds per
+    # finished txn than SSP's coordinated 2PC on EVERY smoke cell
+    t0 = time.time()
+    proto_cells = [
+        dict(preset=p, seed=sd)
+        for sd in SMOKE_SEEDS[:2]
+        for p in SMOKE_PROTOCOLS
+    ]
+    res_z = common.run_sweep(
+        "smoke_protocols",
+        proto_cells,
+        None,
+        SMOKE_T,
+        banks=[banks[c["seed"]] for c in proto_cells],
+        horizon_s=SMOKE_HORIZON_S,
+        warmup_s=0.0,
+        strategy="map",
+    )
+    wall_proto = time.time() - t0
+    wall_cell = wall_proto / max(len(proto_cells), 1)
+    wan_per_txn = {}
+    proto_rec = {}
+    for i, (c, m) in enumerate(zip(proto_cells, res_z.metrics)):
+        d = engine.drain_stats(res_z.world(i), horizon_us=res_z.cfg.horizon_us)
+        wan_per_txn[(c["preset"], c["seed"])] = d["wan_rounds"] / max(
+            m["commits"] + m["aborts"], 1
+        )
+        rec = proto_rec.setdefault(
+            c["preset"],
+            {"events": 0, "wan_rounds": 0.0, "fast_commits": 0, "cells": 0},
+        )
+        rec["events"] += m["events"]
+        rec["wan_rounds"] += d["wan_rounds"]
+        rec["fast_commits"] += d["fast_commits"]
+        rec["cells"] += 1
+    for p, rec in proto_rec.items():
+        rec["events_per_sec"] = round(
+            rec["events"] / max(rec["cells"] * wall_cell, 1e-9), 1
+        )
+        rec["wan_per_txn"] = round(
+            sum(v for (pp, _), v in wan_per_txn.items() if pp == p)
+            / rec.pop("cells"),
+            3,
+        )
+    print(
+        "[smoke] protocols wan/txn: "
+        + ", ".join(f"{p}={proto_rec[p]['wan_per_txn']:.2f}" for p in SMOKE_PROTOCOLS)
+        + f"; fastc fast commits {proto_rec['fastc']['fast_commits']}, "
+        f"tiga fast commits {proto_rec['tiga']['fast_commits']}, "
+        f"{wall_proto:.1f}s (incl compile)"
+    )
+
     bench = common.load_bench()
     prior = bench.get("smoke", {}).get("events_per_sec_batched")
     prior_mwl = bench.get("smoke", {}).get("mean_window_len")
@@ -396,8 +494,33 @@ def smoke() -> int:
         "stale_reads_partition": d_part["stale_reads"],
         "max_staleness_us_partition": d_part["max_staleness_us"],
         "wall_partition_s": round(wall_part, 2),
+        "protocols": proto_rec,
+        "wall_protocols_s": round(wall_proto, 2),
         "total_wall_s": round(time.time() - t_all, 2),
     }
+    fastc_cells_ok = [
+        wan_per_txn[("fastc", sd)] < wan_per_txn[("ssp", sd)]
+        for sd in SMOKE_SEEDS[:2]
+    ]
+    if not all(fastc_cells_ok):
+        # the co-coordinator commit exists to remove the DM commit-broadcast
+        # round; if its per-txn WAN cost is not strictly below coordinated
+        # 2PC the wan_rounds accounting or the FASTC transition regressed
+        print(
+            f"[smoke] PROTOCOL REGRESSION: FASTC wan/txn not strictly below "
+            f"SSP on every cell: "
+            + ", ".join(
+                f"seed {sd}: fastc={wan_per_txn[('fastc', sd)]:.2f} vs "
+                f"ssp={wan_per_txn[('ssp', sd)]:.2f}"
+                for sd in SMOKE_SEEDS[:2]
+            )
+        )
+        if prior is not None:
+            entry["events_per_sec_batched"] = prior
+        if prior_mwl is not None:
+            entry["mean_window_len"] = prior_mwl
+        common.record_smoke(entry)
+        return 1
     if (
         not 0.0 < d_part["availability"] < 1.0
         or d_part["failovers"] <= 0

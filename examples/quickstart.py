@@ -73,6 +73,32 @@ print(f"with a 2s partition of DS 0: availability {d['availability']:.4f}, "
       f"{d['link_downtime_us']}us")
 assert 0.0 < d["availability"] < 1.0
 
+# The protocol zoo: related-work commit paths are presets too. WAN cost is
+# measured per run — `wan_rounds` counts actual cross-WAN legs /2, and
+# `fast_commits` counts commit decisions that landed locally (FASTC's
+# co-coordinator, Tiga's in-slack deadline, async local commits). The
+# `clock_skew_us` axis feeds Tiga's deadline check: skew past the 150 ms
+# slack kills the single-round fast path.
+from repro.core import engine
+
+zoo = Grid(
+    [
+        dict(preset="ssp", jitter_milli=0),
+        dict(preset="fastc", jitter_milli=0),
+        dict(preset="tiga", jitter_milli=0, clock_skew_us=0),
+        dict(preset="tiga", jitter_milli=0, clock_skew_us=300_000),
+        dict(preset="opta", jitter_milli=0),
+    ]
+)
+res_z = sim.run_grid(zoo, bank)
+for i, row in enumerate(res_z.rows()):
+    dz = engine.drain_stats(res_z.world(i), horizon_us=res_z.cfg.horizon_us)
+    done = max(row["commits"] + row["aborts"], 1)
+    skew = zoo.cells[i].get("clock_skew_us", 0)
+    print(f"{row['preset']:6s} skew={skew // 1000:3d}ms: "
+          f"{dz['wan_rounds'] / done:5.2f} WAN rounds/txn, "
+          f"{dz['fast_commits']} fast commits")
+
 # ---- 3. The model substrate: one forward pass of an assigned arch ----------
 from repro.configs import registry
 from repro.models import stack

@@ -11,8 +11,11 @@
 #
 # Before the tests, a layering guard asserts the `repro.core.engine` package
 # imports side-effect-free and never depends on `benchmarks`/`repro.serving`
-# (the benchmark harness is a thin client of Simulator/Grid/RunResult), and
-# `examples/quickstart.py` runs as a public-API smoke.
+# (the benchmark harness is a thin client of Simulator/Grid/RunResult), that
+# `repro.core.protocols` stays a pure-data leaf below the engine, that every
+# registered preset is covered by the bitwise test matrix and documented in
+# the architecture doc, and `examples/quickstart.py` runs as a public-API
+# smoke.
 #
 # The smoke step runs `benchmarks/run.py --smoke`: a reduced fig5 YCSB grid
 # (presets x seeds) executed once per batching strategy. It asserts that
@@ -26,7 +29,10 @@
 # completion with real availability loss recorded into the bench JSON, and
 # that a partition-heavy typed schedule (asymmetric middleware cut +
 # degraded link) records real downtime AND replica failovers serving stale
-# reads. Guard semantics: docs/benchmarks.md.
+# reads. A protocol head-to-head step runs the zoo's commit mechanisms
+# (ssp/geotp/fastc/tiga/opta) on the same cells and fails unless FASTC's
+# co-coordinator commit lands strictly fewer WAN rounds per txn than SSP on
+# every cell. Guard semantics: docs/benchmarks.md.
 #
 # A second smoke step re-runs the grid under the mesh placement strategy with
 # 8 forced host CPU devices (XLA_FLAGS=--xla_force_host_platform_device_count)
@@ -72,6 +78,31 @@ bad = sorted(m for m in sys.modules
 assert not bad, f'engine import pulled in: {bad}'
 print('[ci] engine package import clean (no benchmarks/serving leakage)')
 "
+# The protocol zoo is a pure-data leaf BELOW the engine: presets are plain
+# frozen dataclasses the engine compiles from. It must never import the
+# engine (or anything above it) or the preset registry becomes a cycle.
+if grep -RInE "(import|from) +(benchmarks|repro\.serving|repro\.core\.engine|repro\.dist|repro\.launch)" \
+        src/repro/core/protocols/; then
+    echo "[ci] LAYERING VIOLATION: protocols package must stay a pure-data leaf"
+    exit 1
+fi
+# Registry consistency: every registered preset must appear in the bitwise
+# test matrix (tests/core/test_protocols.py) and the architecture doc's
+# protocol table, and the legacy repro.core.protocol shim must stay the
+# identical surface.
+python -c "
+import pathlib
+from repro.core import protocol
+from repro.core.protocols import PRESETS
+assert protocol.PRESETS is PRESETS, 'repro.core.protocol shim diverged'
+tests = pathlib.Path('tests/core/test_protocols.py').read_text()
+docs = pathlib.Path('docs/architecture.md').read_text()
+missing = [(n, where) for n in sorted(PRESETS)
+           for where, text in (('tests', tests), ('docs', docs))
+           if f'\"{n}\"' not in text and f'\`{n}\`' not in text]
+assert not missing, f'presets unreferenced in tests/docs: {missing}'
+print(f'[ci] protocol registry consistent: {len(PRESETS)} presets in tests + docs')
+"
 
 if [ "${SKIP_TESTS:-0}" != "1" ]; then
     # fast tier-1 (addopts already deselect the slow marks)
@@ -115,6 +146,10 @@ grep -Eq "\[smoke\] faults: .*availability 0\.[0-9]+" /tmp/smoke.out || {
 }
 grep -Eq "\[smoke\] partitions: .*availability 0\.[0-9]+, failovers [1-9][0-9]*, stale reads [1-9][0-9]*" /tmp/smoke.out || {
     echo "[ci] smoke did not run the partition-heavy schedule (or failover path went dead)"
+    exit 1
+}
+grep -Eq "\[smoke\] protocols wan/txn: ssp=[0-9.]+, geotp=[0-9.]+, fastc=[0-9.]+, tiga=[0-9.]+, opta=[0-9.]+" /tmp/smoke.out || {
+    echo "[ci] smoke did not run the protocol head-to-head (wan/txn line missing)"
     exit 1
 }
 

@@ -66,7 +66,7 @@ from repro.core.engine.state import (
 # engine-owned axes a Grid cell may set; everything else is a free-form label
 GRID_AXES = (
     "preset", "rtt_ms", "tau_true_us", "jitter_milli", "exec_scale_milli",
-    "seed", "faults", "replica_tau", "repl_lag_us",
+    "seed", "faults", "replica_tau", "repl_lag_us", "clock_skew_us",
 )
 # axes whose single value is itself a sequence (one entry per data source)
 _VECTOR_AXES = ("rtt_ms", "tau_true_us", "exec_scale_milli", "replica_tau")
@@ -283,6 +283,9 @@ class Grid:
     (`SimConfig.max_faults`), derived per grid by the `Simulator`.
     ``replica_tau`` (per-DS replica-link RTT vector, INF_US = no replica)
     and ``repl_lag_us`` enable read-only replica failover during outages.
+    ``clock_skew_us`` is the worst-case middleware<->DS clock offset the
+    ``tiga`` preset's synchronized-clock fast path must absorb (a
+    non-negative integer; irrelevant to the other presets).
 
     NOTE: an unset ``jitter_milli`` defaults to **30** (±3% one-way jitter —
     the historical `run_sweep` cell default, kept for baseline
@@ -309,7 +312,7 @@ class Grid:
     >>> Grid([{"preset": "ssp"}, {"preset": "nope"}])
     Traceback (most recent call last):
         ...
-    ValueError: Grid cell 1: unknown preset 'nope' (known: ['chiller', 'geotp', 'geotp-o1', 'geotp-o1o2', 'quro', 'scalardb', 'ssp', 'ssp-local', 'yugabyte-like'])
+    ValueError: Grid cell 1: unknown preset 'nope' (known: ['chiller', 'fastc', 'geotp', 'geotp-o1', 'geotp-o1o2', 'opta', 'quro', 'scalardb', 'ssp', 'ssp-local', 'tiga', 'yugabyte-like'])
     """
 
     def __init__(self, cells, *, banks=None, default_rtt_ms=None):
@@ -353,6 +356,15 @@ class Grid:
                     f"Grid cell {i}: replica_tau has {len(rt)} entries, "
                     f"need one per data source (num_ds={self.num_ds}; use "
                     f"INF_US for data sources without a replica)"
+                )
+            skew = c.get("clock_skew_us")
+            if skew is not None and (
+                not isinstance(skew, int) or isinstance(skew, bool) or skew < 0
+            ):
+                raise ValueError(
+                    f"Grid cell {i}: clock_skew_us must be a non-negative "
+                    f"integer (microseconds of worst-case clock offset), "
+                    f"got {skew!r}"
                 )
         # the fault axis is static-shaped: every cell must carry the same
         # number of schedule rows (F) so the worlds stack into one batch
@@ -480,6 +492,7 @@ class Grid:
             max_faults=self.max_faults,
             replica_tau=c.get("replica_tau"),
             repl_lag_us=c.get("repl_lag_us", 0),
+            clock_skew_us=c.get("clock_skew_us", 0),
         )
 
     def worlds(self) -> WorldSpec:
@@ -529,9 +542,9 @@ class RunResult:
     >>> sorted(res.drain)  # doctest: +NORMALIZE_WHITESPACE
     ['abort_causes', 'availability', 'commits_during_fault',
      'drain_hit_rate', 'drained_events', 'events', 'failovers',
-     'link_downtime_us', 'loop_iters', 'max_staleness_us',
+     'fast_commits', 'link_downtime_us', 'loop_iters', 'max_staleness_us',
      'mean_window_len', 'plan_fused', 'seq_events', 'stale_reads',
-     'window_stops', 'windows']
+     'wan_rounds', 'window_stops', 'windows']
     >>> res.drain["availability"]  # fault-free run: every DS up throughout
     1.0
     """
@@ -627,6 +640,8 @@ class RunResult:
             "stale_reads": d["stale_reads"],
             "failovers": d["failovers"],
             "max_staleness_us": d["max_staleness_us"],
+            "wan_rounds": d["wan_rounds"],
+            "fast_commits": d["fast_commits"],
         }
         return record_bench(tag, entry, path)
 

@@ -145,7 +145,7 @@ def _apply_window(
         & (jnp.take_along_axis(v.first_c, d_of, axis=1) == kk[None, :])
         & jnp.take_along_axis(v.has_c, d_of, axis=1)
     )
-    arr_at_op = jnp.take_along_axis(v.arrival_td, d_of, axis=1)
+    arr_at_op = jnp.take_along_axis(v.eff_arrival_td, d_of, axis=1)
     op_state = jnp.where(
         c_ops_w, jnp.where(is_first_w, OP_ENROUTE, OP_QUEUED), op_state
     )
@@ -169,6 +169,7 @@ def _apply_window(
     sub_state = jnp.where(due_sched, SUB_RUN, sub_state)
     sub_time = jnp.where(due_sched, INF_US, sub_time)
     sub_arrive = jnp.where(due_sched, v.arrival_td, s_.sub_arrive)
+    sub_fast = jnp.where(due_sched, v.fast_disp_td, s_.sub_fast)
     sub_state = jnp.where(dm_mask, v.dm_self, sub_state)
     sub_time = jnp.where(dm_mask, INF_US, sub_time)
     row_c = send_c_w[:, None] & inv
@@ -281,6 +282,22 @@ def _apply_window(
     )
     lcs_span = jnp.where(lcs_have, (evt_sub - s_.first_lock + 500) // 1000, 0)
 
+    # WAN-leg charging (receive-side, mirrors the sequential handlers): op
+    # arrivals, DM fan-ins (round replies/votes and commit/abort acks),
+    # prepare-cmd arrivals, and finishes by PRE-state — COMMIT_CMD arrived
+    # over the WAN, LOCAL_COMMIT was decided on-site, ABORT_PEER only rode
+    # the WAN when routed via the DM (~early_abort). fast_commits counts
+    # round completions landing directly in SUB_LOCAL_COMMIT (YUGA
+    # centralized, FASTC co-commit, TIGA in-slack single-round).
+    wan_inc = (
+        jnp.sum(due_arr, dtype=i32)
+        + jnp.sum(dm_mask, dtype=i32)
+        + jnp.sum(due_prep, dtype=i32)
+        + jnp.sum(f_mask & (sst == SUB_COMMIT_CMD), dtype=i32)
+        + jnp.sum(f_mask & (sst == SUB_ABORT_PEER) & ~s_.dyn.early_abort, dtype=i32)
+    )
+    fast_inc = jnp.sum(sub_upd & (v.new_sub_state == SUB_LOCAL_COMMIT), dtype=i32)
+
     # ---- in-window heartbeat probes (satellite of the typed fault model):
     # mirrors `_hb_event` with now = the slot's scheduled time — count and
     # re-arm a firing probe, disarm a non-firing one. Reachability cannot
@@ -310,6 +327,7 @@ def _apply_window(
         sub_state=sub_state.astype(jnp.int8),
         sub_time=sub_time,
         sub_arrive=sub_arrive,
+        sub_fast=sub_fast,
         sub_lel=sub_lel,
         rd_done=rd_done,
         tau_est=tau_est,
@@ -318,6 +336,8 @@ def _apply_window(
         hs=hs,
         lcs_sum=s_.lcs_sum + jnp.sum(lcs_span),
         lcs_cnt=s_.lcs_cnt + jnp.sum(lcs_have.astype(i32)),
+        wan_legs=s_.wan_legs + wan_inc,
+        fast_commits=s_.fast_commits + fast_inc,
     )
 
 

@@ -587,6 +587,18 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     )
 
     # ======================= scatter the event rows ========================
+    # WAN-leg charges for the pinned singleton routes (drainable events were
+    # charged inside the shared pass): a pinned fan-in (round advance,
+    # chiller stage-2, txn-completing ack) is still a WAN receive, and a
+    # waiter-release finish charges by its PRE-state exactly like
+    # `_h_ds_finish` — COMMIT_CMD +1, LOCAL_COMMIT +0, ABORT_PEER only via
+    # the DM route (~early_abort). Timeouts, starts, faults, heartbeats
+    # charge nothing.
+    wan_x = (
+        w(is_fanin_x, 1, 0)
+        + w(is_finish_x & (sub0 == SUB_COMMIT_CMD), 1, 0)
+        + w(is_finish_x & (sub0 == SUB_ABORT_PEER) & ~s.dyn.early_abort, 1, 0)
+    )
     sx = sx._replace(
         sub_state=sx.sub_state.at[t].set(sub_row.astype(jnp.int8)),
         sub_time=sx.sub_time.at[t].set(sub_tm),
@@ -594,6 +606,7 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         rd_done=sx.rd_done.at[t].set(rd_done_row),
         lcs_sum=sx.lcs_sum + lcs_span_x,
         lcs_cnt=sx.lcs_cnt + lcs_gate_x.astype(i32),
+        wan_legs=sx.wan_legs + wan_x,
     )
 
     # ============== replica failover bookkeeping (start / finish) ==========

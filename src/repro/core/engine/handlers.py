@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core import hotspot as hs_mod
 from repro.core import scheduler as sched
 from repro.core.netmodel import INF_US, _hash_u32, ewma_update
-from repro.core.protocol import (
+from repro.core.protocols import (
     PREPARE_COORD,
     PREPARE_DECENTRAL,
     PREPARE_NONE,
@@ -73,6 +73,8 @@ from repro.core.engine.state import (
     _mw_link,
     _round_done_transition,
     _salt,
+    _tiga_arrival,
+    _tiga_fast,
     _u01,
 )
 
@@ -621,6 +623,7 @@ def _h_send_commits(cfg: SimConfig, bank, s: SimState, t, idx) -> SimState:
 
 def _h_op_arrive(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
     """OP_ENROUTE fires: the round's first statement reaches the DS."""
+    s = s._replace(wan_legs=s.wan_legs + 1)  # DM -> DS statement leg lands
     return _attempt_lock(cfg, s, t, k)
 
 
@@ -678,8 +681,16 @@ def _h_op_exec_done(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
         reply_t = rbase + _delay(s_, rtau, _salt(s_, 37))
         prep_t = s_.now + s_.dyn.lan_rtt_us + s_.dyn.log_flush_us
         local_t = s_.now + s_.dyn.log_flush_us
+        single = (
+            jnp.max(jnp.where(s_.op_state[t] != OP_NONE, s_.op_round[t], 0)) == 0
+        )
+        fast = _tiga_fast(s_.dyn, single, s_.inv[t], s_.sub_fast[t])
         new_state, new_time = _round_done_transition(
-            s_.dyn, is_final, centralized, reply_t, prep_t, local_t
+            s_.dyn, is_final, centralized, reply_t, prep_t, local_t, fast
+        )
+        s_ = s_._replace(
+            fast_commits=s_.fast_commits
+            + jnp.where(~aborting & (new_state == SUB_LOCAL_COMMIT), 1, 0)
         )
         return s_._replace(
             sub_state=s_.sub_state.at[t, d].set(
@@ -694,9 +705,15 @@ def _h_op_exec_done(cfg: SimConfig, bank, s: SimState, t, k) -> SimState:
 
 
 def _h_sub_dispatch(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
-    """SUB_SCHED fires: DM sends the current round's statements to DS d."""
+    """SUB_SCHED fires: DM sends the current round's statements to DS d.
+
+    Under TIGA the statements carry the synchronized-clock deadline
+    `now + tiga_slack_us`: an arrival that beats it (clock skew included)
+    buffers and executes at the deadline, and the `sub_fast` flag feeds the
+    round-done single-round commit check."""
     abase, atau = _mw_link(s, s.on_repl[t, d], d, s.now)
     arrival = abase + _delay(s, atau, _salt(s, 41))
+    first_t, fast = _tiga_arrival(s.dyn, s.clock_skew_us, s.now, arrival)
     row = s.op_state[t]
     mask = (
         (row == OP_PENDING)
@@ -713,11 +730,12 @@ def _h_sub_dispatch(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     s = s._replace(
         op_state=s.op_state.at[t].set(new_row),
         op_time=s.op_time.at[t, first].set(
-            jnp.where(has, arrival, s.op_time[t, first])
+            jnp.where(has, first_t, s.op_time[t, first])
         ),
         sub_state=s.sub_state.at[t, d].set(SUB_RUN),
         sub_time=s.sub_time.at[t, d].set(INF_US),
         sub_arrive=s.sub_arrive.at[t, d].set(arrival),
+        sub_fast=s.sub_fast.at[t, d].set(fast),
     )
     return s
 
@@ -748,6 +766,7 @@ def _h_dm_round_in(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     lanes under vmap, where every branch executes)."""
     is_reply = s.sub_state[t, d] == SUB_ROUND_REPLY
     s = _ewma_est(cfg, s, t, d)
+    s = s._replace(wan_legs=s.wan_legs + 1)  # DS -> DM reply/vote leg lands
     s = s._replace(
         sub_state=s.sub_state.at[t, d].set(
             jnp.where(is_reply, SUB_ROUND_AT_DM, SUB_VOTED).astype(jnp.int8)
@@ -761,6 +780,7 @@ def _h_dm_round_in(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
 def _h_ds_prep_cmd(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     """SUB_PREP_CMD fires at DS (coordinated 2PC prepare)."""
     return s._replace(
+        wan_legs=s.wan_legs + 1,  # DM -> DS prepare-command leg lands
         sub_state=s.sub_state.at[t, d].set(SUB_PREPARING),
         sub_time=s.sub_time.at[t, d].set(s.now + s.dyn.log_flush_us),
     )
@@ -787,6 +807,14 @@ def _h_ds_finish(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     the LCS gate and the reply salt/state constants."""
     st0 = s.sub_state[t, d]
     is_commit = (st0 == SUB_COMMIT_CMD) | (st0 == SUB_LOCAL_COMMIT)
+    # WAN legs landing here: DM->DS commit commands always rode the WAN,
+    # local commits were decided at the DS (no leg), abort commands only
+    # when routed via the DM (the early-abort route is geo-agent mesh)
+    s = s._replace(
+        wan_legs=s.wan_legs
+        + jnp.where(st0 == SUB_COMMIT_CMD, 1, 0)
+        + jnp.where((st0 == SUB_ABORT_PEER) & ~s.dyn.early_abort, 1, 0)
+    )
     s = _lcs_metric(cfg, s, t, d, gate=is_commit)
     s = _hs_complete_ds(cfg, s, t, d, is_commit)
     s = _release_and_grant(cfg, s, t, d)
@@ -808,6 +836,7 @@ def _h_dm_fin(cfg: SimConfig, bank, s: SimState, t, d) -> SimState:
     traced once, with the commit flag derived from the acked state)."""
     committed = s.sub_state[t, d] == SUB_ACK
     s = _ewma_est(cfg, s, t, d)
+    s = s._replace(wan_legs=s.wan_legs + 1)  # DS -> DM finish-ack leg lands
     s = s._replace(
         sub_state=s.sub_state.at[t, d].set(
             jnp.where(committed, SUB_DONE, SUB_ABORTED).astype(jnp.int8)

@@ -24,6 +24,7 @@ from repro.core.engine.state import (
     SimConfig,
     SimState,
     _exec_us,
+    _lock_wait_deadline,
 )
 
 
@@ -51,7 +52,7 @@ def _attempt_lock(cfg: SimConfig, s: SimState, t, k) -> SimState:
             jnp.where(ok, OP_EXEC, OP_WAIT).astype(jnp.int8)
         ),
         op_time=s.op_time.at[t, k].set(
-            jnp.where(ok, exec_t, s.now + s.dyn.lock_timeout_us)
+            jnp.where(ok, exec_t, _lock_wait_deadline(s.dyn, s.now))
         ),
         op_enq=s.op_enq.at[t, k].set(s.now),
         first_lock=s.first_lock.at[t, d].min(jnp.where(ok, s.now, INF_US)),

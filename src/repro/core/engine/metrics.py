@@ -82,6 +82,15 @@ def drain_stats(state: SimState, horizon_us: int | None = None) -> dict:
     primary was unreachable, `stale_reads` the read-only statements those
     served, and `max_staleness_us` the worst staleness window any such read
     observed (outage age at dispatch + configured replication lag).
+
+    Protocol-zoo fields: `wan_rounds` is the total middleware<->DS WAN
+    round-trip count (one-way legs / 2, receive-side charged from t=0 —
+    statement delivery, round replies, 2PC prepare/vote, commit/abort
+    command + ack; local commits and early-abort mesh notifications charge
+    nothing), the protocol-efficiency metric behind the fig18 head-to-head
+    sweeps. `fast_commits` counts round completions that landed directly in
+    a DS-local commit (YugabyteDB-style centralized fast path, FASTC
+    co-coordinator commit, TIGA in-slack single-round commit).
     """
     events = int(np.sum(np.asarray(state.iters)))
     drained = int(np.sum(np.asarray(state.drained)))
@@ -119,6 +128,8 @@ def drain_stats(state: SimState, horizon_us: int | None = None) -> dict:
         "stale_reads": int(np.sum(np.asarray(state.stale_reads))),
         "failovers": int(np.sum(np.asarray(state.failovers))),
         "max_staleness_us": int(np.max(np.asarray(state.max_stale_us))),
+        "wan_rounds": int(np.sum(np.asarray(state.wan_legs))) / 2.0,
+        "fast_commits": int(np.sum(np.asarray(state.fast_commits))),
     }
 
 

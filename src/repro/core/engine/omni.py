@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.core import hotspot as hs_mod
 from repro.core import scheduler as sched
 from repro.core.netmodel import INF_US, _hash_u32, ewma_update
-from repro.core.protocol import (
+from repro.core.protocols import (
     PREPARE_COORD,
     PREPARE_DECENTRAL,
     PREPARE_NONE,
@@ -65,10 +65,13 @@ from repro.core.engine.state import (
     _ds_send,
     _exec_us,
     _hist_bin,
+    _lock_wait_deadline,
     _measuring,
     _mw_link,
     _round_done_transition,
     _salt,
+    _tiga_arrival,
+    _tiga_fast,
     _times_flat,
     _u01,
 )
@@ -300,7 +303,7 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         w(do_lock, w(lock_ok, OP_EXEC, OP_WAIT), s.op_state[t, k_lock].astype(i32)).astype(jnp.int8)
     )
     op_time = s.op_time.at[t, k_lock].set(
-        w(do_lock, w(lock_ok, exec_t, s.now + s.dyn.lock_timeout_us), s.op_time[t, k_lock])
+        w(do_lock, w(lock_ok, exec_t, _lock_wait_deadline(s.dyn, s.now)), s.op_time[t, k_lock])
     )
     op_enq = s.op_enq.at[t, k_lock].set(
         w(do_lock, s.now, s.op_enq[t, k_lock])
@@ -329,8 +332,10 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     reply_t_rd = rbase_rd + _delay(s, rtau_rd, _salt(s, 37))
     prep_t_rd = s.now + s.dyn.lan_rtt_us + s.dyn.log_flush_us
     local_t_rd = s.now + s.dyn.log_flush_us
+    single_rd = jnp.max(w(row_nn, s.op_round[t], 0)) == 0
+    fast_rd = _tiga_fast(s.dyn, single_rd, inv_t, s.sub_fast[t])
     rd_state, rd_time = _round_done_transition(
-        s.dyn, rd_is_final, centralized, reply_t_rd, prep_t_rd, local_t_rd
+        s.dyn, rd_is_final, centralized, reply_t_rd, prep_t_rd, local_t_rd, fast_rd
     )
 
     # ===================== subtxn row (ordered masked writes) ==============
@@ -342,9 +347,13 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     g_rd = rd & ~rd_aborting
     sub_row = w(g_rd & at_do, rd_state, sub_row)
     sub_tm = w(g_rd & at_do, rd_time, sub_tm)
+    s = s._replace(
+        fast_commits=s.fast_commits + w(g_rd & (rd_state == SUB_LOCAL_COMMIT), 1, 0)
+    )
     # dispatch command reaches DS d_ev
     abase_ev, atau_ev = _mw_link(s, s.on_repl[t, d_ev], d_ev, s.now)
     arrival = abase_ev + _delay(s, atau_ev, _salt(s, 41))
+    first_t_ev, fast_ev = _tiga_arrival(s.dyn, s.clock_skew_us, s.now, arrival)
     disp_mask = (
         (s.op_state[t].astype(i32) == OP_PENDING)
         & (s.op_ds[t].astype(i32) == d_ev)
@@ -360,7 +369,7 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         ).astype(jnp.int8)
     )
     op_time = s.op_time.at[t, disp_first].set(
-        w(is_sched & disp_has, arrival, s.op_time[t, disp_first])
+        w(is_sched & disp_has, first_t_ev, s.op_time[t, disp_first])
     )
     s = s._replace(op_state=op_state, op_time=op_time)
     sub_row = w(is_sched & at_ev, SUB_RUN, sub_row)
@@ -368,7 +377,10 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     sub_arrive = s.sub_arrive.at[t, d_ev].set(
         w(is_sched, arrival, s.sub_arrive[t, d_ev])
     )
-    s = s._replace(sub_arrive=sub_arrive)
+    sub_fast = s.sub_fast.at[t, d_ev].set(
+        w(is_sched, fast_ev, s.sub_fast[t, d_ev])
+    )
+    s = s._replace(sub_arrive=sub_arrive, sub_fast=sub_fast)
     # DS-side 2PC legs
     sub_row = w(is_prep_cmd & at_ev, SUB_PREPARING, sub_row)
     sub_tm = w(is_prep_cmd & at_ev, s.now + s.dyn.log_flush_us, sub_tm)
@@ -681,6 +693,18 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
     )
 
     # ======================= scatter the event rows ========================
+    # WAN-leg charging (receive-side; mirrors the sequential handlers): op
+    # arrival, DM round fan-in, prepare-cmd arrival, finish by PRE-state
+    # (COMMIT_CMD yes, LOCAL_COMMIT no, ABORT_PEER only via the DM route),
+    # and commit/abort ack fan-in each count one one-way WAN leg.
+    wan_inc = (
+        w(is_arrive, 1, 0)
+        + w(is_round_in, 1, 0)
+        + w(is_prep_cmd, 1, 0)
+        + w(is_fin_ack, 1, 0)
+        + w(is_sub & (sub0 == SUB_COMMIT_CMD), 1, 0)
+        + w(is_abort_fin & ~s.dyn.early_abort, 1, 0)
+    )
     s = s._replace(
         sub_state=s.sub_state.at[t].set(sub_row.astype(jnp.int8)),
         sub_time=s.sub_time.at[t].set(sub_tm),
@@ -688,6 +712,7 @@ def _omni_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         rd_done=s.rd_done.at[t].set(rd_done_row),
         lcs_sum=s.lcs_sum + lcs_span,
         lcs_cnt=s.lcs_cnt + lcs_gate.astype(i32),
+        wan_legs=s.wan_legs + wan_inc,
     )
 
     # ============== replica failover bookkeeping (start / finish) ==========

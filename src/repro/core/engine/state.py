@@ -25,7 +25,12 @@ from repro.core.netmodel import (
     derive_tau_ds_us,
     make_net_params,
 )
-from repro.core.protocol import PRESETS, PREPARE_DECENTRAL, ProtocolConfig
+from repro.core.protocols import (
+    PRESETS,
+    PREPARE_DECENTRAL,
+    STAGGER_NONE,
+    ProtocolConfig,
+)
 
 # ---- op states -------------------------------------------------------------
 OP_NONE, OP_PENDING, OP_ENROUTE, OP_QUEUED, OP_WAIT, OP_EXEC, OP_HOLD, OP_DONE = range(8)
@@ -155,6 +160,9 @@ class DynProto(NamedTuple):
     chiller_two_stage: jax.Array  # bool
     middleware_cc: jax.Array  # bool (ScalarDB-style per-op WAN RTT)
     async_local_commit: jax.Array  # bool (YUGA)
+    co_commit: jax.Array  # bool (FASTC: co-coordinator decides commit locally)
+    opt_abort: jax.Array  # bool (OPTA: abort on lock conflict instead of wait)
+    tiga_slack_us: jax.Array  # i32 (TIGA deadline slack; 0 = disabled)
     max_blocked: jax.Array  # i32
     admission_backoff_us: jax.Array  # i32
     block_prob_cap: jax.Array  # f32
@@ -183,6 +191,34 @@ def dyn_from_proto(p: ProtocolConfig) -> DynProto:
             f"preset {p.name!r}: detect_delay_us must be >= 0 "
             f"(got {p.detect_delay_us})"
         )
+    if p.co_commit and (p.prepare != PREPARE_DECENTRAL or p.chiller_two_stage):
+        # the co-coordinator fast path replaces the decentralized prepare's
+        # final-round transition; it has no meaning under DM-coordinated /
+        # no-prepare commit, and chiller stage-2 subs would commit before the
+        # cross-region stage even dispatched
+        raise ValueError(
+            f"preset {p.name!r}: co_commit requires PREPARE_DECENTRAL "
+            f"without chiller_two_stage"
+        )
+    if p.tiga_slack_us < 0:
+        raise ValueError(
+            f"preset {p.name!r}: tiga_slack_us must be >= 0 (got {p.tiga_slack_us})"
+        )
+    if p.tiga_slack_us > 0 and (
+        p.prepare != PREPARE_DECENTRAL
+        or p.stagger != STAGGER_NONE
+        or p.chiller_two_stage
+        or p.co_commit
+    ):
+        # the deadline fast path decides per data source from the per-sub
+        # arrival flags; staggered/chiller dispatch would let one sub's round
+        # finish before a sibling's dispatch even fired, making the "all
+        # statements arrived in the future" check racy, and co_commit would
+        # double-claim the same final-round transition
+        raise ValueError(
+            f"preset {p.name!r}: tiga_slack_us > 0 requires PREPARE_DECENTRAL "
+            f"+ STAGGER_NONE without chiller_two_stage/co_commit"
+        )
     i32 = jnp.int32
     return DynProto(
         prepare=i32(p.prepare),
@@ -192,6 +228,9 @@ def dyn_from_proto(p: ProtocolConfig) -> DynProto:
         chiller_two_stage=jnp.asarray(p.chiller_two_stage),
         middleware_cc=jnp.asarray(p.middleware_cc),
         async_local_commit=jnp.asarray(p.async_local_commit),
+        co_commit=jnp.asarray(p.co_commit),
+        opt_abort=jnp.asarray(p.opt_abort),
+        tiga_slack_us=i32(p.tiga_slack_us),
         max_blocked=i32(p.max_blocked),
         admission_backoff_us=i32(p.admission_backoff_us),
         block_prob_cap=jnp.float32(p.block_prob_cap),
@@ -233,6 +272,10 @@ class WorldSpec(NamedTuple):
     # direct WorldSpec(...) constructions from before the replica layer valid.
     replica_tau: jax.Array = None  # [D] i32 (None = no replicas anywhere)
     repl_lag_us: jax.Array = 0  # scalar i32
+    # synchronized-clock error bound (µs) between the middleware and the data
+    # sources; only TIGA's deadline check consults it. Default keeps direct
+    # WorldSpec(...) constructions from before the protocol zoo valid.
+    clock_skew_us: jax.Array = 0  # scalar i32
 
 
 FAULT_COLS = 6
@@ -295,12 +338,15 @@ def make_world(
     max_faults: int | None = None,
     replica_tau=None,
     repl_lag_us: int = 0,
+    clock_skew_us: int = 0,
 ) -> WorldSpec:
     """Build a WorldSpec from a preset name / ProtocolConfig + RTT vector.
 
     `replica_tau` is an optional [D] middleware<->replica RTT vector (µs);
     entries of INF_US (and a None vector) mean "no replica at this DS".
     `repl_lag_us` is the replication lag charged to stale reads on failover.
+    `clock_skew_us` is the synchronized-clock error bound TIGA's deadline
+    check charges against arrivals.
     """
     if isinstance(proto, str):
         proto = PRESETS[proto]
@@ -327,6 +373,7 @@ def make_world(
         faults=pad_faults(faults, max_faults),
         replica_tau=jnp.asarray(replica_tau, jnp.int32),
         repl_lag_us=jnp.int32(repl_lag_us),
+        clock_skew_us=jnp.int32(clock_skew_us),
     )
 
 
@@ -408,6 +455,9 @@ class SimState(NamedTuple):
     sub_lel: jax.Array  # [T,D] i32
     first_lock: jax.Array  # [T,D] i32
     rd_done: jax.Array  # [T,D] bool
+    # TIGA: this round's dispatch arrived before its synchronized-clock
+    # deadline at d (arrival + clock_skew_us <= dispatch + tiga_slack_us)
+    sub_fast: jax.Array  # [T,D] bool
     # fault injection (F = cfg.max_faults; all-INF when fault-free)
     fault_ds: jax.Array  # [F] i32 — endpoint_a of row f (crash: the ds; MW = -1)
     fault_recover: jax.Array  # [F] i32 — end timestamp of row f
@@ -449,6 +499,7 @@ class SimState(NamedTuple):
     jitter_milli: jax.Array  # i32
     exec_scale_milli: jax.Array  # [D] i32 heterogeneous engine profile
     lel_scale_milli: jax.Array  # i32 (§IV-C forecast scaling)
+    clock_skew_us: jax.Array  # i32 — synchronized-clock error bound (TIGA)
     # metrics
     commits: jax.Array
     aborts: jax.Array
@@ -461,6 +512,17 @@ class SimState(NamedTuple):
     hist_dist: jax.Array
     lcs_sum: jax.Array  # i32, milliseconds
     lcs_cnt: jax.Array
+    # WAN accounting: one-way middleware<->data-source message legs, charged
+    # when the receiving event fires (dispatch arrival, round reply, prepare
+    # command, vote, commit command, abort command, finish ack). Geo-agent
+    # mesh messages, heartbeats and ScalarDB's per-op middleware RTTs are
+    # excluded — the counter measures protocol commit-path rounds
+    # (`drain_stats` reports wan_legs / 2 as `wan_rounds`).
+    wan_legs: jax.Array  # i32
+    # round-done transitions that committed at the data source without a DM
+    # round: YUGA's async local commit, FASTC's co-coordinator commit, and
+    # TIGA's deadline fast path (the single-round success rate)
+    fast_commits: jax.Array  # i32
     noops: jax.Array  # i32 — must stay 0 (state-machine invariant)
     drained: jax.Array  # i32 — events applied via the windowed masked pass
     windows: jax.Array  # i32 — masked window applications (mean len = drained/windows)
@@ -484,6 +546,7 @@ def init_state(
     faults=None,
     replica_tau=None,
     repl_lag_us=0,
+    clock_skew_us=0,
 ) -> SimState:
     T, K, D, N = (cfg.terminals, cfg.max_ops, cfg.num_ds, cfg.bank_txns)
     F = cfg.max_faults
@@ -537,6 +600,7 @@ def init_state(
         sub_lel=jnp.zeros((T, D), i32),
         first_lock=jnp.full((T, D), INF_US, i32),
         rd_done=jnp.zeros((T, D), bool),
+        sub_fast=jnp.zeros((T, D), bool),
         fault_ds=faults[:, 2],
         fault_recover=faults[:, 4],
         fault_time=f_first,
@@ -569,6 +633,7 @@ def init_state(
         jitter_milli=jnp.asarray(jitter_milli, i32),
         exec_scale_milli=jnp.asarray(exec_scale_milli, i32),
         lel_scale_milli=jnp.asarray(lel_scale_milli, i32),
+        clock_skew_us=jnp.asarray(clock_skew_us, i32),
         commits=i32(0),
         aborts=i32(0),
         commits_dist=i32(0),
@@ -580,6 +645,8 @@ def init_state(
         hist_dist=jnp.zeros((HIST_BINS,), i32),
         lcs_sum=i32(0),
         lcs_cnt=i32(0),
+        wan_legs=i32(0),
+        fast_commits=i32(0),
         noops=i32(0),
         drained=i32(0),
         windows=i32(0),
@@ -607,6 +674,7 @@ def init_state_world(cfg: SimConfig, world: WorldSpec) -> SimState:
         faults=world.faults,
         replica_tau=world.replica_tau,
         repl_lag_us=world.repl_lag_us,
+        clock_skew_us=world.clock_skew_us,
     )
 
 
@@ -681,22 +749,68 @@ def _unreachable(s: SimState) -> jax.Array:
 
 
 def _round_done_transition(
-    dyn: DynProto, is_final, centralized, reply_t, prep_t, local_t
+    dyn: DynProto, is_final, centralized, reply_t, prep_t, local_t, fast=False
 ):
     """Subtxn state/time after its round's last statement finishes.
 
     Elementwise over any broadcastable shapes — the sequential round_done
     (scalars) and the drain step ([T,D]) share this selection, so the
     drained path cannot drift from the single-event semantics.
+
+    `fast` is TIGA's per-event deadline flag (`_tiga_fast`). FASTC's
+    `co_commit` knob takes the same exit unconditionally: the geo-agent
+    co-coordinator logs through the LAN round (`prep_t`) and commits locally
+    (SUB_LOCAL_COMMIT) instead of reporting for a DM commit-log round.
     """
     dec = dyn.prepare == PREPARE_DECENTRAL
     go_local = dec & dyn.async_local_commit & is_final & centralized
-    go_prep = dec & is_final & ~centralized
+    go_fast = dec & is_final & ~centralized & (dyn.co_commit | fast)
+    go_prep = dec & is_final & ~centralized & ~go_fast
     new_state = jnp.where(
-        go_local, SUB_LOCAL_COMMIT, jnp.where(go_prep, SUB_PREPARING, SUB_ROUND_REPLY)
+        go_local | go_fast,
+        SUB_LOCAL_COMMIT,
+        jnp.where(go_prep, SUB_PREPARING, SUB_ROUND_REPLY),
     )
-    new_time = jnp.where(go_local, local_t, jnp.where(go_prep, prep_t, reply_t))
+    new_time = jnp.where(
+        go_local, local_t, jnp.where(go_fast | go_prep, prep_t, reply_t)
+    )
     return new_state, new_time
+
+
+def _lock_wait_deadline(dyn: DynProto, now) -> jax.Array:
+    """When a statement that failed its lock acquisition gives up waiting.
+
+    The ordinary 2PL path parks it in the wait queue for `lock_timeout_us`;
+    under OPTA (`opt_abort`) the conflict aborts immediately — the OP_WAIT
+    event is scheduled at `now` itself and the existing timeout/peer-abort
+    machinery fires it as the very next event of that operation.
+    """
+    return now + jnp.where(dyn.opt_abort, 0, dyn.lock_timeout_us)
+
+
+def _tiga_arrival(dyn: DynProto, clock_skew_us, now, arrival):
+    """(first-statement time, deadline flag) for a sub dispatch firing at `now`.
+
+    TIGA stamps the dispatch with the synchronized-clock deadline
+    `now + tiga_slack_us`; a statement that arrives "in the future" under the
+    clock-skew bound buffers and executes exactly at the deadline, otherwise
+    (or when TIGA is off) it executes at its network arrival as usual.
+    """
+    deadline = now + dyn.tiga_slack_us
+    fast = (dyn.tiga_slack_us > 0) & (arrival + clock_skew_us <= deadline)
+    return jnp.where(fast, deadline, arrival), fast
+
+
+def _tiga_fast(dyn: DynProto, single_round, inv_row, fast_row):
+    """TIGA's round-done fast flag: this txn runs a single statement round and
+    every invited sub's dispatch beat its deadline (`sub_fast`), so each
+    participant may commit locally in one WAN round. Reduces the trailing [D]
+    axis; with STAGGER_NONE every round-0 dispatch shares one timestamp and
+    sub slots precede op slots at equal times, so all `sub_fast` flags are
+    written before any participant's round-done consults them.
+    """
+    all_fast = jnp.all(~inv_row | fast_row, axis=-1)
+    return (dyn.tiga_slack_us > 0) & single_round & all_fast
 
 
 def _u01(salt: jax.Array) -> jax.Array:

@@ -52,7 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import scheduler as sched
 from repro.core.netmodel import INF_US
-from repro.core.protocol import (
+from repro.core.protocols import (
     PREPARE_COORD,
     PREPARE_DECENTRAL,
     PREPARE_NONE,
@@ -90,8 +90,11 @@ from repro.core.engine.state import (
     SimState,
     _delay_salted,
     _exec_us,
+    _lock_wait_deadline,
     _mw_send,
     _round_done_transition,
+    _tiga_arrival,
+    _tiga_fast,
     _times_flat,
 )
 
@@ -173,6 +176,8 @@ class _PlanVals(NamedTuple):
     aborting_td: jax.Array
     # DM dispatch + DS-side 2PC legs
     arrival_td: jax.Array
+    eff_arrival_td: jax.Array  # [T,D] first-statement fire time (TIGA deadline)
+    fast_disp_td: jax.Array  # [T,D] TIGA in-slack flag at dispatch
     has_c: jax.Array
     first_c: jax.Array
     prep_time: jax.Array
@@ -375,7 +380,7 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     ok_chain = jnp.any(hit_op & ok_q[W:, None], axis=0).reshape(T, K)
 
     exec_t = evt_op + _exec_us(cfg, s, d_of)  # [T,K] per-event time basis
-    to_t = evt_op + s.dyn.lock_timeout_us
+    to_t = _lock_wait_deadline(s.dyn, evt_op)
     arr_state = jnp.where(ok, OP_EXEC, OP_WAIT)
     arr_time = jnp.where(ok, exec_t, to_t)
     chain_state = jnp.where(ok_chain, OP_EXEC, OP_WAIT)  # at source slots
@@ -398,14 +403,28 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     aborting_td = sst == SUB_ABORT_PEER
     prep_round_t = time_rd + s.dyn.lan_rtt_us + s.dyn.log_flush_us
     local_round_t = time_rd + s.dyn.log_flush_us
+    # TIGA fast-path eligibility is per-txn and window-stable: op_round /
+    # inv / sub_fast can only change under pinned events (txn start, round
+    # advance) or same-txn dispatches, which the rank order keeps ahead of
+    # any same-txn round completion (all round-0 dispatches share one
+    # timestamp under the STAGGER_NONE gate TIGA requires).
+    single_t = jnp.max(jnp.where(opn, s.op_round.astype(i32), 0), axis=1) == 0
+    fast_t = _tiga_fast(s.dyn, single_t, inv, s.sub_fast)
     new_sub_state, new_sub_time = _round_done_transition(
-        s.dyn, is_final_td, centr_t[:, None], reply_t, prep_round_t, local_round_t
+        s.dyn, is_final_td, centr_t[:, None], reply_t, prep_round_t, local_round_t,
+        fast_t[:, None],
     )
 
     # ---- sub dispatch (DM -> DS statements) -------------------------------
     arr_salt = iters_sub * _SALT_MUL + jnp.int32(41)
     abase, atau = link_td(evt_sub)
     arrival_td = abase + _delay_salted(s.jitter_milli, atau, arr_salt)
+    # TIGA execute-at-arrival: the first statement fires at the synchronized
+    # deadline when the (skew-shifted) arrival lands inside the slack window;
+    # `sub_arrive` keeps the true arrival for the LEL accounting.
+    eff_arrival_td, fast_disp_td = _tiga_arrival(
+        s.dyn, s.clock_skew_us, evt_sub, arrival_td
+    )
     sched_at_op = jnp.take_along_axis(cat_sched, d_of, axis=1)  # [T,K]
     c_ops = sched_at_op & (st == OP_PENDING) & same_round
     cand3 = c_ops[:, :, None] & oh_d
@@ -536,7 +555,7 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
         | (dm_cat & (ready_chiller_j | advance_j | done_ack_j | done_abk_j))
     )
     n_sub = jnp.full((T, D), INF_US, i32)
-    n_sub = jnp.where(cat_sched, jnp.where(has_c, arrival_td, INF_US), n_sub)
+    n_sub = jnp.where(cat_sched, jnp.where(has_c, eff_arrival_td, INF_US), n_sub)
     n_sub = jnp.where(cat_prep, prep_time, n_sub)
     n_sub = jnp.where(cat_preparing, vote_t, n_sub)
     n_sub = jnp.where(f_cat, ack_t, n_sub)
@@ -783,6 +802,8 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
         new_sub_time=new_sub_time,
         aborting_td=aborting_td,
         arrival_td=arrival_td,
+        eff_arrival_td=eff_arrival_td,
+        fast_disp_td=fast_disp_td,
         has_c=has_c,
         first_c=first_c,
         prep_time=prep_time,

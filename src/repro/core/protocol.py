@@ -1,121 +1,33 @@
-"""Transaction-commit protocol presets (the paper's systems under test, §VII-A-1).
+"""Legacy re-export shim — the presets live in `repro.core.protocols`.
 
-The engine is a single state machine parameterized by the knobs below; each
-baseline in the paper's evaluation is a preset:
-
-  SSP          — ShardingSphere: XA/2PC coordinated by the DM. Distributed commit
-                 costs 2 WAN rounds (prepare + commit); centralized txns use
-                 one-phase commit (1 round).
-  SSP_LOCAL    — ShardingSphere 'local' mode: decentralized commit without
-                 atomicity guarantees (no prepare phase at all).
-  SCALARDB     — middleware-level concurrency control: locks are managed at the
-                 DM, every operation is an individual WAN round trip, ops execute
-                 sequentially across the whole transaction, 2PC on top.
-  QURO         — SSP + op reordering (writes as late as possible). The reordering
-                 itself is applied to the workload bank (workloads.quro_reorder).
-  CHILLER      — prepare merged into execution (like O1) + two-stage region
-                 scheduling: intra-region (lowest-RTT) subtxns first, cross-region
-                 after they complete (per the paper's description §I/§VII-A-1).
-  YUGA         — distributed-database-style baseline (Fig 13): merged prepare +
-                 asynchronous apply for centralized (single-shard) transactions
-                 (locks released right after local commit, no commit round).
-  GEOTP_O1     — decentralized prepare + early abort only.
-  GEOTP_O12    — + latency-aware scheduling, Eq.(3).
-  GEOTP        — + high-contention heuristics (LEL forecast Eq.(8), late txn
-                 scheduling Eq.(9)) == the full system (O1~O3).
+This module predates the protocols package; every name it ever exported is
+re-exported here verbatim so existing imports (`from repro.core.protocol
+import PRESETS, ProtocolConfig, ...`) keep working. New code should import
+from `repro.core.protocols` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-
-# stagger modes
-STAGGER_NONE = 0
-STAGGER_NET = 1  # Eq.(3)
-STAGGER_NET_LEL = 2  # Eq.(8)
-
-# prepare modes
-PREPARE_COORD = 0  # DM-coordinated WAN prepare round (2PC)
-PREPARE_DECENTRAL = 1  # geo-agent triggers prepare after last statement (O1)
-PREPARE_NONE = 2  # no prepare (no atomicity: SSP-local)
-
-
-@dataclasses.dataclass(frozen=True)
-class ProtocolConfig:
-    name: str = "geotp"
-    prepare: int = PREPARE_DECENTRAL
-    stagger: int = STAGGER_NET_LEL
-    admission: bool = True  # O3 late transaction scheduling (Eq.9)
-    early_abort: bool = True  # geo-agent peer-to-peer abort (O1)
-    chiller_two_stage: bool = False  # intra-region first, then cross-region
-    middleware_cc: bool = False  # ScalarDB-style: locks at DM, per-op WAN RTT
-    async_local_commit: bool = False  # YUGA: single-shard txns apply async
-    lel_scale_milli: int = 1000  # §IV-C forecast scale-down knob
-    max_blocked: int = 5  # blocks before O3 aborts the txn
-    admission_backoff_us: int = 20_000  # long enough for a_cnt to drain
-    block_prob_cap: float = 1.0  # Eq.(9) unclipped; max_blocked bounds blocking
-    # engine timing knobs (shared by every preset; per paper defaults)
-    lock_timeout_us: int = 5_000_000  # 5 s lock-wait timeout (§VII-A-3)
-    exec_us: int = 100  # local execution time per op
-    log_flush_us: int = 1000  # WAL/commit-log fsync
-    lan_rtt_us: int = 200  # geo-agent <-> data source round trip
-    retry_backoff_us: int = 5000
-    # benchbase semantics: an aborted transaction is recorded and the terminal
-    # moves on to the next one (retries only when explicitly configured)
-    max_retries: int = 0
-    # heartbeat probe period while a data source is unreachable (fault
-    # injection; probes are deterministic reachability checks — see
-    # docs/architecture.md)
-    hb_interval_us: int = 500_000
-    # failure-detection delay: a crash/partition only takes effect (and the
-    # cascade/deferral fires) this long after the scheduled fault start, so
-    # the fault event no longer doubles as the detection point
-    detect_delay_us: int = 0
-
-
-SSP = ProtocolConfig(
-    name="ssp", prepare=PREPARE_COORD, stagger=STAGGER_NONE, admission=False, early_abort=False
+from repro.core.protocols import (  # noqa: F401
+    CHILLER,
+    FASTC,
+    GEOTP,
+    GEOTP_O1,
+    GEOTP_O12,
+    OPTA,
+    PREPARE_COORD,
+    PREPARE_DECENTRAL,
+    PREPARE_NONE,
+    PRESETS,
+    QURO,
+    SCALARDB,
+    SSP,
+    SSP_LOCAL,
+    STAGGER_NET,
+    STAGGER_NET_LEL,
+    STAGGER_NONE,
+    TIGA,
+    YUGA,
+    ProtocolConfig,
+    register_preset,
 )
-SSP_LOCAL = ProtocolConfig(
-    name="ssp-local", prepare=PREPARE_NONE, stagger=STAGGER_NONE, admission=False, early_abort=False
-)
-SCALARDB = ProtocolConfig(
-    name="scalardb",
-    prepare=PREPARE_COORD,
-    stagger=STAGGER_NONE,
-    admission=False,
-    early_abort=False,
-    middleware_cc=True,
-)
-QURO = ProtocolConfig(
-    name="quro", prepare=PREPARE_COORD, stagger=STAGGER_NONE, admission=False, early_abort=False
-)
-CHILLER = ProtocolConfig(
-    name="chiller",
-    prepare=PREPARE_DECENTRAL,
-    stagger=STAGGER_NONE,
-    admission=False,
-    early_abort=False,
-    chiller_two_stage=True,
-)
-YUGA = ProtocolConfig(
-    name="yugabyte-like",
-    prepare=PREPARE_DECENTRAL,
-    stagger=STAGGER_NONE,
-    admission=False,
-    early_abort=False,
-    async_local_commit=True,
-)
-GEOTP_O1 = ProtocolConfig(
-    name="geotp-o1", prepare=PREPARE_DECENTRAL, stagger=STAGGER_NONE, admission=False
-)
-GEOTP_O12 = ProtocolConfig(
-    name="geotp-o1o2", prepare=PREPARE_DECENTRAL, stagger=STAGGER_NET, admission=False
-)
-GEOTP = ProtocolConfig(name="geotp", prepare=PREPARE_DECENTRAL, stagger=STAGGER_NET_LEL)
-
-PRESETS = {
-    p.name: p
-    for p in (SSP, SSP_LOCAL, SCALARDB, QURO, CHILLER, YUGA, GEOTP_O1, GEOTP_O12, GEOTP)
-}

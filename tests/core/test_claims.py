@@ -1,0 +1,71 @@
+"""Unit tests for benchmarks.claims — no sweeps, no engine, no JAX."""
+
+import json
+
+import pytest
+
+from benchmarks.claims import (
+    ClaimSet,
+    non_increasing,
+    ratio,
+    rows_by,
+    values_over,
+)
+
+ROWS = [
+    {"preset": "ssp", "schedule": "crashes", "eps": 100.0},
+    {"preset": "geotp", "schedule": "crashes", "eps": 150.0},
+    {"preset": "ssp", "schedule": "fault-free", "eps": 400.0},
+    {"preset": "tiga", "clock_skew_us": 200_000, "fast_rate": 0.1},
+    {"preset": "tiga", "clock_skew_us": 0, "fast_rate": 0.9},
+    {"preset": "tiga", "clock_skew_us": 100_000, "fast_rate": 0.5},
+]
+
+
+class TestClaimSet:
+    def test_load_missing_figure_returns_none(self, tmp_path):
+        assert ClaimSet(tmp_path).load("fig99") is None
+
+    def test_load_reads_json_payload(self, tmp_path):
+        (tmp_path / "fig18.json").write_text(json.dumps({"rows": ROWS[:2]}))
+        cs = ClaimSet(tmp_path)
+        assert cs.load("fig18") == {"rows": ROWS[:2]}
+
+    def test_add_coerces_ok_and_counts(self, tmp_path):
+        cs = ClaimSet(tmp_path)
+        cs.add("a", 1.5, "truthy float")
+        cs.add("b", None, "falsy")
+        cs.add("c", True, "plain bool")
+        assert cs.checks == [
+            ("a", True, "truthy float"),
+            ("b", False, "falsy"),
+            ("c", True, "plain bool"),
+        ]
+        assert cs.n_ok == 2
+
+
+class TestRowHelpers:
+    def test_rows_by_filters_then_keys_by_preset(self):
+        by = rows_by(ROWS, schedule="crashes")
+        assert set(by) == {"ssp", "geotp"}
+        assert by["geotp"]["eps"] == 150.0
+
+    def test_rows_by_missing_filter_key_excludes_row(self):
+        assert rows_by(ROWS, schedule="degrades") == {}
+
+    def test_values_over_sorts_by_axis(self):
+        series = values_over(
+            ROWS, "clock_skew_us", "fast_rate", preset="tiga"
+        )
+        assert series == [0.9, 0.5, 0.1]
+
+    def test_ratio_guards_zero_denominator(self):
+        assert ratio(8.0, 2.0) == 4.0
+        assert ratio(5.0, 0.0) == pytest.approx(5e9)
+
+    def test_non_increasing_tolerance(self):
+        assert non_increasing([0.9, 0.5, 0.1])
+        assert not non_increasing([0.9, 0.5, 0.6])
+        assert non_increasing([0.9, 0.5, 0.51], tol=0.02)
+        assert non_increasing([])
+        assert non_increasing([1.0])

@@ -19,7 +19,7 @@ def test_subsystems_import():
 
     assert __version__
     assert len(registry.names()) == 10
-    assert len(protocol.PRESETS) == 9
+    assert len(protocol.PRESETS) == 12  # 9 paper baselines + fastc/tiga/opta
 
 
 def test_all_archs_have_config_modules():
