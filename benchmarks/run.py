@@ -263,6 +263,9 @@ def smoke() -> int:
       the speedup-vs-seed escape hatch for slower hosts), or
     * the mean window length regresses below the stored baseline — the
       slot-accurate stoppers must not silently coarsen back, or
+    * the scheduled-stop share of window terminations rises above the stored
+      baseline — the two-pass chain admitter must not silently lose
+      coverage (its win is recorded, not asserted), or
     * the protocol-zoo head-to-head reports FASTC WAN rounds per finished
       txn at or above SSP's on any cell — the co-coordinator commit must
       actually remove the commit-broadcast round.
@@ -327,9 +330,12 @@ def smoke() -> int:
         f"vmap: {drain['vmap']['drain_hit_rate']:.1%})"
     )
     stops = sorted(drain["map"]["window_stops"].items(), key=lambda kv: -kv[1])
+    n_stops = max(sum(drain["map"]["window_stops"].values()), 1)
     print(
         "[smoke] window stops (map): "
         + ", ".join(f"{k}={c}" for k, c in stops)
+        + f"; chained {drain['map']['chained']}, scheduled share "
+        f"{drain['map']['window_stops'].get('scheduled', 0) / n_stops:.1%}"
         + f"; vmap plan fused: {drain['vmap']['plan_fused']}"
     )
     eps_batched = eps["map"]
@@ -466,6 +472,11 @@ def smoke() -> int:
     bench = common.load_bench()
     prior = bench.get("smoke", {}).get("events_per_sec_batched")
     prior_mwl = bench.get("smoke", {}).get("mean_window_len")
+    prior_share = bench.get("smoke", {}).get("scheduled_stop_share")
+    stops_map = drain["map"]["window_stops"]
+    sched_share = round(
+        stops_map.get("scheduled", 0) / max(sum(stops_map.values()), 1), 4
+    )
     entry = {
         "worlds": len(cells),
         "terminals": SMOKE_T,
@@ -480,6 +491,8 @@ def smoke() -> int:
         "drain_hit_rate_vmap": drain["vmap"]["drain_hit_rate"],
         "mean_window_len": drain["map"]["mean_window_len"],
         "window_stops": drain["map"]["window_stops"],
+        "chained": drain["map"]["chained"],
+        "scheduled_stop_share": sched_share,
         "plan_fused_vmap": drain["vmap"]["plan_fused"],
         "loop_iters_map": drain["map"]["loop_iters"],
         "loop_iters_vmap": drain["vmap"]["loop_iters"],
@@ -519,6 +532,8 @@ def smoke() -> int:
             entry["events_per_sec_batched"] = prior
         if prior_mwl is not None:
             entry["mean_window_len"] = prior_mwl
+        if prior_share is not None:
+            entry["scheduled_stop_share"] = prior_share
         common.record_smoke(entry)
         return 1
     if (
@@ -540,6 +555,8 @@ def smoke() -> int:
             entry["events_per_sec_batched"] = prior
         if prior_mwl is not None:
             entry["mean_window_len"] = prior_mwl
+        if prior_share is not None:
+            entry["scheduled_stop_share"] = prior_share
         common.record_smoke(entry)
         return 1
     if not 0.0 < d_fault["availability"] < 1.0 or any(
@@ -557,6 +574,8 @@ def smoke() -> int:
             entry["events_per_sec_batched"] = prior
         if prior_mwl is not None:
             entry["mean_window_len"] = prior_mwl
+        if prior_share is not None:
+            entry["scheduled_stop_share"] = prior_share
         common.record_smoke(entry)
         return 1
     if prior_mwl is not None and entry["mean_window_len"] < prior_mwl - 1e-9:
@@ -569,6 +588,23 @@ def smoke() -> int:
             f"— the drain stoppers got more conservative"
         )
         entry["mean_window_len"] = prior_mwl
+        if prior is not None:
+            entry["events_per_sec_batched"] = prior
+        if prior_share is not None:
+            entry["scheduled_stop_share"] = prior_share
+        common.record_smoke(entry)
+        return 1
+    if prior_share is not None and sched_share > prior_share + 1e-9:
+        # no-upward-ratchet on the scheduled-stop share: the grid is
+        # deterministic, so a larger share means the two-pass chain admitter
+        # stopped absorbing follow-ups it used to absorb. Keep the stored
+        # (lower) baseline and fail.
+        print(
+            f"[smoke] SCHEDULED-STOP REGRESSION: scheduled share "
+            f"{sched_share:.4f} > stored baseline {prior_share:.4f} — the "
+            f"chain admitter is fencing on follow-ups it used to admit"
+        )
+        entry["scheduled_stop_share"] = prior_share
         if prior is not None:
             entry["events_per_sec_batched"] = prior
         common.record_smoke(entry)
@@ -585,6 +621,8 @@ def smoke() -> int:
             # as the normal path — a red run recording a faster-host number
             # would make the next healthy run trip the 30% guard)
             entry["events_per_sec_batched"] = prior
+        if prior_share is not None:
+            entry["scheduled_stop_share"] = prior_share
         common.record_smoke(entry)
         return 1
     if prior is not None and eps_batched < SMOKE_REGRESSION_FRAC * prior:

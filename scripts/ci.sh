@@ -7,7 +7,10 @@
 #
 # Tier-1 deselects @pytest.mark.slow by default (pyproject addopts), keeping
 # the default `pytest -q` under ~3 minutes; CI runs the slow set explicitly
-# as its own step so coverage is not lost.
+# as its own step so coverage is not lost. When the [dev] install succeeds,
+# hypothesis must import and ZERO @given property tests may skip
+# (REQUIRE_HYPOTHESIS=1 + a skip-report grep) — the hypothesis-optional
+# shim's skip fallback is for offline checkouts only.
 #
 # Before the tests, a layering guard asserts the `repro.core.engine` package
 # imports side-effect-free and never depends on `benchmarks`/`repro.serving`
@@ -43,11 +46,29 @@ cd "$(dirname "$0")/.."
 
 # Pinned dev deps (pyproject [dev] extra). Offline containers already bake
 # the toolchain in; fall back to whatever is preinstalled.
+PIP_OK=0
 if ! python -c "import jax, pytest" 2>/dev/null; then
-    python -m pip install -e ".[dev]"
+    python -m pip install -e ".[dev]" && PIP_OK=1
+elif python -m pip install -q -e ".[dev]" 2>/dev/null; then
+    PIP_OK=1
 else
-    python -m pip install -q -e ".[dev]" 2>/dev/null \
-        || echo "[ci] pip unavailable/offline: using preinstalled deps"
+    echo "[ci] pip unavailable/offline: using preinstalled deps"
+fi
+
+# Silent-skip guard for the property-based differential suite: hypothesis is
+# pinned in the [dev] extra, so whenever the install above succeeded it MUST
+# import — otherwise every @given test (tests/core/test_differential.py's
+# generative half, the scheduler/workload property tests) would skip and
+# vanish from CI without a trace. REQUIRE_HYPOTHESIS=1 makes the
+# tests/core/_hypothesis_compat.py shim turn any residual skip into a hard
+# failure; offline containers that skipped the install keep the documented
+# skip fallback.
+if [ "$PIP_OK" = "1" ]; then
+    python -c "import hypothesis" || {
+        echo "[ci] hypothesis missing after [dev] install: @given tests would silently skip"
+        exit 1
+    }
+    export REQUIRE_HYPOTHESIS=1
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -105,8 +126,17 @@ print(f'[ci] protocol registry consistent: {len(PRESETS)} presets in tests + doc
 "
 
 if [ "${SKIP_TESTS:-0}" != "1" ]; then
-    # fast tier-1 (addopts already deselect the slow marks)
-    python -m pytest -x -q
+    # fast tier-1 (addopts already deselect the slow marks); -rs so the
+    # skip-report can be asserted below
+    python -m pytest -x -q -rs | tee /tmp/tier1.out
+    # zero-@given-skip assertion: when hypothesis is installed the property
+    # suites must actually RUN — a "hypothesis not installed" skip here
+    # means the compat shim masked them
+    if [ "${REQUIRE_HYPOTHESIS:-0}" = "1" ] \
+            && grep -q "hypothesis not installed" /tmp/tier1.out; then
+        echo "[ci] @given property tests skipped despite hypothesis being installed"
+        exit 1
+    fi
     # public-API doctests: the documented Grid/Simulator/RunResult snippets
     # (README + docs/ mirror them) must stay runnable
     python -m pytest --doctest-modules src/repro/core/engine/api.py -q

@@ -69,6 +69,9 @@ def _apply_window(
     xcommit=None,
     xrel=None,
     act_hb=None,
+    chained_inc=0,
+    act_fu=None,
+    act_pfu=None,
 ) -> SimState:
     """Materialize a planned window (the events under the act_* masks) in one
     masked pass, bitwise-identical to stepping them sequentially.
@@ -150,6 +153,28 @@ def _apply_window(
         c_ops_w, jnp.where(is_first_w, OP_ENROUTE, OP_QUEUED), op_state
     )
     op_time = jnp.where(is_first_w, arr_at_op, op_time)
+    # chained follow-up entities (two-pass plan): entity (r, g) completes
+    # comp_k (-> HOLD) at u_g and attempts att_k (-> EXEC/WAIT). Attempts
+    # land first: an entity's completion slot IS its parent's attempt target,
+    # and sequentially the completion overwrites the grant. Per-slot writers
+    # are unique by the plan's dup rule + the argmax-and-clear queue walk.
+    ids_tk = jnp.arange(T * K, dtype=i32)
+    if act_fu is not None:
+        att_m = act_fu & v.fu_att_has
+        att_idx = jnp.where(att_m, v.fu_term[:, None] * K + v.fu_att_k, T * K)
+        hit_att = att_idx.T.reshape(-1)[:, None] == ids_tk[None, :]
+        pick_att = lambda x: jnp.max(
+            jnp.where(hit_att, x.T.reshape(-1)[:, None], 0), axis=0
+        ).reshape(T, K)
+        att_any = jnp.any(hit_att, axis=0).reshape(T, K)
+        op_state = jnp.where(att_any, pick_att(v.fu_att_state), op_state)
+        op_time = jnp.where(att_any, pick_att(v.fu_att_time), op_time)
+        op_enq = jnp.where(att_any, pick_att(v.fu_u), op_enq)
+        comp_idx = jnp.where(act_fu, v.fu_term[:, None] * K + v.fu_comp_k, T * K)
+        hit_comp = comp_idx.T.reshape(-1)[:, None] == ids_tk[None, :]
+        comp_any = jnp.any(hit_comp, axis=0).reshape(T, K)
+        op_state = jnp.where(comp_any, OP_HOLD, op_state)
+        op_time = jnp.where(comp_any, INF_US, op_time)
     op_state = jnp.where(cancel, OP_DONE, op_state).astype(jnp.int8)
     op_time = jnp.where(cancel, INF_US, op_time)
 
@@ -158,6 +183,16 @@ def _apply_window(
         jnp.where(oh_d & got[:, :, None], evt_op[:, :, None], INF_US), axis=1
     )
     first_lock = jnp.minimum(s_.first_lock, got_t)
+    if act_fu is not None:
+        # granted follow-up attempts feed first-lock at their own u_g
+        ids_td = jnp.arange(T * D, dtype=i32)
+        hit_ftd = (v.fu_term * D + v.fu_d)[:, None] == ids_td[None, :]
+        att_got = att_m & v.fu_att_ok
+        got_r = jnp.min(jnp.where(att_got, v.fu_u, INF_US), axis=1)
+        got_t2 = jnp.min(
+            jnp.where(hit_ftd, got_r[:, None], INF_US), axis=0
+        ).reshape(T, D)
+        first_lock = jnp.minimum(first_lock, got_t2)
 
     # ---- sub arrays: self-updates first, then whole-row broadcasts --------
     sub_state = jnp.where(sub_upd, v.new_sub_state, sst.astype(i32))
@@ -187,6 +222,43 @@ def _apply_window(
     sub_lel = s_.sub_lel + jnp.where(
         rd_td, jnp.maximum(v.time_rd - s_.sub_arrive, 0), 0
     )
+    # chained round completions / prepare-flush votes. Their (t, d) slots are
+    # disjoint from every pass-1 sub write above (one in-flight round per
+    # (t, d); a same-slot dispatch or release cannot share the window), so
+    # these are pure additional writers — except the prepare flush, which
+    # deliberately overwrites its own parent's PREP_CMD -> PREPARING write.
+    fu_fast = jnp.int32(0)
+    if act_fu is not None:
+        rd_g = act_fu & v.fu_rd  # [W,G]; at most one g per row
+        rd_w_g = rd_g & v.fu_rd_wr
+        rd_any_r = jnp.any(rd_g, axis=1)
+        rd_w_r = jnp.any(rd_w_g, axis=1)
+        rd_u_r = jnp.max(jnp.where(rd_g, v.fu_u, 0), axis=1)
+        rd_state_r = jnp.max(jnp.where(rd_w_g, v.fu_rd_state, 0), axis=1)
+        rd_time_r = jnp.max(jnp.where(rd_w_g, v.fu_rd_time, 0), axis=1)
+        sc_td = lambda val, m: jnp.max(
+            jnp.where(hit_ftd & m[:, None], val[:, None], 0), axis=0
+        ).reshape(T, D)
+        rd2_w = jnp.any(hit_ftd & rd_w_r[:, None], axis=0).reshape(T, D)
+        sub_state = jnp.where(rd2_w, sc_td(rd_state_r, rd_w_r), sub_state)
+        sub_time = jnp.where(rd2_w, sc_td(rd_time_r, rd_w_r), sub_time)
+        rd2_any = jnp.any(hit_ftd & rd_any_r[:, None], axis=0).reshape(T, D)
+        sub_lel = sub_lel + jnp.where(
+            rd2_any,
+            jnp.maximum(sc_td(rd_u_r, rd_any_r) - s_.sub_arrive, 0),
+            0,
+        )
+        fu_fast = jnp.sum(rd_w_g & (v.fu_rd_state == SUB_LOCAL_COMMIT), dtype=i32)
+    if act_pfu is not None:
+        ids_td2 = jnp.arange(T * D, dtype=i32)
+        pfu_idx = jnp.where(act_pfu, v.cand_t_sub * D + v.cand_d_sub, T * D)
+        hit_pfu = pfu_idx[:, None] == ids_td2[None, :]
+        pfu_m = jnp.any(hit_pfu, axis=0).reshape(T, D)
+        pfu_t = jnp.max(
+            jnp.where(hit_pfu, v.pfu_vote_t[:, None], 0), axis=0
+        ).reshape(T, D)
+        sub_state = jnp.where(pfu_m, SUB_VOTE, sub_state)
+        sub_time = jnp.where(pfu_m, pfu_t, sub_time)
     rd_done = s_.rd_done | (dm_mask & v.cat_prog)
 
     # ---- latency monitor: one exact EWMA application per in-window fan-in
@@ -296,7 +368,10 @@ def _apply_window(
         + jnp.sum(f_mask & (sst == SUB_COMMIT_CMD), dtype=i32)
         + jnp.sum(f_mask & (sst == SUB_ABORT_PEER) & ~s_.dyn.early_abort, dtype=i32)
     )
-    fast_inc = jnp.sum(sub_upd & (v.new_sub_state == SUB_LOCAL_COMMIT), dtype=i32)
+    fast_inc = (
+        jnp.sum(sub_upd & (v.new_sub_state == SUB_LOCAL_COMMIT), dtype=i32)
+        + fu_fast
+    )
 
     # ---- in-window heartbeat probes (satellite of the typed fault model):
     # mirrors `_hb_event` with now = the slot's scheduled time — count and
@@ -320,6 +395,7 @@ def _apply_window(
         windows=s_.windows + windows_inc,
         win_stops=s_.win_stops + stops_inc,
         fused=s_.fused + fused_inc,
+        chained=s_.chained + chained_inc,
         op_state=op_state,
         op_time=op_time,
         op_enq=op_enq,
@@ -409,6 +485,9 @@ def _drain_step(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
                 jnp.int32(1),
                 jax.nn.one_hot(v.stop_code, N_STOP_REASONS, dtype=jnp.int32),
                 act_hb=v.win_hb,
+                chained_inc=v.n_chained,
+                act_fu=v.fu_win,
+                act_pfu=v.pfu_win,
             )
 
         return jax.lax.cond(v.use, apply_fn, lambda s2: _step(cfg, bank, s2), s_)

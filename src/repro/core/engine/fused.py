@@ -210,6 +210,9 @@ def _omni_window(cfg: SimConfig, bank: Bank, s: SimState) -> SimState:
         xcommit=xcommit,
         xrel=(rel_gate_x, t, d_rel),
         act_hb=w(use, v.win_hb, False),
+        chained_inc=w(use, v.n_chained, 0),
+        act_fu=v.fu_win & use,
+        act_pfu=v.pfu_win & use,
     )
 
     # ======================================================================

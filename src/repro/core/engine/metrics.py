@@ -66,7 +66,9 @@ def drain_stats(state: SimState, horizon_us: int | None = None) -> dict:
     `loop_iters` is the actual `lax.while_loop` trip count: sequential events
     take one iteration each, a whole window takes one iteration.
     `window_stops` counts, per stop reason, why each applied window ended
-    (see `state.STOP_REASONS`); `plan_fused` reports whether any lane ran the
+    (see `state.STOP_REASONS`); `chained` counts the follow-up events the
+    two-pass plan admitted across the scheduling fence (each drained with its
+    sequential salt/timestamp); `plan_fused` reports whether any lane ran the
     fused plan+omnibus lockstep pass (`fused._omni_window`).
 
     Fault-injection fields: `availability` is the mean fraction of
@@ -120,6 +122,7 @@ def drain_stats(state: SimState, horizon_us: int | None = None) -> dict:
         "mean_window_len": round(drained / max(windows, 1), 2),
         "loop_iters": (events - drained) + windows,
         "window_stops": {r: int(c) for r, c in zip(STOP_REASONS, stops)},
+        "chained": int(np.sum(np.asarray(state.chained))),
         "plan_fused": bool(np.sum(np.asarray(state.fused)) > 0),
         "availability": round(avail, 6),
         "abort_causes": {r: int(c) for r, c in zip(ABORT_CAUSES, causes)},

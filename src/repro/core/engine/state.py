@@ -77,7 +77,10 @@ _SALT_MUL = jnp.int32(2654435761 % (2**31))
 #                 advance, chiller stage-2 re-dispatch, txn-completing ack,
 #                 release with a queued waiter
 #   scheduled     an in-window event schedules new work at or before the
-#                 window's timestamps (running-min rule)
+#                 window's timestamps (running-min rule) that the two-pass
+#                 chain admitter could NOT absorb — a genuine scheduling
+#                 fence (non-chainable follow-up kind, or a chainable one
+#                 that lands outside the candidate time range)
 #   lock_key      second touch of one lock key (arrival / chain target /
 #                 released footprint)
 #   dm_row        slot-accurate DM row rule: a fan-in preceded by a non-fan-in
@@ -95,6 +98,14 @@ _SALT_MUL = jnp.int32(2654435761 % (2**31))
 #                 probes are conflict-free and drain inside windows (their
 #                 re-arm time enters the running-min rule like any other
 #                 scheduled event)
+#   sched_chain   the stopper is a *chained follow-up* the two-pass plan
+#                 admitted into the window (a zero-RTT lock grant, exec-chain
+#                 completion or prepare flush scheduled by an earlier window
+#                 event) whose own follow-up could not also be admitted —
+#                 the pre-PR-10 plan would have stopped earlier, at the
+#                 scheduling fence, and counted `scheduled`. Together with
+#                 `SimState.chained` this splits the old `scheduled` row into
+#                 fence-stops (still `scheduled`) and chained-admits.
 STOP_REASONS = (
     "horizon",
     "nondrainable",
@@ -105,6 +116,7 @@ STOP_REASONS = (
     "rel_op",
     "cap",
     "fault",
+    "sched_chain",
 )
 N_STOP_REASONS = len(STOP_REASONS)
 
@@ -528,6 +540,10 @@ class SimState(NamedTuple):
     windows: jax.Array  # i32 — masked window applications (mean len = drained/windows)
     win_stops: jax.Array  # [N_STOP_REASONS] i32 — why each applied window ended
     fused: jax.Array  # i32 — fused plan+step lockstep iterations (`_omni_window`)
+    # follow-up events admitted across the scheduling fence by the two-pass
+    # window plan (each drained with the salt/timestamp it would have had
+    # sequentially); the drain-telemetry twin of the sched_chain stop row
+    chained: jax.Array  # i32
     slot_commits: jax.Array  # [T,N] i32
     slot_aborts: jax.Array  # [T,N] i32
     slot_lat: jax.Array  # [T,N] i32 (sum of commit latencies, ms)
@@ -652,6 +668,7 @@ def init_state(
         windows=i32(0),
         win_stops=jnp.zeros((N_STOP_REASONS,), i32),
         fused=i32(0),
+        chained=i32(0),
         # untracked: a 1-slot stub (size-0 axes reject traced indices at
         # trace time); mode="drop" discards every slot>0 write either way
         slot_commits=jnp.zeros((T, N if cfg.track_slots else 1), i32),

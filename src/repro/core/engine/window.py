@@ -37,6 +37,24 @@ Window stoppers (slot-accurate read/write sets — see docs/architecture.md):
   event can change) and drain inside windows like any other event — their
   re-arm time enters the running-min "scheduled" rule.
 
+Two-pass chain admission (PR 10): the running-min "scheduled" rule used to
+stop the window whenever an in-window event scheduled work inside the
+window's time range — which is exactly what every zero-RTT dispatch/exec
+chain does (a granted lock arrival schedules its own exec completion
+`exec_us` later; an exec completion chains the next queued statement; a
+prepare command schedules its WAL flush). The plan's second pass therefore
+*admits* those follow-ups as first-class window entities: for each op
+candidate it walks the statement queue up to `CHAIN_DEPTH` generations of
+virtual exec completions (each with the lock grant, timestamps and salted
+delays it would have had sequentially), and for each prepare-command
+candidate the PREPARING->VOTE flush. Candidates and follow-ups merge into
+one (time, flat-index, is-follow-up) rank order; every salted value is
+computed from the merged rank, so admitted windows stay bitwise-identical
+to sequential stepping. A follow-up whose own follow-up cannot be admitted
+stops the window with the `sched_chain` reason (the fence the pre-chaining
+plan would have hit earlier is still `scheduled`), and `SimState.chained`
+counts admitted follow-ups.
+
 Every windowed event keeps the iteration number (hash salt) and timestamp it
 would have had sequentially, so drained runs stay bitwise-identical to
 `drain=False` (asserted across presets, jitters, zero-RTT tie storms and
@@ -44,8 +62,6 @@ abort-heavy workloads for all four step modes).
 """
 
 from __future__ import annotations
-
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -59,8 +75,29 @@ from repro.core.protocols import (
 )
 from repro.core.workloads import Bank
 
+# the two-pass chain admitter (follow-up entities, merged ranks, effect
+# values, the shared entity-space prefix scan) and the plan output type live
+# in chain.py; `_PlanVals` and the STOP_* codes are re-exported here for the
+# applier / fused passes and tests.
+from repro.core.engine.chain import (
+    CHAIN_DEPTH,
+    STOP_CAP,
+    STOP_DM_COL,
+    STOP_DM_ROW,
+    STOP_FAULT,
+    STOP_HORIZON,
+    STOP_LOCK_KEY,
+    STOP_NONDRAINABLE,
+    STOP_REL_OP,
+    STOP_SCHED_CHAIN,
+    STOP_SCHEDULED,
+    _PlanVals,
+    chain_effects,
+    chain_entities,
+    entity_admission,
+    merged_ranks,
+)
 from repro.core.engine.state import (
-    N_STOP_REASONS,
     OP_NONE,
     OP_PENDING,
     OP_ENROUTE,
@@ -105,114 +142,15 @@ from repro.core.engine.state import (
 K_EWMA = 4
 
 # Window candidate budget: only the PLAN_CAP lex-smallest events can join one
-# window (longer windows split bitwise-identically across iterations — mean
-# windows run ~3 events, so the cap is headroom, not a constraint). Keeping
+# window (longer windows split bitwise-identically across iterations). Keeping
 # the candidate set small is what makes the lockstep plan cheap: ranks and
 # the running-min prefix cost O(PLAN_CAP * M) / O(PLAN_CAP^2) elementwise
 # work instead of the O(M^2) comparison matrices the pre-PR-5 plan paid per
 # iteration. Both rank routes cap identically so the drain telemetry stays
-# strategy-independent.
-PLAN_CAP = 8
-
-# stop-reason codes — indices into SimState.win_stops / state.STOP_REASONS
-(
-    STOP_HORIZON,
-    STOP_NONDRAINABLE,
-    STOP_SCHEDULED,
-    STOP_LOCK_KEY,
-    STOP_DM_ROW,
-    STOP_DM_COL,
-    STOP_REL_OP,
-    STOP_CAP,
-    STOP_FAULT,
-) = range(N_STOP_REASONS)
-
-
-class _PlanVals(NamedTuple):
-    """Everything the masked window pass (and the fused lockstep pass) needs:
-    per-event ranks/salts, pre-state categories, the per-event values each
-    drainable handler would compute sequentially, the per-fan-in decision
-    tensors, and the prefix outcome."""
-
-    # window candidates: the W lex-smallest events, rank order. The decoded
-    # coordinates are carried here so the applier's release pass reads the
-    # same decode the planner's waiter probe used (single source of truth).
-    cand_i: jax.Array  # [W] flat event indices
-    cand_is_sub: jax.Array  # [W] candidate is a subtxn slot
-    cand_t_sub: jax.Array  # [W] its terminal (0 when not a sub slot)
-    cand_d_sub: jax.Array  # [W] its DS column (0 when not a sub slot)
-    # ranks of the flat (time, index) order + per-event iteration numbers
-    pos_term: jax.Array  # [T]
-    pos_sub: jax.Array  # [T,D]
-    pos_op: jax.Array  # [T,K]
-    iters_term: jax.Array
-    iters_sub: jax.Array
-    iters_op: jax.Array
-    # pre-state event categories
-    cat_log: jax.Array
-    cat_sched: jax.Array
-    cat_prep: jax.Array
-    cat_preparing: jax.Array
-    cat_commit: jax.Array
-    cat_ack: jax.Array
-    cat_prog: jax.Array
-    dm_cat: jax.Array
-    f_cat: jax.Array
-    cat_arr: jax.Array
-    cat_exec: jax.Array
-    # op events: lock decisions + chained statements
-    ok: jax.Array  # [T,K] lock grant for an arrival at this slot
-    arr_state: jax.Array
-    arr_time: jax.Array
-    has_next: jax.Array
-    tgt3: jax.Array  # [T,K,K] source op chains to target op
-    ok_chain: jax.Array
-    chain_state: jax.Array
-    chain_time: jax.Array
-    # exec round completions
-    time_rd: jax.Array  # [T,D]
-    new_sub_state: jax.Array
-    new_sub_time: jax.Array
-    aborting_td: jax.Array
-    # DM dispatch + DS-side 2PC legs
-    arrival_td: jax.Array
-    eff_arrival_td: jax.Array  # [T,D] first-statement fire time (TIGA deadline)
-    fast_disp_td: jax.Array  # [T,D] TIGA in-slack flag at dispatch
-    has_c: jax.Array
-    first_c: jax.Array
-    prep_time: jax.Array
-    vote_t: jax.Array
-    # DM fan-ins, slot-accurate: per-fan-in decision tensors on the
-    # cumulative row view (pre-state + earlier in-window self-updates)
-    dm_self: jax.Array  # [T,D] the fan-in's own-slot state write
-    ready_chiller_j: jax.Array  # [T,D] (j = the fan-in's sub column)
-    advance_j: jax.Array
-    send_c_j: jax.Array
-    send_p_j: jax.Array
-    log_t_j: jax.Array
-    done_ack_j: jax.Array
-    done_abk_j: jax.Array
-    dt_commit3: jax.Array  # [T,D,D] (fan-in j commits to every DS d)
-    dt_prepare3: jax.Array
-    log_term_j: jax.Array  # [T,D]
-    # terminal commit-log flush broadcast times
-    dt_log: jax.Array  # [T,D]
-    # DS finish (commit apply / peer-abort release)
-    ack_t: jax.Array
-    rel_waiter_td: jax.Array
-    # prefix outcome
-    pinned_term: jax.Array
-    pinned_sub: jax.Array
-    pinned_op: jax.Array
-    win_term: jax.Array  # [T] window membership
-    win_sub: jax.Array  # [T,D]
-    win_op: jax.Array  # [T,K]
-    win_hb: jax.Array  # [D] in-window heartbeat probes (zeros when F == 0)
-    hb_fire: jax.Array  # [D] probe fires (target unreachable at its slot time)
-    n_win: jax.Array  # scalar: events in the maximal window
-    use: jax.Array  # scalar: window holds >= 2 events
-    t_last: jax.Array  # scalar: timestamp of the window's last event
-    stop_code: jax.Array  # scalar: STOP_* reason of the event that ended it
+# strategy-independent. Raised 8 -> 16 with the two-pass chain admitter:
+# once follow-ups stop tripping the scheduling fence, windows actually reach
+# the old cap (cap stops only matter once the fence falls, per ROADMAP).
+PLAN_CAP = 16
 
 
 def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
@@ -263,19 +201,24 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     # (map) route keeps the stable argsort. Ranks below W agree bitwise
     # between the two routes, and every window decision only consults those.
     W = min(PLAN_CAP, M)
+    maxi = jnp.int32(2**31 - 1)
+    ids_m = jnp.arange(M, dtype=i32)
     if cfg.lockstep:
-        idx_m = jnp.arange(M, dtype=i32)
         mflat = flat
         cand_is, cand_ts = [], []
         for _ in range(W):
             j = jnp.argmin(mflat).astype(i32)
             cand_is.append(j)
             cand_ts.append(flat[j])
-            mflat = jnp.where(idx_m == j, jnp.int32(2**31 - 1), mflat)
+            mflat = jnp.where(ids_m == j, maxi, mflat)
         cand_i = jnp.stack(cand_is)  # [W] flat indices, rank order
         cand_t = jnp.stack(cand_ts)
+        # time of the first NON-candidate slot: the chain admitter only
+        # trusts follow-up times strictly below it (nothing outside the
+        # candidate set can interleave an admitted follow-up)
+        t_w1 = jnp.min(mflat)
         lex_before = (cand_t[:, None] < flat[None, :]) | (
-            (cand_t[:, None] == flat[None, :]) & (cand_i[:, None] < idx_m[None, :])
+            (cand_t[:, None] == flat[None, :]) & (cand_i[:, None] < ids_m[None, :])
         )  # [W, M]: candidate i processed before slot e
         pos = jnp.sum(lex_before, axis=0, dtype=i32)
     else:
@@ -283,10 +226,12 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
         pos = jnp.zeros((M,), i32).at[order].set(jnp.arange(M, dtype=i32))
         cand_i = order[:W].astype(i32)
         cand_t = flat[cand_i]
+        t_w1 = flat[order[W]] if M > W else maxi
     # candidate coordinates (rank order). Every window decision — masks,
     # conflicts, n(e) consultation, the fused singleton — only ever reads
     # candidate slots, so per-slot tensors below may be garbage elsewhere.
     w_rank = jnp.arange(W, dtype=i32)
+    hit_all = cand_i[:, None] == ids_m[None, :]  # [W, M]
     is_sub_c = (cand_i >= T) & (cand_i < T + T * D)
     is_op_c = (cand_i >= T + T * D) & (cand_i < M0)
     sub_flat_c = jnp.clip(cand_i - T, 0, T * D - 1)
@@ -296,9 +241,9 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     pos_term = pos[:T]
     pos_sub = pos[T : T + T * D].reshape(T, D)
     pos_op = pos[T + T * D : M0].reshape(T, K)
-    iters_term = s.iters + 1 + pos_term
-    iters_sub = s.iters + 1 + pos_sub
-    iters_op = s.iters + 1 + pos_op
+    # NOTE: per-event iteration numbers (hash salts) are assigned AFTER the
+    # chain pass below — admitted follow-ups occupy merged ranks, shifting
+    # the sequential iteration number of every later candidate.
 
     # ---- per-slot event categories (what each slot would fire as) ---------
     cat_log = s.phase == T_COMMIT_LOG
@@ -360,24 +305,47 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     rd_cat = cat_exec & ~has_next  # round completes at (t, d_of)
 
     TK = T * K
+    NT = CHAIN_DEPTH + 1  # targets the chain walk may touch per candidate
     ids_tk = jnp.arange(TK, dtype=i32)
     t_op_c = op_flat_c // K
+    k_op_c = op_flat_c % K
+    d_op_c = d_of.reshape(-1)[op_flat_c]
+    # queue walk: the first NT queued same-DS same-round statements of each
+    # op candidate, in the exact argmax order the sequential chain handler
+    # consumes them (each virtual completion un-queues its target)
+    qrow = (
+        (row_q & same_round)[t_op_c]
+        & (d_of[t_op_c] == d_op_c[:, None])
+        & is_op_c[:, None]
+    )  # [W, K]
+    tgt_ks, tgt_exs = [], []
+    for _ in range(NT):
+        tgt_exs.append(jnp.any(qrow, axis=1))
+        tk_j = jnp.argmax(qrow, axis=1).astype(i32)
+        tgt_ks.append(tk_j)
+        qrow = qrow & (kk[None, :] != tk_j[:, None])
+    tgt_k = jnp.stack(tgt_ks, axis=1)  # [W, NT]
+    tgt_ex = jnp.stack(tgt_exs, axis=1)
     q_self = jnp.where(is_op_c, op_flat_c, TK)  # sentinel -> padded row
-    q_tgt = jnp.where(is_op_c, t_op_c * K + nxt.reshape(-1)[op_flat_c], TK)
+    q_tgts = jnp.where(
+        is_op_c[:, None] & tgt_ex, t_op_c[:, None] * K + tgt_k, TK
+    )  # [W, NT]
     fk_pad = jnp.concatenate([fk, jnp.full((1,), -3, fk.dtype)])
     fw_pad = jnp.concatenate([fw, jnp.zeros((1,), bool)])
-    qs = jnp.concatenate([q_self, q_tgt])  # [2W] queried op slots
+    qs = jnp.concatenate([q_self, q_tgts.T.reshape(-1)])  # [(1+NT)W]
     keys_q = fk_pad[qs]
-    m_q = keys_q[:, None] == fk[None, :]  # [2W, T*K]
+    m_q = keys_q[:, None] == fk[None, :]  # [(1+NT)W, T*K]
     x_held_q = jnp.any(m_q & (holder & fw)[None, :], axis=1)
     s_held_q = jnp.any(m_q & (holder & ~fw)[None, :], axis=1)
     wait_q = jnp.any(m_q & waiting[None, :], axis=1)
     ok_q = jnp.where(fw_pad[qs], ~x_held_q & ~s_held_q, ~x_held_q) & ~wait_q
+    ok_self_c = ok_q[:W]
+    ok_tgt = ok_q[W:].reshape(NT, W).T  # [W, NT] per-target grants
     # broadcast the candidate-correct grants back to slot shape (False
     # elsewhere — nothing beyond the candidates ever reads them)
     hit_op = q_self[:, None] == ids_tk[None, :]  # [W, T*K]
-    ok = jnp.any(hit_op & ok_q[:W, None], axis=0).reshape(T, K)
-    ok_chain = jnp.any(hit_op & ok_q[W:, None], axis=0).reshape(T, K)
+    ok = jnp.any(hit_op & ok_self_c[:, None], axis=0).reshape(T, K)
+    ok_chain = jnp.any(hit_op & ok_tgt[:, 0][:, None], axis=0).reshape(T, K)
 
     exec_t = evt_op + _exec_us(cfg, s, d_of)  # [T,K] per-event time basis
     to_t = _lock_wait_deadline(s.dyn, evt_op)
@@ -385,6 +353,35 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     arr_time = jnp.where(ok, exec_t, to_t)
     chain_state = jnp.where(ok_chain, OP_EXEC, OP_WAIT)  # at source slots
     chain_time = jnp.where(ok_chain, exec_t, to_t)  # source time + same-DS exec
+
+    # ---- second pass: chain entities across the scheduling fence (the
+    # follow-up queue walk, order guard and prepare-flush entities — see
+    # chain.chain_entities) --------------------------------------------------
+    G = CHAIN_DEPTH
+    c = chain_entities(
+        s.dyn, sst, exec_t, evt_op, cand_t, cand_i, t_w1,
+        is_op_c, is_sub_c, op_flat_c, sub_flat_c, t_op_c, k_op_c,
+        cat_arr, do_chain_cat, ok_self_c, ok_tgt, tgt_k, tgt_ex,
+        T, D, K,
+    )
+    # locals consulted by the dup-touch rules below
+    arr_c, chn_c, seed_ca, ca_m = c.arr_c, c.chn_c, c.seed_ca, c.ca_m
+    att_has, fu_valid = c.att_has, c.fu_valid
+
+    # ---- merged entity ranks: candidates + follow-ups in one (time, flat
+    # index, is-follow-up) order (chain.merged_ranks) ------------------------
+    r = merged_ranks(cand_t, cand_i, c, BIG, maxi)
+    mrank_pre, mrank_fu = r.mrank_pre, r.mrank_fu
+    # per-slot iteration numbers, shifted by the follow-ups sorted before
+    # each candidate (exact for every admitted candidate; rank 0 never
+    # shifts — a valid follow-up's ancestor candidate precedes it)
+    shift_c = mrank_pre - w_rank
+    shift_flat = jnp.sum(jnp.where(hit_all, shift_c[:, None], 0), axis=0)
+    iters_term = s.iters + 1 + pos_term + shift_flat[:T]
+    iters_sub = s.iters + 1 + pos_sub + shift_flat[T : T + T * D].reshape(T, D)
+    iters_op = s.iters + 1 + pos_op + shift_flat[T + T * D : M0].reshape(T, K)
+    iters_fu = s.iters + 1 + mrank_fu
+    iters_pfu = s.iters + 1 + r.mrank_pfu
 
     # round completions, per (t, d) — at most one in-flight op per (t, d)
     rd3 = oh_d & rd_cat[:, :, None]  # [T,K,D]
@@ -436,6 +433,13 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     vote_salt = iters_sub * _SALT_MUL + jnp.int32(43)
     vbase, vtau = link_td(evt_sub)
     vote_t = vbase + _delay_salted(s.jitter_milli, vtau, vote_salt)
+
+    # ---- chain-entity effect values (what each admitted follow-up writes,
+    # with the salt/timestamp it would have had sequentially) ----------------
+    eff = chain_effects(
+        s, F, c, t_op_c, d_op_c, t_sub_c, d_sub_c, iters_fu, iters_pfu,
+        is_final_td, aborting_td, centr_t, fast_t,
+    )
 
     # ---- DM-side fan-ins: slot-accurate read/write sets -------------------
     # A fan-in at (t, j) writes only its own slot (+ rd_done[t, j] and the
@@ -591,20 +595,41 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
     # reverse chain map: tgt3[t,k,j] <=> source op k chains to target op j
     # (gather-based — a scatter here would lower to a per-lane loop under vmap)
     tgt3 = do_chain_cat[:, :, None] & (kk[None, None, :] == nxt[:, :, None])
-    arr_c = is_op_c & cat_arr.reshape(-1)[op_flat_c]
-    chn_c = is_op_c & do_chain_cat.reshape(-1)[op_flat_c]
+    # touch list: W arrival self-keys + W*NT chain-walk target touches (each
+    # stamped with the merged rank of the entity attempting it) + W*K release
+    # footprints. CA seeds attempt target j via chain entity j+1; CX seeds
+    # attempt target 0 at the candidate itself and target j>=1 via entity j.
+    # A touch is listed whenever its entity exists and the target is real —
+    # denied attempts still create waiters later queries must see, so the
+    # toucher gate excludes the attempt's own grant bit.
+    tv = jnp.where(
+        ca_m,
+        jnp.concatenate([fu_valid & att_has, jnp.zeros((W, 1), bool)], axis=1),
+        jnp.concatenate([chn_c[:, None], fu_valid & att_has], axis=1),
+    )  # [W, NT] target-column touch validity
+    tr = jnp.where(
+        ca_m,
+        jnp.concatenate([mrank_fu, jnp.zeros((W, 1), i32)], axis=1),
+        jnp.concatenate([mrank_pre[:, None], mrank_fu], axis=1),
+    )  # [W, NT] merged rank of the toucher
     tkeys = jnp.concatenate(
-        [fk_pad[q_self], fk_pad[q_tgt], key_rel.reshape(-1)]
-    )  # [2W + W*K]
-    tvalid = jnp.concatenate([arr_c, chn_c, cancel_rel.reshape(-1)])
+        [fk_pad[q_self], fk_pad[q_tgts].T.reshape(-1), key_rel.reshape(-1)]
+    )  # [(1+NT)W + W*K]
+    tvalid = jnp.concatenate([arr_c, tv.T.reshape(-1), cancel_rel.reshape(-1)])
     tw = jnp.concatenate(
-        [w_rank, w_rank, jnp.broadcast_to(w_rank[:, None], (W, K)).reshape(-1)]
+        [
+            mrank_pre,
+            tr.T.reshape(-1),
+            jnp.broadcast_to(mrank_pre[:, None], (W, K)).reshape(-1),
+        ]
     )
     eq_t = (tkeys[:, None] == tkeys[None, :]) & tvalid[:, None] & tvalid[None, :]
     dup_t = jnp.any(eq_t & (tw[None, :] < tw[:, None]), axis=1)
     dup_arr_c = dup_t[:W] & arr_c
-    dup_chn_c = dup_t[W : 2 * W] & chn_c
-    dup_rel_c = jnp.any(dup_t[2 * W :].reshape(W, K) & cancel_rel, axis=1)
+    tg_dup = dup_t[W : W + NT * W].reshape(NT, W).T & tv  # [W, NT]
+    dup_chn_c = tg_dup[:, 0] & ~seed_ca  # pass-1 chain attempt (CX candidate)
+    fu_dup = jnp.where(ca_m, tg_dup[:, :G], tg_dup[:, 1:])  # [W, G] per entity
+    dup_rel_c = jnp.any(dup_t[W + NT * W :].reshape(W, K) & cancel_rel, axis=1)
     dup_arr = jnp.any(hit_op & dup_arr_c[:, None], axis=0).reshape(T, K)
     dup_chain = jnp.any(hit_op & dup_chn_c[:, None], axis=0).reshape(T, K)
     conf_key_sub = jnp.any(hit_sub_rel & dup_rel_c[:, None], axis=0).reshape(T, D)
@@ -732,40 +757,12 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
         idx_flat = jnp.arange(M, dtype=i32)
         fault_flat = (idx_flat >= M0) & (idx_flat < M0 + F)
         code = jnp.where((flat < horizon_i) & fault_flat, STOP_FAULT, code)
-    if cfg.lockstep:
-        # candidate-space equivalent of the cummin prefix: W-element gathers
-        # plus a [W, W] triangular running min — no scatters, no scans
-        n_cand = n_flat[cand_i]
-        conf_cand = conflict[cand_i]
-        code_cand = code[cand_i]
-        ii = jnp.arange(W, dtype=i32)
-        tri = ii[:, None] >= ii[None, :]
-        cmin = jnp.min(
-            jnp.where(tri, n_cand[None, :], jnp.int32(2**31 - 1)), axis=1
-        )
-        good = (cmin > cand_t) & (cand_t < horizon_i) & ~conf_cand
-        n_win = jnp.min(jnp.where(~good, ii, jnp.int32(W)))
-        t_last = jnp.max(jnp.where(ii < n_win, cand_t, 0))
-        stop_code = jnp.where(
-            n_win >= W,
-            jnp.int32(STOP_CAP),
-            jnp.sum(jnp.where(ii == n_win, code_cand, 0)),
-        ).astype(i32)
-    else:
-        time_sorted = flat[order]
-        cmin = jax.lax.cummin(n_flat[order])
-        good = (cmin > time_sorted) & (time_sorted < horizon_i) & ~conflict[order]
-        n_raw = jnp.where(jnp.all(good), BIG, jnp.argmax(~good).astype(i32))
-        n_win = jnp.minimum(n_raw, jnp.int32(W))
-        t_last = time_sorted[jnp.maximum(n_win - 1, 0)]
-        stop_code = jnp.where(
-            n_raw >= W, STOP_CAP, code[order][jnp.minimum(n_raw, BIG - 1)]
-        ).astype(i32)
-    win_term = pos_term < n_win
-    win_sub = pos_sub < n_win
-    win_op = pos_op < n_win
-    win_hb = (pos[M0 + F :] < n_win) if F else jnp.zeros((D,), bool)
-    use = n_win >= 2
+    # ---- shared entity-space prefix scan (both routes): admission over the
+    # merged [E, E] strict order (chain.entity_admission) --------------------
+    adm = entity_admission(
+        s.dyn, c, r, eff, conflict[cand_i], code[cand_i], n_flat[cand_i],
+        fu_dup, hit_all, horizon_i, maxi, T, D, K, M0, F,
+    )
 
     return _PlanVals(
         cand_i=cand_i,
@@ -822,16 +819,33 @@ def _window_plan(cfg: SimConfig, bank: Bank, s: SimState) -> _PlanVals:
         dt_log=dt_log,
         ack_t=ack_t,
         rel_waiter_td=rel_waiter_td,
+        fu_win=adm.fu_win,
+        fu_term=t_op_c,
+        fu_d=d_op_c,
+        fu_u=c.u,
+        fu_comp_k=c.comp_k,
+        fu_att_has=att_has,
+        fu_att_k=c.att_k,
+        fu_att_ok=c.att_ok_t,
+        fu_att_state=eff.att_state_fu,
+        fu_att_time=eff.att_time_fu,
+        fu_rd=eff.rd_fu,
+        fu_rd_wr=eff.rd_wr_fu,
+        fu_rd_state=eff.rd_state_fu,
+        fu_rd_time=eff.rd_time_fu,
+        pfu_win=adm.pfu_win,
+        pfu_vote_t=eff.vote2,
+        n_chained=adm.n_chained,
         pinned_term=pinned_term,
         pinned_sub=pinned_sub,
         pinned_op=pinned_op,
-        win_term=win_term,
-        win_sub=win_sub,
-        win_op=win_op,
-        win_hb=win_hb,
+        win_term=adm.win_term,
+        win_sub=adm.win_sub,
+        win_op=adm.win_op,
+        win_hb=adm.win_hb,
         hb_fire=hb_fire,
-        n_win=n_win,
-        use=use,
-        t_last=t_last,
-        stop_code=stop_code,
+        n_win=adm.n_win,
+        use=adm.use,
+        t_last=adm.t_last,
+        stop_code=adm.stop_code,
     )

@@ -286,13 +286,13 @@ class TestRunResult:
 class TestResume:
     @staticmethod
     def _neutral(s, ref):
-        # drained/windows/win_stops/fused are window-telemetry: a window cut
-        # at the first run's horizon may merge in the uninterrupted run;
-        # every other leaf must stay bitwise-identical (same convention as
-        # the drain tests)
+        # drained/windows/win_stops/fused/chained are window-telemetry: a
+        # window cut at the first run's horizon may merge in the
+        # uninterrupted run; every other leaf must stay bitwise-identical
+        # (same convention as the drain tests)
         return s._replace(
             drained=ref.drained, windows=ref.windows,
-            win_stops=ref.win_stops, fused=ref.fused,
+            win_stops=ref.win_stops, fused=ref.fused, chained=ref.chained,
         )
 
     @pytest.mark.slow

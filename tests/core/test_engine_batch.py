@@ -51,12 +51,12 @@ def _stepped(cfg, bank, s, n, drain):
 
 
 def _assert_state_bitwise(sa, sb):
-    # `drained`/`windows`/`win_stops`/`fused` are path telemetry; every other
-    # leaf (nested hs/dyn included) must match bitwise
+    # `drained`/`windows`/`win_stops`/`fused`/`chained` are path telemetry;
+    # every other leaf (nested hs/dyn included) must match bitwise
     fa = jax.tree_util.tree_flatten_with_path(
         sa._replace(
             drained=sb.drained, windows=sb.windows,
-            win_stops=sb.win_stops, fused=sb.fused,
+            win_stops=sb.win_stops, fused=sb.fused, chained=sb.chained,
         )
     )[0]
     fb = jax.tree_util.tree_flatten_with_path(sb)[0]
@@ -553,17 +553,24 @@ class TestWindowedDrain:
         seq = _stepped(cfg, bank, seq, 1, False)
         _assert_state_bitwise(drained, seq)
 
-    def test_window_stops_before_scheduling_event(self):
-        # the t=1000 arrival schedules its exec completion at t=51000; an
-        # arrival at t=60000 therefore cannot join the window
+    def test_chained_completion_absorbs_scheduling_fence(self):
+        # the t=1000 arrival schedules its exec completion at t=51000 —
+        # pre-PR-10 that fenced the window at 2 events. The two-pass plan
+        # admits the completion as a chained follow-up instead; the window
+        # still stops before the t=60000 arrival, because the admitted
+        # completion schedules its round reply (t=56000, DS-0 RTT) at or
+        # before it — the fence moved one generation down the chain.
         bank = self._bank2()
         cfg, s = self._arrival_state(
             keys=[7, 9, 11, 0], dss=[0, 1, 1, 0], times=[1000, 40_000, 60_000, None]
         )
         drained = _stepped(cfg, bank, s, 1, True)
-        assert int(drained.drained) == 2  # 1000 + 40000 batch; 60000 excluded
-        assert int(drained.now) == 40_000
+        assert int(drained.drained) == 3  # 1000 + 40000 + chained 51000
+        assert int(drained.chained) == 1
+        assert int(drained.windows) == 1
+        assert int(drained.now) == 51_000
         seq = _stepped(cfg, bank, s, 2, False)
+        seq = _stepped(cfg, bank, seq, 1, False)
         _assert_state_bitwise(drained, seq)
 
     @pytest.mark.slow
@@ -705,11 +712,12 @@ class TestSlotAccurateFanins:
         assert stops["dm_row"] == 1, stops
         _assert_state_bitwise(drained, seq)
 
-    def test_candidate_budget_splits_long_windows_bitwise(self):
-        # 12 independent non-completing acks (<= K_EWMA per DS column):
-        # the planner's candidate budget caps the first window at PLAN_CAP
-        # events (stop reason `cap`); the remainder drains on the next
-        # iteration, bitwise-identical to 12 sequential steps
+    def test_raised_candidate_budget_admits_all_fanins(self):
+        # 12 independent non-completing acks (<= K_EWMA per DS column) used
+        # to split at the PR-5 candidate budget (PLAN_CAP=8, stop reason
+        # `cap`); the chain-aware two-pass planner raised the budget to 16,
+        # so the whole batch now drains in ONE window — the >PLAN_CAP split
+        # guarantee lives on at the new budget in TestChainAwareBudget
         from repro.core.engine.window import PLAN_CAP
 
         bank = self._bank2()
@@ -722,15 +730,12 @@ class TestSlotAccurateFanins:
             far = ({0, 1, 2} - {d2 for t2, d2 in near if t2 == t}).pop()
             a = self._ack(s, a, t, far, 700_000 + t)
         s = self._pack(s, a)
-        assert len(near) > PLAN_CAP
+        assert len(near) <= PLAN_CAP
         drained = _stepped(cfg, bank, s, 1, True)
-        assert int(drained.drained) == PLAN_CAP
+        assert int(drained.drained) == len(near)
         assert int(drained.windows) == 1
         stops = engine.drain_stats(drained)["window_stops"]
-        assert stops["cap"] == 1, stops
-        drained = _stepped(cfg, bank, drained, 1, True)
-        assert int(drained.drained) == len(near)
-        assert int(drained.windows) == 2
+        assert stops["cap"] == 0, stops
         seq = s
         for n in (2, 2, 2, 2, 2, 2):
             seq = _stepped(cfg, bank, seq, n, False)
@@ -758,6 +763,103 @@ class TestSlotAccurateFanins:
         seq = s
         for n in (2, 2, 1):
             seq = _stepped(cfg, bank, seq, n, False)
+        _assert_state_bitwise(drained, seq)
+
+
+class TestChainAwareBudget:
+    """PR-10 tentpole regressions: the two-pass chained plan raised the
+    candidate budget (PLAN_CAP 8→16) and admits follow-ups scheduled across
+    the fence. The budget must still split over-long windows bitwise — the
+    split point moved, so the guard needs >16 simultaneous drainable events
+    — and zero-RTT follow-up chains longer than one window's chain depth
+    must split across window iterations bitwise-identically to sequential.
+    """
+
+    # 4 terminals x 5 near DS (+1 spare DS for the far ack that keeps each
+    # fan-in partial) = 20 drainable acks > PLAN_CAP, while every DS column
+    # stays within the K_EWMA=4 composed-monitor budget so only the
+    # candidate cap can stop the window
+    T3, K3, D3, N3 = 4, 2, 6, 4
+
+    def _cfg3(self, drain=True):
+        return engine.SimConfig(
+            terminals=self.T3, max_ops=self.K3, num_ds=self.D3,
+            bank_txns=self.N3, proto=protocol.PRESETS["ssp"], warmup_us=0,
+            horizon_us=10_000_000, drain=drain, track_slots=True,
+        )
+
+    def _bank3(self):
+        cfg_w = workloads.YCSBConfig(
+            num_ds=self.D3, records_per_node=64, ops_per_txn=self.K3,
+            dist_ratio=0.5, theta=0.5, seed=0,
+        )
+        return workloads.make_ycsb_bank(
+            cfg_w, terminals=self.T3, txns_per_terminal=self.N3
+        )
+
+    def test_candidate_budget_splits_past_plan_cap_bitwise(self):
+        # 20 independent non-completing acks: the planner caps the first
+        # window at PLAN_CAP events (stop reason `cap`); the remainder
+        # drains on the next iteration, bitwise-identical to 20 sequential
+        # steps — the direct successor of the PR-5 split test at the raised
+        # budget
+        from repro.core.engine.window import PLAN_CAP
+
+        bank = self._bank3()
+        cfg = self._cfg3()
+        net = make_net_params((10.0, 30.0, 60.0, 80.0, 100.0, 120.0))
+        s = engine.init_state(cfg, net.tau_dm, net.tau_ds, jitter_milli=0)
+        s = s._replace(term_time=jnp.full((self.T3,), engine.INF_US, jnp.int32))
+        inv = np.zeros((self.T3, self.D3), bool)
+        sub_state = np.zeros((self.T3, self.D3), np.int8)
+        sub_time = np.full((self.T3, self.D3), engine.INF_US, np.int32)
+        phase = np.zeros((self.T3,), np.int8)
+        near = [(t, d) for t in range(self.T3) for d in range(self.D3 - 1)]
+        assert len(near) > PLAN_CAP
+        for i, (t, d) in enumerate(near):
+            inv[t, d] = True
+            sub_state[t, d] = engine.SUB_ACK
+            sub_time[t, d] = 1000 + 100 * i
+            phase[t] = engine.T_COMMIT_WAIT
+        for t in range(self.T3):  # far ack keeps every fan-in partial
+            inv[t, self.D3 - 1] = True
+            sub_state[t, self.D3 - 1] = engine.SUB_ACK
+            sub_time[t, self.D3 - 1] = 700_000 + t
+        s = s._replace(
+            inv=jnp.asarray(inv), sub_state=jnp.asarray(sub_state),
+            sub_time=jnp.asarray(sub_time), phase=jnp.asarray(phase),
+        )
+        drained = _stepped(cfg, bank, s, 1, True)
+        assert int(drained.drained) == PLAN_CAP
+        assert int(drained.windows) == 1
+        stops = engine.drain_stats(drained)["window_stops"]
+        assert stops["cap"] == 1, stops
+        drained = _stepped(cfg, bank, drained, 1, True)
+        assert int(drained.drained) == len(near)
+        assert int(drained.windows) == 2
+        seq = s
+        for n in (4, 4, 4, 4, 4):
+            seq = _stepped(cfg, bank, seq, n, False)
+        _assert_state_bitwise(drained, seq)
+
+    def test_zero_rtt_chain_splits_across_windows_bitwise(self):
+        # zero-RTT, zero-jitter world: handlers schedule follow-ups at the
+        # CURRENT timestamp, so the two-pass plan admits them across the
+        # fence (`chained` > 0) up to the per-window chain depth; longer
+        # chains split onto the next window iteration (stop reason
+        # `sched_chain`), and the whole run stays bitwise-identical to the
+        # sequential event loop
+        bank = _bank()
+        base = _cfg("ssp", horizon_s=1.0)
+        w = engine.make_world("ssp", (0.0, 0.0), jitter_milli=0)
+        drained = jax.block_until_ready(engine._sim_world_fresh(
+            dataclasses.replace(base, drain=True), bank, w))
+        seq = jax.block_until_ready(engine._sim_world_fresh(
+            dataclasses.replace(base, drain=False), bank, w))
+        stats = engine.drain_stats(drained, horizon_us=base.horizon_us)
+        assert stats["chained"] > 0, stats
+        assert stats["window_stops"]["sched_chain"] > 0, stats
+        assert stats["windows"] > 1  # long chains really did split
         _assert_state_bitwise(drained, seq)
 
 

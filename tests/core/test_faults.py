@@ -87,12 +87,13 @@ def _fingerprint(st, m):
 
 
 def _assert_state_bitwise(sa, sb):
-    # `drained`/`windows`/`win_stops`/`fused` are path telemetry; every other
-    # leaf (nested hs/dyn and the fault leaves included) must match bitwise
+    # `drained`/`windows`/`win_stops`/`fused`/`chained` are path telemetry;
+    # every other leaf (nested hs/dyn and the fault leaves included) must
+    # match bitwise
     fa = jax.tree_util.tree_flatten_with_path(
         sa._replace(
             drained=sb.drained, windows=sb.windows,
-            win_stops=sb.win_stops, fused=sb.fused,
+            win_stops=sb.win_stops, fused=sb.fused, chained=sb.chained,
         )
     )[0]
     fb = jax.tree_util.tree_flatten_with_path(sb)[0]

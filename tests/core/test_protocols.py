@@ -73,13 +73,14 @@ def _run_all_modes(preset, bank, *, clock_skew_us=0, jitter=100,
 
 
 def _assert_modes_bitwise(outs):
-    # `drained`/`windows`/`win_stops`/`fused` are path telemetry; every other
-    # leaf — wan_legs / fast_commits / sub_fast included — must match bitwise
+    # `drained`/`windows`/`win_stops`/`fused`/`chained` are path telemetry;
+    # every other leaf — wan_legs / fast_commits / sub_fast included — must
+    # match bitwise
     ref = outs["step"]
     for mode in ("drain", "omni", "fused"):
         s = outs[mode]._replace(
             drained=ref.drained, windows=ref.windows,
-            win_stops=ref.win_stops, fused=ref.fused,
+            win_stops=ref.win_stops, fused=ref.fused, chained=ref.chained,
         )
         fa = jax.tree_util.tree_flatten_with_path(s)[0]
         fb = jax.tree_util.tree_flatten_with_path(ref)[0]
